@@ -1,0 +1,31 @@
+"""Shared helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+OUT = ROOT / "experiments" / "bench"
+
+
+def emit(name: str, value, derived: str = "") -> None:
+    """CSV row `name,value,derived` (the contract benchmarks/run.py prints)."""
+    print(f"{name},{value},{derived}")
+
+
+def save_json(name: str, payload) -> pathlib.Path:
+    OUT.mkdir(parents=True, exist_ok=True)
+    p = OUT / f"{name}.json"
+    p.write_text(json.dumps(payload, indent=2))
+    return p
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.time() - self.t0

@@ -1,0 +1,83 @@
+"""Paper Fig. 4: SNR of the dual variable nu and primal coefficients y vs
+diffusion iteration, against the centralized optimum (the step-size tuning
+methodology of Sec. IV-A).
+
+Emits `fig4/<...>` CSV rows and experiments/bench/fig4_convergence.json.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.core import topology as topo
+from repro.core.conjugates import make_task
+from repro.core.dictionary import blocks_from_full, init_dictionary
+from repro.core.inference import (
+    DiffusionConfig,
+    diffusion_infer,
+    fista_infer,
+    recover_y,
+    safe_diffusion_mu,
+    snr_db,
+)
+
+
+def run(n_agents: int = 16, m: int = 64, record_every: int = 10000, iters: int = 200000):
+    """Runs the convergence curve for BOTH residuals.
+
+    Reproduction finding (documented in EXPERIMENTS.md): with the l2
+    residual both nu and y enter the paper's 40-50 dB band; with the Huber
+    residual y converges first (the paper's own observation) and nu
+    plateaus near ~20 dB at practical budgets — the ||nu||_inf <= 1
+    boundary coordinates keep rattling under the combine-then-project
+    iteration (Eq. 35b).  The centralized references are self-consistent to
+    ~100 dB, so the plateau is a property of the projected gossip, not of
+    the reference.
+    """
+    key = jax.random.PRNGKey(0)
+    out = {}
+    for task in ("nmf", "nmf_huber"):
+        res, reg = make_task(task, gamma=0.05, delta=0.1, eta=0.2)
+        W = init_dictionary(key, m, n_agents, nonneg=True)  # 1 atom/agent (paper)
+        Wb = blocks_from_full(W, n_agents)
+        x = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (m,)))
+        x = x / jnp.linalg.norm(x)
+
+        A = jnp.asarray(topo.make_topology("erdos", n_agents, p=0.5, seed=0), jnp.float32)
+        mu = 0.01 * safe_diffusion_mu(res, reg, Wb)
+
+        # centralized reference (CVX stand-in): accelerated dual ascent
+        nu_ref = fista_infer(res, reg, W, x, iters=5000)
+        y_ref = recover_y(reg, W, nu_ref)
+
+        _, _, traj = diffusion_infer(
+            res, reg, Wb, x, A, jnp.ones((n_agents,), jnp.float32),
+            DiffusionConfig(iters=iters), record_every=record_every, mu=mu,
+        )
+        rows = []
+        for i in range(traj.shape[0]):
+            nu_i = traj[i][0]  # agent 0's estimate
+            y_i = recover_y(reg, W, nu_i)
+            rows.append({
+                "iteration": (i + 1) * record_every,
+                "snr_nu_db": float(snr_db(nu_ref, nu_i)),
+                "snr_y_db": float(snr_db(y_ref, y_i)),
+            })
+        out[task] = rows
+        label = "l2" if task == "nmf" else "huber"
+        for r in rows[:: max(len(rows) // 5, 1)]:
+            emit(f"fig4/{label}/iter{r['iteration']}/snr_nu_db", f"{r['snr_nu_db']:.2f}")
+            emit(f"fig4/{label}/iter{r['iteration']}/snr_y_db", f"{r['snr_y_db']:.2f}")
+        emit(f"fig4/{label}/final_snr_nu_db", f"{rows[-1]['snr_nu_db']:.2f}",
+             "paper band 40-50 (l2 reaches it; huber boundary plateau — see EXPERIMENTS)")
+        emit(f"fig4/{label}/final_snr_y_db", f"{rows[-1]['snr_y_db']:.2f}",
+             "paper: y leads nu")
+    save_json("fig4_convergence", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,96 @@
+"""Paper Fig. 5: image denoising PSNR — centralized [6] (Mairal) vs the
+distributed learner with (a) all agents informed and (b) a single informed
+agent.  Synthetic piecewise-smooth images stand in for van Hateren (offline
+container; see DESIGN.md §8) so the VALIDATED CLAIM is the ordering/parity,
+not the absolute 21.9x dB numbers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.core.baselines import MairalConfig, MairalLearner
+from repro.core.denoise import denoise_image, psnr
+from repro.core.learner import DictionaryLearner, LearnerConfig
+from repro.data import synthetic as ds
+
+
+def run(patch: int = 6, n_patches: int = 6000, img_size: int = 48, sigma: float = 0.15):
+    m = patch * patch
+    k = 2 * m  # 2x-overcomplete, like the paper's 100x196
+    imgs = ds.synthetic_images(24, img_size, seed=0)
+    patches = jnp.asarray(ds.patch_dataset(imgs, patch=patch, n_patches=n_patches, seed=1))
+
+    clean = jnp.asarray(ds.synthetic_images(1, img_size, seed=123)[0])
+    noisy = jnp.asarray(ds.noisy_version(np.asarray(clean)[None], sigma, seed=7)[0])
+    p_noisy = float(psnr(clean, noisy))
+
+    results = {"noisy_psnr_db": p_noisy}
+    # gamma=0.2, delta=0.05: sparse enough that reconstruction depends on the
+    # atoms (at the paper's relative gamma, ~45/255); weaker gammas let the
+    # elastic-net shrinkage alone do the denoising and the dictionary barely
+    # matters (recorded via the untrained anchor below).
+    GAMMA, DELTA, MU_W, EPOCHS = 0.2, 0.05, 0.5, 4
+
+    def dist_learner(informed: str) -> float:
+        # mu_scale=0.3: below the stability bound so the O(mu^2) bias keeps
+        # nu clean enough for dictionary updates (paper Sec. IV-A trade-off)
+        cfg = LearnerConfig(
+            m=m, k=k, n_agents=k // 6, task="sparse_svd", gamma=GAMMA, delta=DELTA,
+            mu=-1.0, inference_iters=600, engine="diffusion", topology="erdos",
+            informed=informed, mu_w=MU_W, seed=0, mu_scale=0.3,
+        )
+        learner = DictionaryLearner(cfg)
+        state = learner.init_state()
+        if informed == "all":
+            results["untrained_psnr_db"] = float(
+                psnr(clean, denoise_image(learner, state, noisy, patch=patch, stride=2))
+            )
+        import dataclasses as _dc
+        import jax as _jax
+        for ep in range(EPOCHS):
+            # 1/sqrt(s) decay, the paper's mu_w(s) = 10/s spirit
+            learner.cfg = _dc.replace(cfg, mu_w=MU_W / (1 + ep) ** 0.5)
+            learner._fit = _jax.jit(learner._fit_batch)
+            state, _ = learner.fit(state, patches, batch_size=32)
+        return float(psnr(clean, denoise_image(learner, state, noisy, patch=patch, stride=2)))
+
+    results["dist_all_informed_psnr_db"] = dist_learner("all")
+    results["dist_one_informed_psnr_db"] = dist_learner("one")
+
+    # centralized baseline [6]
+    reg = DictionaryLearner(LearnerConfig(m=m, k=k, n_agents=1, engine="exact",
+                                          gamma=GAMMA, delta=DELTA)).reg
+    central = MairalLearner(MairalConfig(m=m, k=k, gamma=GAMMA, delta=DELTA, seed=0), reg)
+    mst = central.init_state()
+    for _ in range(EPOCHS):
+        mst, _ = central.fit(mst, patches, batch_size=32)
+    eval_cfg = LearnerConfig(m=m, k=k, n_agents=1, task="sparse_svd", gamma=GAMMA,
+                             delta=DELTA, inference_iters=300, engine="fista")
+    ev = DictionaryLearner(eval_cfg)
+    est = ev.init_state()
+    est = est._replace(W_blocks=mst.W[None])
+    results["centralized_mairal_psnr_db"] = float(
+        psnr(clean, denoise_image(ev, est, noisy, patch=patch, stride=2))
+    )
+
+    for k_, v in results.items():
+        emit(f"fig5/{k_}", f"{v:.2f}")
+    gain_all = results["dist_all_informed_psnr_db"] - p_noisy
+    gain_one = results["dist_one_informed_psnr_db"] - p_noisy
+    emit("fig5/dist_gain_all_db", f"{gain_all:.2f}", "paper: ~7.9 dB over noisy")
+    emit("fig5/dist_gain_one_db", f"{gain_one:.2f}", "paper: single agent matches")
+    emit(
+        "fig5/dist_vs_centralized_db",
+        f"{results['dist_all_informed_psnr_db'] - results['centralized_mairal_psnr_db']:.2f}",
+        "paper: +0.2 dB (21.98 vs 21.77)",
+    )
+    save_json("fig5_denoise", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,101 @@
+"""Aggregate the dry-run JSONs into the §Roofline table (per arch x shape x
+mesh: three roofline terms, dominant bottleneck, MODEL_FLOPS ratio) and emit
+both CSV rows and a markdown table for EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import ROOT, emit, save_json
+
+DRYRUN = ROOT / "experiments" / "dryrun"
+
+
+def load_cells(mesh_dir: str):
+    cells = []
+    d = DRYRUN / mesh_dir
+    if not d.exists():
+        return cells
+    for f in sorted(d.glob("*.json")):
+        cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def _next_move(c) -> str:
+    """One sentence: what would move this cell's dominant term down."""
+    r = c["roofline_seconds"]
+    dom = r["dominant"]
+    top = c.get("top_collectives") or []
+    if dom == "collective":
+        if top:
+            t = top[0]
+            return (f"attack the top wire op ({t['kind']} {t['shape'][:36]}…, "
+                    f"{t['bytes']/1e9:.0f} GB): reshard, quantize, or overlap it")
+        return "reshard/quantize the dominant collective"
+    if dom == "memory":
+        kind = c.get("kind")
+        if kind == "decode":
+            return "weight reads per token dominate: batch more requests or quantize weights"
+        ur = c.get("model_flops", {}).get("useful_ratio") or 0
+        if ur and ur < 0.5:
+            return ("recompute/dispatch overhead dominates: relax the remat policy "
+                    "(save attention/FFN outputs) or fuse the hot loop into a kernel")
+        return "remat re-reads dominate: selective-save remat policy or kernel fusion"
+    return "MXU-bound: raise per-chip batch or improve kernel tiling"
+
+
+def markdown_table(cells) -> str:
+    lines = [
+        "| arch | shape | t_compute (s) | t_memory (s) | t_coll (s) | dominant | "
+        "useful ratio | peak GB/dev | what would move the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c["status"] == "skip":
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | — | — | — | skip: {c['reason'][:48]} | — | — | — |"
+            )
+            continue
+        if c["status"] != "ok":
+            lines.append(f"| {c['arch']} | {c['shape']} | ERROR | | | | | | |")
+            continue
+        r = c["roofline_seconds"]
+        mf = c.get("model_flops", {})
+        ur = mf.get("useful_ratio")
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {r['compute']:.3e} | {r['memory']:.3e} | "
+            f"{r['collective']:.3e} | {r['dominant']} | "
+            f"{(f'{ur:.3f}' if ur else '—')} | "
+            f"{c['per_device']['peak_memory_bytes'] / 1e9:.2f} | {_next_move(c)} |"
+        )
+    return "\n".join(lines)
+
+
+def run():
+    summary = {}
+    for mesh_dir in ("pod16x16", "pod2x16x16"):
+        cells = load_cells(mesh_dir)
+        ok = [c for c in cells if c["status"] == "ok"]
+        skip = [c for c in cells if c["status"] == "skip"]
+        err = [c for c in cells if c["status"] == "error"]
+        emit(f"roofline/{mesh_dir}/cells_ok", len(ok))
+        emit(f"roofline/{mesh_dir}/cells_skip", len(skip), "documented skips")
+        emit(f"roofline/{mesh_dir}/cells_error", len(err), "MUST be 0")
+        dom = {}
+        for c in ok:
+            dom[c["roofline_seconds"]["dominant"]] = dom.get(c["roofline_seconds"]["dominant"], 0) + 1
+        for k, v in sorted(dom.items()):
+            emit(f"roofline/{mesh_dir}/dominant_{k}", v)
+        table = markdown_table(cells)
+        out = ROOT / "experiments" / f"roofline_{mesh_dir}.md"
+        out.write_text(table + "\n")
+        summary[mesh_dir] = {
+            "ok": len(ok), "skip": len(skip), "error": len(err), "dominant": dom,
+        }
+    save_json("roofline_summary", summary)
+    return summary
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure plus
+the roofline aggregation and the beyond-paper engineering tables.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig4,fig5,...]
+
+Prints `name,value,derived` CSV rows; details land in experiments/bench/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+ALL = ["fig4", "fig5", "table3", "table4", "kernel", "gossip", "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None,
+                    help=f"comma list from {ALL}")
+    args = ap.parse_args()
+    which = args.only.split(",") if args.only else ALL
+
+    print("name,value,derived")
+    failures = []
+    for name in which:
+        t0 = time.time()
+        try:
+            if name == "fig4":
+                from benchmarks import fig4_convergence as b
+            elif name == "fig5":
+                from benchmarks import fig5_denoise as b
+            elif name == "table3":
+                from benchmarks import table3_auc as b
+            elif name == "table4":
+                from benchmarks import table4_auc_huber as b
+            elif name == "kernel":
+                from benchmarks import kernel_fusion as b
+            elif name == "gossip":
+                from benchmarks import gossip_modes as b
+            elif name == "roofline":
+                from benchmarks import roofline as b
+            else:
+                raise KeyError(name)
+            b.run()
+            print(f"{name}/elapsed_s,{time.time() - t0:.1f},")
+        except Exception as e:  # report and continue; fail at the end
+            failures.append(name)
+            traceback.print_exc(file=sys.stderr)
+            print(f"{name}/FAILED,1,{type(e).__name__}")
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

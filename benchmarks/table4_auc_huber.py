@@ -1,0 +1,37 @@
+"""Paper Table IV: novel-document detection with the HUBER residual (the
+projected dual iteration onto ||nu||_inf <= 1).  Same protocol as Table III;
+compares Huber vs l2 residuals and fully-connected vs distributed gossip.
+The paper's claim: Huber >= l2 under heavy-tailed/corrupted data, and
+distributed ~= fully connected."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from benchmarks.table3_auc import run as run_l2
+
+
+def run():
+    # corrupt the stream with sparse spikes inside table3's generator? The
+    # cleanest faithful comparison: run the identical protocol with the Huber
+    # task (paper Alg. 4) and report side by side with the l2 task.
+    huber = run_l2(task="nmf_huber", bench_name="table4_huber")
+    l2 = run_l2(task="nmf", bench_name="table4_l2ref")
+    summary = {}
+    for variant in ("diffusion_fc", "diffusion_dist"):
+        h_mean = float(np.mean(list(huber[variant].values())))
+        l_mean = float(np.mean(list(l2[variant].values())))
+        summary[variant] = {"huber": h_mean, "l2": l_mean}
+        emit(f"table4/{variant}/huber_mean_auc", f"{h_mean:.3f}",
+             "paper: Huber competitive-or-better")
+        emit(f"table4/{variant}/l2_mean_auc", f"{l_mean:.3f}")
+    # distributed ~ fully-connected (paper: within ~0.01)
+    gap = abs(summary["diffusion_fc"]["huber"] - summary["diffusion_dist"]["huber"])
+    emit("table4/fc_vs_dist_gap", f"{gap:.3f}", "paper: ~0.01")
+    save_json("table4_auc_huber", summary)
+    return summary
+
+
+if __name__ == "__main__":
+    run()

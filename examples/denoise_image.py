@@ -1,0 +1,43 @@
+"""Image denoising via model-distributed dictionary learning (paper Sec.
+IV-B, Alg. 2): train on clean-scene patches, denoise a corrupted image, and
+compare the single-informed-agent network against all-informed.
+
+  PYTHONPATH=src python examples/denoise_image.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.denoise import denoise_image, psnr
+from repro.core.learner import DictionaryLearner, LearnerConfig
+from repro.data import synthetic as ds
+
+
+def main():
+    patch, img_size, sigma = 6, 48, 0.15
+    m = patch * patch
+
+    print("generating synthetic natural-scene stand-ins (offline container)...")
+    imgs = ds.synthetic_images(24, img_size, seed=0)
+    patches = jnp.asarray(ds.patch_dataset(imgs, patch=patch, n_patches=5000, seed=1))
+
+    clean = jnp.asarray(ds.synthetic_images(1, img_size, seed=123)[0])
+    noisy = jnp.asarray(ds.noisy_version(np.asarray(clean)[None], sigma, seed=7)[0])
+    print(f"noisy PSNR: {float(psnr(clean, noisy)):.2f} dB")
+
+    for informed in ("all", "one"):
+        cfg = LearnerConfig(
+            m=m, k=2 * m, n_agents=12, task="sparse_svd", gamma=0.08, delta=0.1,
+            mu=-1.0, inference_iters=300, engine="diffusion", topology="erdos",
+            informed=informed, mu_w=0.1, seed=0,
+        )
+        learner = DictionaryLearner(cfg)
+        state = learner.init_state()
+        state, _ = learner.fit(state, patches, batch_size=32)
+        den = denoise_image(learner, state, noisy, patch=patch, stride=2)
+        print(f"informed={informed:4s}: denoised PSNR {float(psnr(clean, den)):.2f} dB "
+              f"(paper: single-informed matches all-informed)")
+
+
+if __name__ == "__main__":
+    main()

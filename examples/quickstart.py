@@ -1,0 +1,61 @@
+"""Quickstart: learn a distributed dictionary on synthetic sparse data with
+the paper's Algorithm 1 and verify the dual inference against the
+centralized solver.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.inference import fista_infer, recover_y, snr_db
+from repro.core.learner import DictionaryLearner, LearnerConfig
+
+
+def main():
+    # -- planted sparse data -------------------------------------------------
+    rng = np.random.default_rng(0)
+    m, k_true, n = 24, 32, 2048
+    W0 = rng.normal(size=(m, k_true)).astype(np.float32)
+    W0 /= np.linalg.norm(W0, axis=0, keepdims=True)
+    Y = np.zeros((n, k_true), np.float32)
+    for i in range(n):
+        idx = rng.choice(k_true, 3, replace=False)
+        Y[i, idx] = rng.uniform(0.5, 1.5, 3) * rng.choice([-1, 1], 3)
+    X = jnp.asarray(Y @ W0.T + 0.01 * rng.normal(size=(n, m)).astype(np.float32))
+
+    # -- the paper's Algorithm 1: 16 agents, 3 atoms each -------------------
+    cfg = LearnerConfig(
+        m=m, k=48, n_agents=16, task="sparse_svd", gamma=0.25, delta=0.05,
+        mu=-1.0,              # curvature-adaptive safe step (beyond-paper)
+        inference_iters=200,
+        engine="fista",       # accelerated dual engine; try "diffusion" too
+        topology="erdos", mu_w=0.5, seed=0,
+    )
+    learner = DictionaryLearner(cfg)
+    state = learner.init_state()
+
+    print(f"dictionary {m}x{cfg.k} over {cfg.n_agents} agents "
+          f"({cfg.atoms_per_agent} atoms each)")
+    for epoch in range(10):
+        state, metrics = learner.fit(state, X, batch_size=32)
+        print(f"epoch {epoch}: primal {float(metrics.primal_obj):.4f} "
+              f"residual {float(metrics.residual_norm):.4f} "
+              f"sparsity {float(metrics.sparsity):.2f}")
+
+    # -- recovery quality -----------------------------------------------------
+    W = np.asarray(learner.dictionary(state))
+    cos = np.abs(W0.T @ W)
+    print(f"planted atoms recovered (|cos|>0.9): {(cos.max(axis=1) > 0.9).mean():.0%}")
+
+    # -- dual inference == centralized primal solve (strong duality) ---------
+    x = X[:4]
+    nu = fista_infer(learner.res, learner.reg, learner.dictionary(state), x, iters=400)
+    y = recover_y(learner.reg, learner.dictionary(state), nu)
+    resid = x - y @ learner.dictionary(state).T
+    print(f"Eq. 53 check  nu == residual:  SNR {float(snr_db(resid, nu)):.1f} dB")
+
+
+if __name__ == "__main__":
+    main()

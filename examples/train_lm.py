@@ -1,0 +1,76 @@
+"""End-to-end LM training driver: train a ~100M-parameter OLMo-family model
+for a few hundred steps on the synthetic Markov token stream with the full
+production stack — sharded train step, checkpointing, fault-tolerant runner.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  PYTHONPATH=src python examples/train_lm.py --steps 300 --mesh 2x4
+
+On one CPU this takes a few minutes; the loss should fall from ~ln(V)=9.2
+toward the stream's conditional entropy ~ln(32)=3.5.
+"""
+
+import argparse
+import dataclasses
+import tempfile
+
+from repro.configs.base import ArchConfig
+from repro.data.synthetic import TokenStream
+from repro.launch.mesh import make_mesh
+from repro.optim import adamw
+from repro.optim.schedules import cosine_warmup
+from repro.runtime.runner import RunnerConfig, TrainRunner
+
+# ~100M-param dense decoder. Vocab is deliberately small: the synthetic
+# stream is a random Markov table, so beating the unigram floor is pure
+# memorization — 1024x8 transitions are learned decisively within a few
+# hundred steps, which is what the example is for (exercising the full
+# sharded/fault-tolerant stack with a REAL learning curve).
+LM_100M = ArchConfig(
+    name="lm-100m", family="dense", n_layers=12, d_model=832, n_heads=13,
+    n_kv_heads=13, d_ff=3328, vocab=1024, act="swiglu",
+    compute_dtype="float32", attn_block=256,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--mesh", type=str, default="1x1")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+
+    cfg = LM_100M
+    n = cfg.param_counts()["total"]
+    print(f"model: {cfg.name} ({n/1e6:.0f}M params), mesh {args.mesh}, "
+          f"{args.batch}x{args.seq} tokens/step")
+
+    d, m = (int(x) for x in args.mesh.split("x"))
+    mesh = make_mesh((d, m), ("data", "model"))
+    # wd=0 — weight decay on the tied embedding fights bigram memorization,
+    # which is exactly what this synthetic stream rewards
+    opt = adamw(cosine_warmup(args.lr, warmup=30, total=args.steps), weight_decay=0.0)
+    runner = TrainRunner(
+        cfg, mesh, opt,
+        RunnerConfig(ckpt_dir=tempfile.mkdtemp(prefix="lm100m_"), ckpt_every=100),
+    )
+
+    stream = TokenStream(cfg.vocab, seed=0, branching=8)
+
+    def batches(step):
+        return {"tokens": next(stream.batches(args.batch, args.seq, 1, host_index=step))}
+
+    def log(step, metrics):
+        print(f"step {step:4d}  loss {metrics['loss']:.4f}")
+
+    state, history = runner.run(batches, args.steps, metrics_cb=log)
+    first = history[0]["loss"]
+    last = sum(h["loss"] for h in history[-10:]) / 10
+    print(f"\nloss {first:.3f} -> {last:.3f} "
+          f"(stream entropy floor ~2.08; random ~6.93)")
+    assert last < first - 1.0, "training did not learn"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Architecture registry: --arch <id> resolves here.
+
+Each module defines CONFIG (full assigned config, exercised only via the
+dry-run) and SMOKE (a reduced same-family config for CPU tests).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES, cell_supported, input_specs
+
+ARCH_IDS: List[str] = [
+    "zamba2_1p2b",
+    "qwen3_32b",
+    "olmo_1b",
+    "granite_8b",
+    "gemma_2b",
+    "phi3_vision_4p2b",
+    "kimi_k2_1t_a32b",
+    "granite_moe_1b_a400m",
+    "xlstm_1p3b",
+    "hubert_xlarge",
+]
+
+# CLI aliases (the assignment's dashed ids).
+ALIASES: Dict[str, str] = {
+    "zamba2-1.2b": "zamba2_1p2b",
+    "qwen3-32b": "qwen3_32b",
+    "olmo-1b": "olmo_1b",
+    "granite-8b": "granite_8b",
+    "gemma-2b": "gemma_2b",
+    "phi-3-vision-4.2b": "phi3_vision_4p2b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "xlstm-1.3b": "xlstm_1p3b",
+    "hubert-xlarge": "hubert_xlarge",
+}
+
+
+def get_config(arch: str) -> ArchConfig:
+    arch = ALIASES.get(arch, arch)
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ArchConfig:
+    arch = ALIASES.get(arch, arch)
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.SMOKE
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,165 @@
+"""Centralized baselines the paper compares against.
+
+1. `fista_coder` — primal FISTA sparse coding on the *full* dictionary with
+   elastic-net / nonneg-elastic-net regularizers (the role SPAMS/LARS plays
+   in the paper's experiments, reimplemented in JAX since the container is
+   offline).  Also serves as the independent oracle for the dual engines:
+   by strong duality the primal FISTA objective and the dual value must
+   coincide at the optimum, giving tests a cross-check that does not share
+   code with the dual path.
+
+2. `MairalLearner` — Mairal et al. (2010) online dictionary learning with
+   the (A_t, B_t) sufficient-statistic accumulators and block-coordinate
+   dictionary updates; this is the "[6] centralized" column of the paper's
+   Fig. 5 / Table III.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conjugates import (
+    Regularizer,
+    Residual,
+    soft_threshold,
+    soft_threshold_pos,
+)
+from repro.core.dictionary import init_dictionary, project_nonneg_unit_cols, project_unit_cols
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Primal FISTA (elastic net; l2 residual)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("reg", "iters"))
+def fista_coder(reg: Regularizer, W: Array, x: Array, iters: int = 200) -> Array:
+    """argmin_y 0.5||x - W y||^2 + gamma|y|_1(+) + delta/2 ||y||^2 via FISTA.
+
+    The smooth part is 0.5||x - Wy||^2 + delta/2||y||^2 with Lipschitz
+    constant sigma_max(W)^2 + delta; the prox of gamma|.|_1 is the soft
+    threshold (one-sided for the nonneg variant).
+    """
+    thresh = soft_threshold_pos if reg.nonneg else soft_threshold
+
+    # Power iteration for sigma_max(W)^2.
+    v = jnp.full((W.shape[1],), 1.0 / jnp.sqrt(W.shape[1]), W.dtype)
+
+    def pit(v, _):
+        u = W @ v
+        v = W.T @ u
+        return v / (jnp.linalg.norm(v) + 1e-30), jnp.linalg.norm(v)
+
+    _, sig = jax.lax.scan(pit, v, None, length=30)
+    L = sig[-1] + reg.delta
+    t0 = 1.0
+
+    y0 = jnp.zeros(x.shape[:-1] + (W.shape[1],), x.dtype)
+
+    def smooth_grad(y):
+        r = y @ W.T - x
+        return r @ W + reg.delta * y
+
+    def step(carry, _):
+        y, z, t = carry
+        y_next = thresh(z - smooth_grad(z) / L, reg.gamma / L)
+        t_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        z_next = y_next + ((t - 1.0) / t_next) * (y_next - y)
+        return (y_next, z_next, t_next), None
+
+    (y, _, _), _ = jax.lax.scan(step, (y0, y0, t0), None, length=iters)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Mairal et al. (2010) online dictionary learning
+# ---------------------------------------------------------------------------
+
+
+class MairalState(NamedTuple):
+    W: Array  # (M, K)
+    A: Array  # (K, K) sum y y^T
+    B: Array  # (M, K) sum x y^T
+    t: Array  # sample counter
+
+
+@dataclasses.dataclass(frozen=True)
+class MairalConfig:
+    m: int
+    k: int
+    gamma: float = 0.1
+    delta: float = 0.1
+    nonneg: bool = False
+    code_iters: int = 200
+    dict_bcd_iters: int = 2
+    seed: int = 0
+
+
+class MairalLearner:
+    """Centralized online dictionary learning (the paper's benchmark [6])."""
+
+    def __init__(self, cfg: MairalConfig, reg: Regularizer):
+        self.cfg = cfg
+        self.reg = reg
+        self._fit = jax.jit(self._fit_batch)
+
+    def init_state(self, key=None) -> MairalState:
+        key = jax.random.PRNGKey(self.cfg.seed) if key is None else key
+        W = init_dictionary(key, self.cfg.m, self.cfg.k, nonneg=self.cfg.nonneg)
+        return MairalState(
+            W=W,
+            A=jnp.zeros((self.cfg.k, self.cfg.k)),
+            B=jnp.zeros((self.cfg.m, self.cfg.k)),
+            t=jnp.zeros((), jnp.int32),
+        )
+
+    def _dict_bcd(self, W: Array, A: Array, B: Array) -> Array:
+        """Block-coordinate dictionary update (Mairal Alg. 2)."""
+        diag = jnp.diagonal(A)
+        proj_col = (
+            (lambda c: jnp.maximum(c, 0.0) / jnp.maximum(jnp.linalg.norm(jnp.maximum(c, 0.0)), 1.0))
+            if self.cfg.nonneg
+            else (lambda c: c / jnp.maximum(jnp.linalg.norm(c), 1.0))
+        )
+
+        def one_pass(W, _):
+            def col_update(j, W):
+                a_jj = jnp.maximum(diag[j], 1e-8)
+                u = (B[:, j] - W @ A[:, j]) / a_jj + W[:, j]
+                return W.at[:, j].set(proj_col(u))
+
+            W = jax.lax.fori_loop(0, self.cfg.k, col_update, W)
+            return W, None
+
+        W, _ = jax.lax.scan(one_pass, W, None, length=self.cfg.dict_bcd_iters)
+        return W
+
+    def _fit_batch(self, state: MairalState, x: Array) -> Tuple[MairalState, Array]:
+        y = fista_coder(self.reg, state.W, x, iters=self.cfg.code_iters)
+        bsz = x.shape[0]
+        A = state.A + y.T @ y / bsz
+        B = state.B + x.T @ y / bsz
+        W = self._dict_bcd(state.W, A, B)
+        obj = jnp.mean(
+            0.5 * jnp.sum((x - y @ W.T) ** 2, axis=-1)
+            + self.reg.gamma * jnp.sum(jnp.abs(y), axis=-1)
+            + 0.5 * self.reg.delta * jnp.sum(y * y, axis=-1)
+        )
+        return MairalState(W=W, A=A, B=B, t=state.t + 1), obj
+
+    def fit_batch(self, state: MairalState, x: Array):
+        return self._fit(state, x)
+
+    def fit(self, state: MairalState, X: Array, batch_size: int = 4):
+        n = (X.shape[0] // batch_size) * batch_size
+        obj = None
+        for xb in X[:n].reshape(-1, batch_size, X.shape[1]):
+            state, obj = self.fit_batch(state, xb)
+        return state, obj

@@ -1,0 +1,98 @@
+"""Dictionary update step (paper Eq. 40/51) and constraint-set projections.
+
+The update is fully local per agent: given the optimal dual nu and the local
+coefficients y_k, agent k computes
+
+    W_k <- Pi_{W_k}{ prox_{mu_w h_{W_k}}( W_k + mu_w * nu y_k^T ) }
+
+with the gradient minibatch-averaged over the sample batch (paper footnote 4).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conjugates import soft_threshold
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Projections onto W_k (paper Eqs. 45, 47)
+# ---------------------------------------------------------------------------
+
+
+def project_unit_cols(W: Array) -> Array:
+    """Project each column onto the unit l2 ball (Eq. 45)."""
+    norms = jnp.linalg.norm(W, axis=0, keepdims=True)
+    return W / jnp.maximum(norms, 1.0)
+
+
+def project_nonneg_unit_cols(W: Array) -> Array:
+    """Clip negatives then project columns onto the unit l2 ball (Eq. 47)."""
+    return project_unit_cols(jnp.maximum(W, 0.0))
+
+
+def make_projection(nonneg: bool) -> Callable[[Array], Array]:
+    return project_nonneg_unit_cols if nonneg else project_unit_cols
+
+
+def make_prox(h_w: str, mu_w: float, beta: float = 0.0) -> Callable[[Array], Array]:
+    """prox of mu_w * h_W: identity for h_W = 0, entrywise soft threshold for
+    the bi-clustering penalty beta*||W||_1 (Eq. 42-43)."""
+    if h_w in (None, "none", "zero"):
+        return lambda W: W
+    if h_w == "l1":
+        return lambda W: soft_threshold(W, mu_w * beta)
+    raise KeyError(f"unknown h_W {h_w!r}")
+
+
+# ---------------------------------------------------------------------------
+# The update itself
+# ---------------------------------------------------------------------------
+
+
+def dict_update(
+    W_k: Array,  # (M, Kb)
+    nu: Array,  # (B, M) optimal dual (this agent's estimate)
+    y_k: Array,  # (B, Kb) recovered local coefficients
+    mu_w: float,
+    *,
+    nonneg: bool = False,
+    prox: Optional[Callable[[Array], Array]] = None,
+) -> Array:
+    """One proximal-projected SGD step on the local atom block (Eq. 51)."""
+    grad = nu.T @ y_k / nu.shape[0]  # minibatch-averaged nu y^T, (M, Kb)
+    W_new = W_k + mu_w * grad
+    if prox is not None:
+        W_new = prox(W_new)
+    return make_projection(nonneg)(W_new)
+
+
+def init_dictionary(
+    key: jax.Array, m: int, k: int, *, nonneg: bool = False, dtype=jnp.float32
+) -> Array:
+    """Random unit-norm (optionally nonneg) dictionary, as in the paper."""
+    W = jax.random.normal(key, (m, k), dtype)
+    if nonneg:
+        W = jnp.abs(W)
+    norms = jnp.linalg.norm(W, axis=0, keepdims=True)
+    return W / jnp.maximum(norms, 1e-12)
+
+
+def blocks_from_full(W: Array, n_agents: int) -> Array:
+    """Split (M, K) column-wise into (N, M, Kb); K must divide evenly."""
+    m, k = W.shape
+    if k % n_agents:
+        raise ValueError(f"K={k} not divisible by N={n_agents}")
+    kb = k // n_agents
+    return jnp.moveaxis(W.reshape(m, n_agents, kb), 1, 0)
+
+
+def full_from_blocks(W_blocks: Array) -> Array:
+    """Inverse of blocks_from_full."""
+    n, m, kb = W_blocks.shape
+    return jnp.moveaxis(W_blocks, 0, 1).reshape(m, n * kb)

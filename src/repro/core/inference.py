@@ -1,0 +1,274 @@
+"""Dual-domain inference engines (sparse coding) for distributed dictionaries.
+
+Three engines, all solving the dual problem (paper Eq. 28):
+
+    min_nu  f*(nu) - nu^T x + sum_k h_k*(W_k^T nu),   s.t. nu in V_f
+
+1. `diffusion_infer` — the paper-faithful engine (Alg. 1 inference step):
+   N agents, each holding an atom block W_k, run adapt-then-combine (ATC)
+   diffusion (Eq. 31/35/36) under an arbitrary doubly-stochastic combiner A.
+   Implemented as a vmap over agents + scan over iterations; this is the
+   single-host *reference* used by tests and the convergence benchmark.
+   The multi-device production engine lives in core/distributed.py and
+   computes the same iterates with `shard_map` + `ppermute`.
+
+2. `exact_infer` — centralized (projected) gradient descent on the dual;
+   equals fully-connected diffusion (A = 11^T/N) with exact averaging.
+
+3. `fista_infer` — beyond-paper: Nesterov-accelerated dual ascent.  The dual
+   cost is differentiable + strongly convex with Lipschitz gradients by
+   construction (paper Sec. III-D), so acceleration gives the sqrt(kappa)
+   geometric rate; used to cut inference iterations ~10x at equal accuracy.
+
+Shapes: x is (..., M) with arbitrary batch dims; nu matches x; W is (M, K);
+W_blocks is (N, M, Kb) (equal-size atom blocks, padded if needed).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conjugates import Regularizer, Residual
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Per-agent local dual gradient (paper Eq. 29/58/62/70 in one formula)
+# ---------------------------------------------------------------------------
+
+
+def agent_grad(
+    res: Residual,
+    reg: Regularizer,
+    W_k: Array,  # (M, Kb)
+    nu: Array,  # (..., M)
+    x: Array,  # (..., M)
+    theta: Array,  # scalar: 1 if agent is informed else 0
+    n_agents: int,
+    n_informed: Array,
+) -> Array:
+    """grad_nu J_k(nu; x) = -theta*x/|N_I| + grad f*(nu)/N + W_k ystar(W_k^T nu)."""
+    y_k = reg.ystar(nu @ W_k)  # (..., Kb)
+    return (
+        -(theta / n_informed) * x
+        + res.grad_fstar(nu) / n_agents
+        + y_k @ W_k.T
+    )
+
+
+def full_dual_grad(res: Residual, reg: Regularizer, W: Array, nu: Array, x: Array) -> Array:
+    """Gradient of the *summed* dual cost on the full dictionary."""
+    return res.grad_fstar(nu) - x + reg.ystar(nu @ W) @ W.T
+
+
+def recover_y(reg: Regularizer, W: Array, nu: Array) -> Array:
+    """Closed-form primal recovery y* = ystar(W^T nu) (Eq. 37, Table II)."""
+    return reg.ystar(nu @ W)
+
+
+# ---------------------------------------------------------------------------
+# Diffusion (paper-faithful reference engine)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DiffusionConfig:
+    mu: float = 0.5
+    iters: int = 300
+    mode: str = "projection"  # "projection" (Eq. 35) | "penalty" (Eq. 36)
+    penalty_rho: float = 10.0
+
+
+@functools.partial(
+    jax.jit, static_argnames=("res", "reg", "cfg", "record_every")
+)
+def diffusion_infer(
+    res: Residual,
+    reg: Regularizer,
+    W_blocks: Array,  # (N, M, Kb)
+    x: Array,  # (..., M)
+    A: Array,  # (N, N) doubly stochastic, A[l, k] = a_{lk}
+    informed: Array,  # (N,) 0/1 mask of N_I
+    cfg: DiffusionConfig = DiffusionConfig(),
+    nu0: Optional[Array] = None,  # (N, ..., M)
+    record_every: int = 0,
+    mu: Optional[Array] = None,  # overrides cfg.mu (may be traced)
+) -> Tuple[Array, Array, Optional[Array]]:
+    """Run ATC diffusion; returns (nu_agents (N,...,M), y_agents (N,...,Kb), traj).
+
+    Every agent carries its own estimate nu_k; the combine step mixes the
+    intermediate psi_l over the neighborhood via A.  With `record_every > 0`
+    also returns the stacked nu trajectory every that-many iterations (used
+    by the Fig.-4 convergence benchmark).  `mu` may be passed as a traced
+    scalar (e.g. the curvature-adaptive step from `safe_diffusion_mu`).
+    """
+    n_agents = W_blocks.shape[0]
+    n_informed = jnp.maximum(informed.sum(), 1.0).astype(x.dtype)
+    if mu is None:
+        mu = jnp.asarray(cfg.mu, x.dtype)
+    if nu0 is None:
+        nu0 = jnp.zeros((n_agents,) + x.shape, x.dtype)
+
+    grad_all = jax.vmap(
+        lambda W_k, nu_k, theta: agent_grad(
+            res, reg, W_k, nu_k, x, theta, n_agents, n_informed
+        )
+    )
+
+    def combine(psi: Array) -> Array:
+        # nu_k = sum_l a_{lk} psi_l  -> contract over the agent axis of psi.
+        return jnp.tensordot(A.T.astype(psi.dtype), psi, axes=1)
+
+    def step(nu, _):
+        g = grad_all(W_blocks, nu, informed.astype(x.dtype))
+        if cfg.mode == "penalty" and res.bounded_dual:
+            zeta = nu - mu * g
+            pen_grad = cfg.penalty_rho * (zeta - res.project_dual(zeta))
+            psi = zeta - mu * pen_grad
+            nu_next = combine(psi)
+        else:
+            psi = nu - mu * g
+            nu_next = combine(psi)
+            if res.bounded_dual:
+                nu_next = res.project_dual(nu_next)
+        return nu_next, None
+
+    if record_every and record_every > 0:
+        n_outer = cfg.iters // record_every
+
+        def outer(nu, _):
+            nu, _ = jax.lax.scan(step, nu, None, length=record_every)
+            return nu, nu
+
+        nu, traj = jax.lax.scan(outer, nu0, None, length=n_outer)
+    else:
+        nu, _ = jax.lax.scan(step, nu0, None, length=cfg.iters)
+        traj = None
+
+    y = jax.vmap(lambda W_k, nu_k: reg.ystar(nu_k @ W_k))(W_blocks, nu)
+    return nu, y, traj
+
+
+# ---------------------------------------------------------------------------
+# Centralized dual solvers (baseline + beyond-paper accelerated)
+# ---------------------------------------------------------------------------
+
+
+def estimate_dual_curvature(
+    res: Residual, reg: Regularizer, W: Array, power_iters: int = 20
+) -> Tuple[Array, Array]:
+    """(L, m) bounds for the dual cost: Hessian = c_f I + W D W^T / delta,
+    with D a 0/1 active-set diagonal => m >= c_f, L <= c_f + sigma_max(W)^2/delta.
+    sigma_max is estimated by power iteration (deterministic start)."""
+    c_f = res.grad_fstar(jnp.ones((1,), W.dtype))[0]  # 1 for l2, eta for huber
+    v = jnp.full((W.shape[1],), 1.0 / jnp.sqrt(W.shape[1]), W.dtype)
+
+    def it(v, _):
+        u = W @ v
+        v = W.T @ u
+        return v / (jnp.linalg.norm(v) + 1e-30), jnp.linalg.norm(v)
+
+    v, sigmas = jax.lax.scan(it, v, None, length=power_iters)
+    sig2 = sigmas[-1]
+    return c_f + sig2 / reg.delta, c_f
+
+
+def safe_diffusion_mu(
+    res: Residual,
+    reg: Regularizer,
+    W_blocks: Array,  # (N, M, Kb)
+    safety: float = 0.9,
+) -> Array:
+    """Curvature-adaptive diffusion step size (beyond-paper convenience).
+
+    The paper tunes mu by hand against a CVX reference (Sec. IV-A).  Here we
+    bound the per-agent dual Hessian:  Hess J_k = (c_f/N) I + W_k D W_k^T /
+    delta  with D a 0/1 diagonal, so  L_k <= c_f/N + sigma_max(W_k)^2/delta.
+    Any mu < 2/max_k L_k keeps every local map non-expansive; combined with a
+    doubly-stochastic A the diffusion iterates stay bounded, and mu = safety /
+    max_k L_k converges for every task in Table I without hand tuning.
+    """
+    c_f = res.grad_fstar(jnp.ones((1,), W_blocks.dtype))[0]
+    n = W_blocks.shape[0]
+
+    def sig2_one(Wk):  # power iteration for sigma_max(W_k)^2
+        v = jnp.full((Wk.shape[1],), 1.0 / jnp.sqrt(Wk.shape[1]), Wk.dtype)
+
+        def it(v, _):
+            u = Wk @ v
+            v = Wk.T @ u
+            nv = jnp.linalg.norm(v)
+            return v / (nv + 1e-30), nv
+
+        _, sigs = jax.lax.scan(it, v, None, length=20)
+        return sigs[-1]
+
+    l_max = c_f / n + jnp.max(jax.vmap(sig2_one)(W_blocks)) / reg.delta
+    return safety / l_max
+
+
+@functools.partial(jax.jit, static_argnames=("res", "reg", "iters"))
+def exact_infer(
+    res: Residual,
+    reg: Regularizer,
+    W: Array,
+    x: Array,
+    mu: float = None,
+    iters: int = 500,
+) -> Array:
+    """Projected gradient descent on the full dual (fully-connected limit)."""
+    L, _ = estimate_dual_curvature(res, reg, W)
+    step_size = (1.0 / L) if mu is None else mu
+
+    def step(nu, _):
+        nu = nu - step_size * full_dual_grad(res, reg, W, nu, x)
+        return res.project_dual(nu), None
+
+    nu, _ = jax.lax.scan(step, jnp.zeros_like(x), None, length=iters)
+    return nu
+
+
+@functools.partial(jax.jit, static_argnames=("res", "reg", "iters"))
+def fista_infer(
+    res: Residual,
+    reg: Regularizer,
+    W: Array,
+    x: Array,
+    iters: int = 100,
+) -> Array:
+    """Nesterov-accelerated projected gradient on the dual (beyond-paper).
+
+    Uses the strongly-convex momentum beta = (sqrt(L)-sqrt(m))/(sqrt(L)+sqrt(m)).
+    """
+    L, m = estimate_dual_curvature(res, reg, W)
+    beta = (jnp.sqrt(L) - jnp.sqrt(m)) / (jnp.sqrt(L) + jnp.sqrt(m))
+
+    def step(carry, _):
+        nu, nu_prev = carry
+        z = nu + beta * (nu - nu_prev)
+        z = z - (1.0 / L) * full_dual_grad(res, reg, W, z, x)
+        z = res.project_dual(z)
+        return (z, nu), None
+
+    (nu, _), _ = jax.lax.scan(
+        step, (jnp.zeros_like(x), jnp.zeros_like(x)), None, length=iters
+    )
+    return nu
+
+
+# ---------------------------------------------------------------------------
+# Diagnostics
+# ---------------------------------------------------------------------------
+
+
+def snr_db(ref: Array, est: Array) -> Array:
+    """10 log10(||ref||^2 / ||ref - est||^2), the paper's Fig.-4 metric."""
+    num = jnp.sum(ref * ref)
+    den = jnp.sum((ref - est) ** 2) + 1e-30
+    return 10.0 * jnp.log10(num / den + 1e-30)

@@ -1,0 +1,231 @@
+"""DictionaryLearner — the paper's Algorithm 1 (and its specializations 2-4)
+as a composable, jit-compiled module.
+
+A learner owns:
+  * the task (residual f + regularizer h, from Table I),
+  * the agent topology (doubly-stochastic combiner A),
+  * the inference engine (diffusion / exact / fista),
+  * the dictionary-update hyperparameters.
+
+`fit_batch` performs: dual inference for a minibatch -> per-agent primal
+recovery -> local prox-projected dictionary step.  State is a pytree so the
+whole step jits and can be checkpointed by repro.checkpoint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topology as topo
+from repro.core.conjugates import make_task, primal_objective, dual_function
+from repro.core.dictionary import (
+    blocks_from_full,
+    dict_update,
+    full_from_blocks,
+    init_dictionary,
+    make_prox,
+)
+from repro.core.inference import (
+    DiffusionConfig,
+    diffusion_infer,
+    exact_infer,
+    fista_infer,
+    recover_y,
+    safe_diffusion_mu,
+)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class LearnerConfig:
+    """Hyperparameters for distributed dictionary learning."""
+
+    m: int  # data dimension
+    k: int  # number of atoms (global)
+    n_agents: int  # network size; k % n_agents == 0
+    task: str = "sparse_svd"  # Table-I row
+    gamma: float = 0.1
+    delta: float = 0.1
+    eta: float = 0.2  # Huber knee
+    mu: float = 0.5  # inference step size
+    inference_iters: int = 300
+    inference_mode: str = "projection"  # projection | penalty
+    engine: str = "diffusion"  # diffusion | exact | fista
+    mu_w: float = 5e-2  # dictionary step size
+    topology: str = "erdos"  # ring | ring_metropolis | torus | erdos | full
+    topology_p: float = 0.5
+    mu_scale: float = 1.0  # x safe step when mu <= 0 (smaller => lower bias)
+    informed: str = "all"  # "all" | "one" — the paper's two N_I setups
+    h_w: str = "none"  # "none" | "l1" (bi-clustering)
+    beta: float = 0.0  # l1 strength on W
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.k % self.n_agents:
+            raise ValueError(f"k={self.k} must divide over n_agents={self.n_agents}")
+
+    @property
+    def atoms_per_agent(self) -> int:
+        return self.k // self.n_agents
+
+
+class LearnerState(NamedTuple):
+    W_blocks: Array  # (N, M, Kb)
+    step: Array  # int32 scalar
+    A: Array  # (N, N) combiner (constant, kept in state for checkpointing)
+    informed: Array  # (N,) 0/1 mask
+
+
+class StepMetrics(NamedTuple):
+    primal_obj: Array
+    dual_obj: Array
+    residual_norm: Array
+    sparsity: Array  # fraction of nonzero coefficients
+
+
+class DictionaryLearner:
+    """Paper Algorithm 1 with pluggable engine/topology/task."""
+
+    def __init__(self, cfg: LearnerConfig):
+        self.cfg = cfg
+        self.res, self.reg = make_task(cfg.task, cfg.gamma, cfg.delta, cfg.eta)
+        self._prox = make_prox(cfg.h_w, cfg.mu_w, cfg.beta) if cfg.h_w != "none" else None
+        self._fit = jax.jit(self._fit_batch)
+        self._infer = jax.jit(self._infer_consensus)
+
+    # -- state ------------------------------------------------------------
+
+    def init_state(self, key: Optional[jax.Array] = None) -> LearnerState:
+        cfg = self.cfg
+        key = jax.random.PRNGKey(cfg.seed) if key is None else key
+        W = init_dictionary(key, cfg.m, cfg.k, nonneg=self.reg.nonneg)
+        A = jnp.asarray(
+            topo.make_topology(cfg.topology, cfg.n_agents, p=cfg.topology_p, seed=cfg.seed),
+            jnp.float32,
+        )
+        informed = (
+            jnp.ones((cfg.n_agents,), jnp.float32)
+            if cfg.informed == "all"
+            else jnp.zeros((cfg.n_agents,), jnp.float32).at[0].set(1.0)
+        )
+        return LearnerState(
+            W_blocks=blocks_from_full(W, cfg.n_agents),
+            step=jnp.zeros((), jnp.int32),
+            A=A,
+            informed=informed,
+        )
+
+    def dictionary(self, state: LearnerState) -> Array:
+        return full_from_blocks(state.W_blocks)
+
+    # -- inference --------------------------------------------------------
+
+    def _infer_consensus(self, state: LearnerState, x: Array) -> Tuple[Array, Array]:
+        """Return (nu_agents (N,...,M), y_agents (N,...,Kb)) for a batch x."""
+        cfg = self.cfg
+        if cfg.engine == "diffusion":
+            # cfg.mu <= 0 requests the curvature-adaptive safe step size.
+            mu = (
+                cfg.mu_scale * safe_diffusion_mu(self.res, self.reg, state.W_blocks)
+                if cfg.mu <= 0
+                else jnp.asarray(cfg.mu, x.dtype)
+            )
+            nu, y, _ = diffusion_infer(
+                self.res,
+                self.reg,
+                state.W_blocks,
+                x,
+                state.A,
+                state.informed,
+                DiffusionConfig(mu=cfg.mu, iters=cfg.inference_iters, mode=cfg.inference_mode),
+                mu=mu,
+            )
+            return nu, y
+        # Centralized engines: every agent shares the exact nu.
+        W = full_from_blocks(state.W_blocks)
+        if cfg.engine == "exact":
+            nu = exact_infer(self.res, self.reg, W, x, iters=cfg.inference_iters)
+        elif cfg.engine == "fista":
+            nu = fista_infer(self.res, self.reg, W, x, iters=cfg.inference_iters)
+        else:
+            raise KeyError(f"unknown engine {cfg.engine!r}")
+        nu_agents = jnp.broadcast_to(nu, (cfg.n_agents,) + nu.shape)
+        y = jax.vmap(lambda W_k, nu_k: self.reg.ystar(nu_k @ W_k))(state.W_blocks, nu_agents)
+        return nu_agents, y
+
+    def infer(self, state: LearnerState, x: Array) -> Tuple[Array, Array]:
+        return self._infer(state, x)
+
+    def code(self, state: LearnerState, x: Array) -> Array:
+        """Full coefficient vector y (concatenated over agents) for batch x."""
+        W = full_from_blocks(state.W_blocks)
+        if self.cfg.engine == "fista":
+            nu = fista_infer(self.res, self.reg, W, x, iters=self.cfg.inference_iters)
+        else:
+            nu = exact_infer(self.res, self.reg, W, x, iters=self.cfg.inference_iters)
+        return recover_y(self.reg, W, nu)
+
+    # -- learning ---------------------------------------------------------
+
+    def _fit_batch(self, state: LearnerState, x: Array) -> Tuple[LearnerState, StepMetrics]:
+        cfg = self.cfg
+        nu_agents, y_agents = self._infer_consensus(state, x)
+
+        mu_w = cfg.mu_w
+
+        def update_one(W_k, nu_k, y_k):
+            return dict_update(
+                W_k, nu_k, y_k, mu_w, nonneg=self.reg.nonneg, prox=self._prox
+            )
+
+        W_new = jax.vmap(update_one)(state.W_blocks, nu_agents, y_agents)
+        new_state = state._replace(W_blocks=W_new, step=state.step + 1)
+
+        # Metrics computed at agent-0's consensus estimate.
+        W_full = full_from_blocks(state.W_blocks)
+        nu0 = nu_agents[0]
+        # (N, B, Kb) -> (B, N*Kb), matching full_from_blocks column order.
+        y_full = jnp.moveaxis(y_agents, 0, -2).reshape(*x.shape[:-1], -1)
+        metrics = StepMetrics(
+            primal_obj=jnp.mean(primal_objective(self.res, self.reg, W_full, y_full, x)),
+            dual_obj=jnp.mean(dual_function(self.res, self.reg, W_full, nu0, x)),
+            residual_norm=jnp.mean(jnp.linalg.norm(x - y_full @ W_full.T, axis=-1)),
+            sparsity=jnp.mean(jnp.abs(y_full) > 1e-8),
+        )
+        return new_state, metrics
+
+    def fit_batch(self, state: LearnerState, x: Array) -> Tuple[LearnerState, StepMetrics]:
+        """One minibatch step: infer -> recover -> local dictionary update."""
+        return self._fit(state, x)
+
+    def fit(self, state: LearnerState, X: Array, batch_size: int = 4):
+        """Single-epoch streaming fit over rows of X (paper's online regime)."""
+        n = (X.shape[0] // batch_size) * batch_size
+        batches = X[:n].reshape(-1, batch_size, X.shape[1])
+        metrics = None
+        for xb in batches:
+            state, metrics = self.fit_batch(state, xb)
+        return state, metrics
+
+    # -- dynamic network growth (novel-document experiment) ---------------
+
+    def expanded(self, state: LearnerState, extra_agents: int, key: jax.Array):
+        """Add agents/atoms (paper Sec. IV-C: +10 atoms per time step).
+
+        Returns (new_learner, new_state) with old atom blocks preserved.
+        """
+        cfg = self.cfg
+        new_cfg = dataclasses.replace(
+            cfg, n_agents=cfg.n_agents + extra_agents,
+            k=cfg.k + extra_agents * cfg.atoms_per_agent,
+        )
+        new_learner = DictionaryLearner(new_cfg)
+        fresh = new_learner.init_state(key)
+        W_new = fresh.W_blocks.at[: cfg.n_agents].set(state.W_blocks)
+        return new_learner, fresh._replace(W_blocks=W_new, step=state.step)

@@ -1,0 +1,155 @@
+"""Agent network topologies and doubly-stochastic combination matrices.
+
+The paper runs diffusion over a connected random graph with Metropolis
+weights (Sec. IV-B).  The production TPU engine uses ring/torus topologies
+that map onto ICI neighbors; the reference engine accepts any connected
+graph.  All weight matrices returned here are doubly stochastic, which is
+the condition for the diffusion iteration (31) to converge to an O(mu^2)
+neighborhood of the optimum.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+try:  # networkx is available in this container; fall back gracefully.
+    import networkx as nx
+except Exception:  # pragma: no cover
+    nx = None
+
+
+def ring_adjacency(n: int) -> np.ndarray:
+    """Cycle graph C_n (each agent talks to 2 neighbors)."""
+    a = np.zeros((n, n), dtype=bool)
+    for i in range(n):
+        a[i, (i + 1) % n] = True
+        a[(i + 1) % n, i] = True
+    if n == 1:
+        a[0, 0] = False
+    return a
+
+
+def torus_adjacency(rows: int, cols: int) -> np.ndarray:
+    """2-D torus (each agent talks to 4 neighbors) — matches TPU ICI."""
+    n = rows * cols
+    a = np.zeros((n, n), dtype=bool)
+
+    def idx(r, c):
+        return (r % rows) * cols + (c % cols)
+
+    for r in range(rows):
+        for c in range(cols):
+            i = idx(r, c)
+            for j in (idx(r + 1, c), idx(r - 1, c), idx(r, c + 1), idx(r, c - 1)):
+                if j != i:
+                    a[i, j] = True
+                    a[j, i] = True
+    return a
+
+
+def fully_connected_adjacency(n: int) -> np.ndarray:
+    a = np.ones((n, n), dtype=bool)
+    np.fill_diagonal(a, False)
+    return a
+
+
+def erdos_renyi_adjacency(n: int, p: float = 0.5, seed: int = 0) -> np.ndarray:
+    """Connected Erdos-Renyi graph (resampled until connected), as in the paper."""
+    rng = np.random.default_rng(seed)
+    for _ in range(1000):
+        a = rng.random((n, n)) < p
+        a = np.triu(a, 1)
+        a = a | a.T
+        if is_connected(a):
+            return a
+    raise RuntimeError(f"could not sample a connected G({n},{p}) graph")
+
+
+def is_connected(adj: np.ndarray) -> bool:
+    n = adj.shape[0]
+    if n == 1:
+        return True
+    if nx is not None:
+        return nx.is_connected(nx.from_numpy_array(adj.astype(int)))
+    # BFS fallback.
+    seen = {0}
+    frontier = [0]
+    while frontier:
+        i = frontier.pop()
+        for j in np.nonzero(adj[i])[0]:
+            if j not in seen:
+                seen.add(int(j))
+                frontier.append(int(j))
+    return len(seen) == n
+
+
+def metropolis_weights(adj: np.ndarray) -> np.ndarray:
+    """Metropolis-Hastings combination matrix (doubly stochastic).
+
+    a_{lk} = 1 / (1 + max(d_l, d_k)) for l != k neighbors, diagonal absorbs
+    the slack.  Symmetric + rows sum to one => doubly stochastic.
+    """
+    n = adj.shape[0]
+    deg = adj.sum(axis=1)
+    a = np.zeros((n, n), dtype=np.float64)
+    for i in range(n):
+        for j in np.nonzero(adj[i])[0]:
+            a[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+    np.fill_diagonal(a, 1.0 - a.sum(axis=1))
+    return a
+
+
+def uniform_weights(n: int) -> np.ndarray:
+    """A = (1/n) 11^T — the fully-connected combiner used by the paper's
+    "Diffusion (Fully Connected)" columns.  One application = exact averaging."""
+    return np.full((n, n), 1.0 / n, dtype=np.float64)
+
+
+def ring_weights(n: int, beta: float = 1.0 / 3.0) -> np.ndarray:
+    """Constant-weight ring combiner [beta, 1-2beta, beta]; doubly stochastic
+    for beta <= 1/2.  This is the matrix the ppermute production path realizes."""
+    if n == 1:
+        return np.ones((1, 1))
+    a = np.zeros((n, n))
+    for i in range(n):
+        a[i, i] = 1.0 - 2.0 * beta
+        a[i, (i + 1) % n] += beta
+        a[i, (i - 1) % n] += beta
+    return a
+
+
+def is_doubly_stochastic(a: np.ndarray, tol: float = 1e-9) -> bool:
+    return (
+        bool(np.all(a >= -tol))
+        and bool(np.allclose(a.sum(axis=0), 1.0, atol=1e-7))
+        and bool(np.allclose(a.sum(axis=1), 1.0, atol=1e-7))
+    )
+
+
+def mixing_rate(a: np.ndarray) -> float:
+    """Second-largest singular value of A — governs gossip contraction."""
+    s = np.linalg.svd(a, compute_uv=False)
+    return float(s[1]) if len(s) > 1 else 0.0
+
+
+def make_topology(kind: str, n: int, *, p: float = 0.5, seed: int = 0,
+                  beta: float = 1.0 / 3.0) -> np.ndarray:
+    """Build a doubly-stochastic combiner for `n` agents.
+
+    kinds: "ring" (constant-weight), "ring_metropolis", "torus", "erdos",
+    "full".
+    """
+    if kind == "ring":
+        return ring_weights(n, beta)
+    if kind == "ring_metropolis":
+        return metropolis_weights(ring_adjacency(n))
+    if kind == "torus":
+        rows = int(np.floor(np.sqrt(n)))
+        while n % rows:
+            rows -= 1
+        return metropolis_weights(torus_adjacency(rows, n // rows))
+    if kind == "erdos":
+        return metropolis_weights(erdos_renyi_adjacency(n, p=p, seed=seed))
+    if kind == "full":
+        return uniform_weights(n)
+    raise KeyError(f"unknown topology kind {kind!r}")

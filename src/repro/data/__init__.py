@@ -1,0 +1,21 @@
+from repro.data.synthetic import (
+    TokenStream,
+    synthetic_images,
+    noisy_version,
+    topic_documents,
+    patch_dataset,
+    lm_batches,
+    audio_batches,
+    vlm_batches,
+)
+
+__all__ = [
+    "TokenStream",
+    "synthetic_images",
+    "noisy_version",
+    "topic_documents",
+    "patch_dataset",
+    "lm_batches",
+    "audio_batches",
+    "vlm_batches",
+]

@@ -1,0 +1,1 @@
+from repro.kernels.dict_dual_step.ops import dict_dual_step  # noqa: F401

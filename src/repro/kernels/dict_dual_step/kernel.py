@@ -1,0 +1,96 @@
+"""Fused dual-step Pallas TPU kernel.
+
+One pass over the atom shard computes S = nu W, Y = T(S)/delta, G = Y W^T.
+Unfused XLA reads W from HBM twice (once per matmul) and materializes S in
+HBM; the fusion streams each W tile through VMEM exactly once and keeps
+S/Y tiles in registers/VMEM, so HBM traffic per iteration drops from
+~(2|W| + 2|S| + |G|) to ~(|W| + |Y| + |G|).
+
+Tiling (DESIGN.md §5):
+  grid = (B/bb, K/bk); j (atoms) is the fast axis.
+  nu block (bb, M)  @ (i, 0)    — resident across the j sweep
+  W  block (M, bk)  @ (0, j)    — streamed once per i
+  Y  block (bb, bk) @ (i, j)    — written per step
+  G  block (bb, M)  @ (i, 0)    — accumulated across j (init at j == 0)
+
+MXU alignment: bb, bk multiples of 8/128 are enforced by ops.py padding;
+M is padded to a multiple of 128 there as well.  The float32 accumulation
+for G lives in the output block (revisited across the j sweep, which Pallas
+keeps in VMEM because the index map is constant in j).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _kernel(nu_ref, w_ref, y_ref, g_ref, *, gamma: float, delta: float, nonneg: bool):
+    j = pl.program_id(1)
+
+    nu = nu_ref[...]  # (bb, M)
+    w = w_ref[...]  # (M, bk)
+
+    s = jnp.dot(nu, w, preferred_element_type=jnp.float32)  # (bb, bk) on MXU
+    if nonneg:
+        y = jnp.maximum(s - gamma, 0.0)
+    else:
+        y = jnp.sign(s) * jnp.maximum(jnp.abs(s) - gamma, 0.0)
+    y = y * (1.0 / delta)
+
+    y_ref[...] = y.astype(y_ref.dtype)
+
+    g_contrib = jnp.dot(y, w.T.astype(jnp.float32), preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        g_ref[...] = g_contrib.astype(g_ref.dtype)
+
+    @pl.when(j > 0)
+    def _acc():
+        g_ref[...] += g_contrib.astype(g_ref.dtype)
+
+
+def dict_dual_step_pallas(
+    W: Array,  # (M, K), padded: M % 128 == 0, K % bk == 0
+    nu: Array,  # (B, M), padded: B % bb == 0
+    *,
+    gamma: float,
+    delta: float,
+    nonneg: bool,
+    block_b: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> tuple[Array, Array]:
+    """Raw pallas_call; shapes must already be tile-aligned (see ops.py)."""
+    m, k = W.shape
+    b = nu.shape[0]
+    bb = min(block_b, b)
+    bk = min(block_k, k)
+    grid = (b // bb, k // bk)
+
+    kernel = functools.partial(_kernel, gamma=gamma, delta=delta, nonneg=nonneg)
+
+    y, g = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, m), lambda i, j: (i, 0)),  # nu
+            pl.BlockSpec((m, bk), lambda i, j: (0, j)),  # W
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, bk), lambda i, j: (i, j)),  # Y
+            pl.BlockSpec((bb, m), lambda i, j: (i, 0)),  # G (accumulated)
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), nu.dtype),
+            jax.ShapeDtypeStruct((b, m), jnp.float32),
+        ],
+        interpret=interpret,
+    )(nu, W)
+    return y, g.astype(nu.dtype)

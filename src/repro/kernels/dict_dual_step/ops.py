@@ -1,0 +1,83 @@
+"""jit'd public wrapper for the fused dict_dual_step kernel.
+
+Handles padding to MXU-aligned tiles, unpadding, and the interpret-mode
+fallback used on CPU containers.  Padding is mathematically safe here:
+extra atom columns of W are zero => their S entries are 0 => T(0) = 0 (both
+thresholds) => they contribute nothing to G; extra batch rows are sliced
+away; extra M rows of W/nu are zero and contribute nothing to the dots.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dict_dual_step.kernel import dict_dual_step_pallas
+
+Array = jax.Array
+
+
+def _pad_to(x: Array, axis: int, mult: int) -> Array:
+    n = x.shape[axis]
+    rem = (-n) % mult
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("gamma", "delta", "nonneg", "block_b", "block_k", "interpret"),
+)
+def dict_dual_step(
+    W: Array,  # (M, K) atom shard
+    nu: Array,  # (B, M) or (M,) dual estimates
+    *,
+    gamma: float,
+    delta: float,
+    nonneg: bool = False,
+    block_b: int = 128,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> tuple[Array, Array]:
+    """Fused S = nu W; Y = T_gamma^(+)(S)/delta; G = Y W^T.
+
+    Returns (Y (B, K), G (B, M)) with the original (unpadded) shapes.
+    """
+    squeeze = nu.ndim == 1
+    if squeeze:
+        nu = nu[None, :]
+    b, m = nu.shape
+    k = W.shape[1]
+
+    # Tile-align: M to 128 (MXU lane), B to 8 (sublane; block handles more),
+    # K to the K block.
+    Wp = _pad_to(_pad_to(W, 0, 128), 1, min(block_k, max(k, 128)))
+    nup = _pad_to(_pad_to(nu, 1, 128), 0, 8)
+    bb = min(block_b, nup.shape[0])
+    # block_b must divide padded B; shrink to the gcd-ish largest divisor.
+    while nup.shape[0] % bb:
+        bb //= 2
+    bk = min(block_k, Wp.shape[1])
+    while Wp.shape[1] % bk:
+        bk //= 2
+
+    y, g = dict_dual_step_pallas(
+        Wp,
+        nup,
+        gamma=gamma,
+        delta=delta,
+        nonneg=nonneg,
+        block_b=bb,
+        block_k=bk,
+        interpret=interpret,
+    )
+    y = y[:b, :k]
+    g = g[:b, :m]
+    if squeeze:
+        return y[0], g[0]
+    return y, g

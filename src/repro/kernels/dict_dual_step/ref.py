@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the fused dict_dual_step kernel.
+
+Computes, for an atom shard W (M, K_loc) and dual estimates nu (B, M):
+
+    S = nu @ W                      (B, K_loc)   "correlate with atoms"
+    Y = T_gamma^(+)(S) / delta      (B, K_loc)   elastic-net primal recovery
+    G = Y @ W.T                     (B, M)       back-projection (grad term)
+
+which is the per-agent hot loop of the paper's Algorithms 2/3/4 — everything
+inside the dual gradient except the cheap elementwise -theta*x/|N_I| +
+grad f*(nu)/N terms.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def soft_threshold(x: Array, lam: float) -> Array:
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - lam, 0.0)
+
+
+def soft_threshold_pos(x: Array, lam: float) -> Array:
+    return jnp.maximum(x - lam, 0.0)
+
+
+def dict_dual_step_ref(
+    W: Array,  # (M, K)
+    nu: Array,  # (B, M)
+    *,
+    gamma: float,
+    delta: float,
+    nonneg: bool = False,
+) -> tuple[Array, Array]:
+    """Returns (Y (B, K), G (B, M)) in float32 accumulation."""
+    thresh = soft_threshold_pos if nonneg else soft_threshold
+    s = jnp.dot(nu, W, preferred_element_type=jnp.float32)
+    y = thresh(s, gamma) / delta
+    g = jnp.dot(y, W.T, preferred_element_type=jnp.float32)
+    return y.astype(nu.dtype), g.astype(nu.dtype)

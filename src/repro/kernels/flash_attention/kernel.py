@@ -1,0 +1,141 @@
+"""Causal GQA flash attention — Pallas TPU kernel.
+
+Online-softmax attention: never materializes the (S, T) logits in HBM.
+
+Tiling:
+  grid = (B * Hq, S/bq, T/bk); the kv axis j is fastest.
+  q block (1, bq, D)   @ (h, i)    — resident across the j sweep
+  k block (1, bk, D)   @ (h // group, j)   (GQA via the index map)
+  v block (1, bk, D)   @ (h // group, j)
+  o block (1, bq, D)   @ (h, i)    — written at the last j step
+  scratch: m (bq,), l (bq,), acc (bq, D) in VMEM, carried across j.
+
+Causality is handled two ways: fully-masked (q_blk, k_blk) tiles are
+skipped with @pl.when (no MXU work), and the diagonal tile applies the
+elementwise mask.  For decode (S == 1) use ops.flash_decode which is a thin
+jnp path — a 1-row MXU call wastes the systolic array.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, causal: bool, block_q: int, block_k: int, seq_q: int, seq_k: int,
+):
+    i = pl.program_id(1)  # q block
+    j = pl.program_id(2)  # kv block
+    nk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Causal offset: query position = i*bq + r + (seq_k - seq_q); key = j*bk + c.
+    # Skip tiles that are entirely in the future.
+    q_off = i * block_q + (seq_k - seq_q)
+    needed = (not causal) or True
+
+    def compute():
+        q = q_ref[0]  # (bq, D)
+        k = k_ref[0]  # (bk, D)
+        v = v_ref[0]  # (bk, D)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        if causal:
+            rows = q_off + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_cur[:, None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_cur
+
+    if causal:
+        # Tile fully in the future iff its first key col > the last query row.
+        last_row = q_off + block_q - 1
+        first_col = j * block_k
+
+        @pl.when(first_col <= last_row)
+        def _():
+            compute()
+    else:
+        compute()
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        # Fully-masked rows (l == 0) output 0 rather than NaN.
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: Array,  # (BH, S, D)  (batch*q_heads flattened)
+    k: Array,  # (BHkv, T, D)
+    v: Array,  # (BHkv, T, D)
+    *,
+    group: int,  # q heads per kv head
+    causal: bool,
+    scale: float,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> Array:
+    bh, s, d = q.shape
+    t = k.shape[1]
+    bq = min(block_q, s)
+    bk = min(block_k, t)
+    grid = (bh, s // bq, t // bk)
+
+    kernel = functools.partial(
+        _kernel,
+        scale=scale,
+        causal=causal,
+        block_q=bq,
+        block_k=bk,
+        seq_q=s,
+        seq_k=t,
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            _vmem((bq,), jnp.float32),
+            _vmem((bq,), jnp.float32),
+            _vmem((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _vmem(shape, dtype):
+    """VMEM scratch allocation (portable across pallas backends)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

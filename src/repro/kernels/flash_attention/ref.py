@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for flash attention (GQA, optional causal)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def attention_ref(
+    q: Array,  # (B, Hq, S, D)
+    k: Array,  # (B, Hkv, T, D)
+    v: Array,  # (B, Hkv, T, D)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> Array:
+    """Materialized-softmax reference attention with GQA head grouping."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+
+    kx = jnp.repeat(k, group, axis=1)  # (B, Hq, T, D)
+    vx = jnp.repeat(v, group, axis=1)
+
+    logits = jnp.einsum(
+        "bhsd,bhtd->bhst", q, kx, preferred_element_type=jnp.float32
+    ) * scale
+    if causal:
+        t = k.shape[2]
+        mask = jnp.tril(jnp.ones((s, t), bool), k=t - s)
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bhst,bhtd->bhsd", probs.astype(vx.dtype), vx,
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.slstm_step import kernel, ops, ref  # noqa: F401

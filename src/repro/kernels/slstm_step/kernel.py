@@ -1,0 +1,125 @@
+"""Persistent-weights sLSTM Pallas TPU kernel.
+
+The XLA lowering of the sLSTM time scan re-reads the recurrent matrices R
+(4 gates x H heads x P x P — 67 MB fp32 for xlstm-1.3b) from HBM on EVERY
+timestep: 4096 steps x 6 layers x fwd/bwd ~ 1.6 PB/device/step, the
+dominant roofline term of the xlstm train_4k cell (EXPERIMENTS.md §Perf).
+
+This kernel makes R VMEM-RESIDENT across the whole sequence: the grid is
+(S,) with "arbitrary" dimension semantics (sequential on TPU), R's
+BlockSpec index map is constant so Pallas keeps the block loaded, the
+(h, c, n, m) state lives in VMEM scratch carried across grid steps, and
+only the per-step gate inputs/outputs stream through HBM:
+
+    HBM traffic = |x_proj| + |h_out| + |R| (once)        ~ 2.7 GB/layer
+    vs XLA scan = |x_proj| + |h_out| + S * |R|           ~ 280 GB/layer
+
+VMEM: R bf16 = 33.5 MB + 5 state/block buffers << 128 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+NEG = -1e30
+
+
+def _kernel(xp_ref, r_ref, b_ref, h_out_ref, h_ref, c_ref, n_ref, m_ref,
+            *, n_heads: int, head_dim: int):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+
+    batch, d = h_ref.shape
+    h_prev = h_ref[...]  # (B, D) fp32
+
+    raws = []
+    for g in range(4):  # i, f, z, o
+        acc = xp_ref[g, 0].astype(jnp.float32) + b_ref[g][None, :].astype(jnp.float32)
+        # block-diagonal recurrence: per head, (B, P) @ (P, P) on the MXU
+        for hh in range(n_heads):
+            sl = slice(hh * head_dim, (hh + 1) * head_dim)
+            acc = acc.at[:, sl].add(
+                jnp.dot(
+                    h_prev[:, sl], r_ref[g, hh].astype(jnp.float32),
+                    preferred_element_type=jnp.float32,
+                )
+            )
+        raws.append(acc)
+    i_raw, f_raw, z_raw, o_raw = raws
+
+    lf = jax.nn.log_sigmoid(f_raw)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(lf + m_prev, i_raw)
+    i_s = jnp.exp(i_raw - m_new)
+    f_s = jnp.exp(lf + m_prev - m_new)
+    c = f_s * c_ref[...] + i_s * jnp.tanh(z_raw)
+    n = f_s * n_ref[...] + i_s
+    h = jax.nn.sigmoid(o_raw) * c / jnp.maximum(n, 1e-6)
+
+    c_ref[...] = c
+    n_ref[...] = n
+    m_ref[...] = m_new
+    h_ref[...] = h
+    h_out_ref[0] = h.astype(h_out_ref.dtype)
+
+
+def slstm_seq_pallas(
+    x_proj: Array,  # (4, S, B, D)
+    R: Array,  # (4, H, P, P)
+    b: Array,  # (4, D)
+    *,
+    interpret: bool = False,
+) -> Array:
+    """Returns h (S, B, D) fp32."""
+    _, s, batch, d = x_proj.shape
+    n_heads, p = R.shape[1], R.shape[2]
+    kernel = functools.partial(_kernel, n_heads=n_heads, head_dim=p)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(s,),
+        in_specs=[
+            pl.BlockSpec((4, 1, batch, d), lambda t: (0, t, 0, 0)),  # x_proj[t]
+            pl.BlockSpec((4, n_heads, p, p), lambda t: (0, 0, 0, 0)),  # R resident
+            pl.BlockSpec((4, d), lambda t: (0, 0)),  # biases resident
+        ],
+        out_specs=pl.BlockSpec((1, batch, d), lambda t: (t, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, batch, d), jnp.float32),
+        scratch_shapes=[
+            _vmem((batch, d), jnp.float32),  # h
+            _vmem((batch, d), jnp.float32),  # c
+            _vmem((batch, d), jnp.float32),  # n
+            _vmem((batch, d), jnp.float32),  # m
+        ],
+        compiler_params=_tpu_params(),
+        interpret=interpret,
+    )(x_proj, R, b)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)
+
+
+def _tpu_params():
+    """Sequential grid (state carried across steps) on real TPUs; ignored in
+    interpret mode."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.CompilerParams(dimension_semantics=("arbitrary",))
+    except Exception:  # pragma: no cover
+        return None

@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for the persistent-weights sLSTM kernel.
+
+Computes the stabilized sLSTM recurrence given PRE-PROJECTED input gates
+(x @ W hoisted outside — models/xlstm.py does the same):
+
+    raw_g[t] = x_proj[g, t] + (h_{t-1} @ blockdiag(R_g)) + b_g
+    m_t = max(logsig(raw_f) + m_{t-1}, raw_i)
+    c_t = exp(logsig(raw_f) + m_{t-1} - m_t) c_{t-1} + exp(raw_i - m_t) tanh(raw_z)
+    n_t = (same decay) n_{t-1} + exp(raw_i - m_t)
+    h_t = sigmoid(raw_o) * c_t / max(n_t, 1e-6)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+GATES = ("i", "f", "z", "o")
+
+
+def slstm_seq_ref(
+    x_proj: Array,  # (4, S, B, D) pre-projected gate inputs (i, f, z, o)
+    R: Array,  # (4, H, P, P) recurrent block-diagonal weights
+    b: Array,  # (4, D) biases
+) -> Array:
+    """Returns h (S, B, D), fp32."""
+    _, s, batch, d = x_proj.shape
+    h4, p = R.shape[1], R.shape[2]
+
+    def cell(state, xp_t):
+        h, c, n, m = state
+        hh = h.reshape(batch, h4, p)
+
+        def gate(g):
+            rec = jnp.einsum("bhp,hpq->bhq", hh, R[g].astype(jnp.float32))
+            return xp_t[g].astype(jnp.float32) + rec.reshape(batch, d) + b[g].astype(jnp.float32)
+
+        i_raw, f_raw, z_raw, o_raw = gate(0), gate(1), gate(2), gate(3)
+        lf = jax.nn.log_sigmoid(f_raw)
+        m_new = jnp.maximum(lf + m, i_raw)
+        i_s = jnp.exp(i_raw - m_new)
+        f_s = jnp.exp(lf + m - m_new)
+        c = f_s * c + i_s * jnp.tanh(z_raw)
+        n = f_s * n + i_s
+        h = jax.nn.sigmoid(o_raw) * c / jnp.maximum(n, 1e-6)
+        return (h, c, n, m_new), h
+
+    state0 = (
+        jnp.zeros((batch, d), jnp.float32),
+        jnp.zeros((batch, d), jnp.float32),
+        jnp.zeros((batch, d), jnp.float32),
+        jnp.full((batch, d), -1e30, jnp.float32),
+    )
+    _, hs = jax.lax.scan(cell, state0, jnp.moveaxis(x_proj, 1, 0))
+    return hs

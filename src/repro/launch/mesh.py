@@ -1,0 +1,36 @@
+"""Production mesh factory.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before first init).
+
+Single pod : (data=16, model=16)            = 256 chips (one v5e pod)
+Multi-pod  : (pod=2, data=16, model=16)     = 512 chips
+
+`model` maps to intra-pod ICI neighbors (TP/EP/gossip ring), `data` to the
+remaining intra-pod dimension (DP/FSDP), `pod` to the cross-pod DCI links
+(pure DP — only gradient all-reduce crosses pods).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests / elastic rescale)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+# TPU v5e hardware constants (per chip) used by the roofline analysis.
+HW = {
+    "peak_flops_bf16": 197e12,  # FLOP/s
+    "hbm_bw": 819e9,  # B/s
+    "ici_bw": 50e9,  # B/s per link
+    "hbm_bytes": 16e9,
+}

@@ -1,0 +1,8 @@
+"""Assigned-architecture model zoo (pure JAX).
+
+Every architecture is assembled from the blocks in this package by
+`models/model.py:build_model` according to an `ArchConfig`
+(src/repro/configs/).  Parameters are plain pytrees of arrays; each init
+also produces a matching pytree of *logical axis names* which
+runtime/sharding.py maps onto the device mesh.
+"""

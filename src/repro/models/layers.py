@@ -1,0 +1,208 @@
+"""Shared building blocks: params-with-axes, norms, MLPs, rotary embeddings.
+
+Parameters are built as `Param(value, axes)` leaves; `split_tree` separates
+them into a value pytree (what jit sees) and a logical-axes pytree (what the
+sharding rules consume).  `value` may be a concrete array (training) or a
+ShapeDtypeStruct (dry-run via jax.eval_shape) — every function here is
+shape-polymorphic over that.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Param:
+    """A parameter leaf: array value + static logical-axis names.
+
+    Registered as a pytree node with `value` as the only child and `axes`
+    as static aux data, so jax.eval_shape / jax.vmap / lax.scan pass through
+    transparently (axes never become traced leaves).  `axes` names logical
+    dimensions ("embed", "heads", ...) that runtime/sharding.py maps onto
+    mesh axes.
+    """
+
+    value: Any  # Array | ShapeDtypeStruct
+    axes: Tuple[Optional[str], ...]
+
+    def tree_flatten(self):
+        return (self.value,), tuple(self.axes)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_tree(tree):
+    """(values, axes) pytrees from a tree with Param leaves."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def normal_init(key, shape, dtype, stddev: float) -> Array:
+    return (jax.random.normal(key, shape) * stddev).astype(dtype)
+
+
+def dense_param(
+    key,
+    shape: Sequence[int],
+    axes: Tuple[Optional[str], ...],
+    dtype,
+    *,
+    fan_in: Optional[int] = None,
+    scale: float = 1.0,
+) -> Param:
+    """Truncated-normal-ish (plain normal) with 1/sqrt(fan_in) scaling."""
+    fi = shape[0] if fan_in is None else fan_in
+    return Param(normal_init(key, tuple(shape), dtype, scale / (fi ** 0.5)), axes)
+
+
+def zeros_param(shape, axes, dtype) -> Param:
+    return Param(jnp.zeros(tuple(shape), dtype), axes)
+
+
+def ones_param(shape, axes, dtype) -> Param:
+    return Param(jnp.ones(tuple(shape), dtype), axes)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": ones_param((d,), (None,), dtype)}
+
+
+def rmsnorm(params: dict, x: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def nonparametric_layernorm(x: Array, eps: float = 1e-5) -> Array:
+    """OLMo-style LN: standardize, no learned scale/bias."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(dt)
+
+
+def init_norm(kind: str, d: int, dtype) -> dict:
+    if kind == "rms":
+        return init_rmsnorm(d, dtype)
+    if kind == "nonparametric":
+        return {}
+    raise KeyError(kind)
+
+
+def apply_norm(kind: str, params: dict, x: Array) -> Array:
+    if kind == "rms":
+        return rmsnorm(params, x)
+    if kind == "nonparametric":
+        return nonparametric_layernorm(x)
+    raise KeyError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rotary_angles(positions: Array, head_dim: int, base: float = 10000.0) -> Tuple[Array, Array]:
+    """(sin, cos) of shape (..., head_dim/2) for integer positions."""
+    half = head_dim // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rotary(x: Array, sin: Array, cos: Array) -> Array:
+    """x (..., S, H, D) with sin/cos (..., S, 1, D/2) or broadcastable."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act in ("swiglu", "geglu"):
+        return {
+            "wi": dense_param(k1, (d_model, d_ff), ("embed", "ffn"), dtype),
+            "wg": dense_param(k2, (d_model, d_ff), ("embed", "ffn"), dtype),
+            "wo": dense_param(k3, (d_ff, d_model), ("ffn", "embed"), dtype),
+        }
+    return {
+        "wi": dense_param(k1, (d_model, d_ff), ("embed", "ffn"), dtype),
+        "wo": dense_param(k3, (d_ff, d_model), ("ffn", "embed"), dtype),
+    }
+
+
+def apply_mlp(params: dict, x: Array, act: str) -> Array:
+    if act == "swiglu":
+        h = jax.nn.silu(x @ params["wg"]) * (x @ params["wi"])
+    elif act == "geglu":
+        h = jax.nn.gelu(x @ params["wg"]) * (x @ params["wi"])
+    elif act == "gelu":
+        h = jax.nn.gelu(x @ params["wi"])
+    else:
+        raise KeyError(act)
+    return h @ params["wo"]
+
+
+def mlp_flops(d_model: int, d_ff: int, act: str) -> int:
+    """Matmul FLOPs per token (for roofline bookkeeping)."""
+    n_mats = 3 if act in ("swiglu", "geglu") else 2
+    return 2 * n_mats * d_model * d_ff
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype) -> dict:
+    return {"table": dense_param(key, (vocab, d_model), ("vocab", "embed"), dtype, fan_in=d_model)}
+
+
+def embed(params: dict, tokens: Array, scale_by_dim: bool = False) -> Array:
+    table = params["table"]
+    out = jnp.take(table, tokens, axis=0)
+    if scale_by_dim:  # gemma convention
+        out = out * jnp.asarray(table.shape[1] ** 0.5, out.dtype)
+    return out
+
+
+def unembed(params: dict, x: Array) -> Array:
+    """Tied unembedding: logits = x @ table^T (fp32 for the softmax)."""
+    return jnp.dot(
+        x, params["table"].T, preferred_element_type=jnp.float32
+    )

@@ -1,0 +1,649 @@
+"""Model assembly: ArchConfig -> init / forward / loss / prefill / decode.
+
+Families:
+  dense   pre-norm decoder stack (qwen3, olmo, granite, gemma), scanned.
+  moe     same stack with MoE FFN (+ optional leading dense layers).
+  vlm     dense backbone + projector over precomputed patch embeddings.
+  audio   encoder-only (bidirectional) stack + masked-prediction head.
+  hybrid  zamba2: groups of `attn_every` Mamba2 blocks followed by one
+          weight-TIED shared transformer block (scan over groups).
+  xlstm   groups of (slstm_every - 1) mLSTM blocks + 1 sLSTM block.
+
+All params are Param(value, logical_axes) leaves.  `init` returns the Param
+tree; `jax.eval_shape(model.init, key)` gives the abstract tree for the
+dry-run (axes ride along as static aux data).  Layer stacks carry a leading
+`layers` axis and run under lax.scan with per-layer jax.checkpoint.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tfm
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (
+    Param,
+    apply_norm,
+    embed,
+    init_embedding,
+    init_norm,
+    is_param,
+    split_tree,
+    unembed,
+    dense_param,
+)
+from repro.models.attention import CACHE_AXES, cache_specs as attn_cache_specs
+
+Array = jax.Array
+sds = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+
+def _stacked(init_fn, key, n: int):
+    """vmap an init over n layer keys -> Param tree with leading layer dim."""
+    keys = jax.random.split(key, n)
+    stacked = jax.vmap(init_fn)(keys)
+    # Prepend None to every Param's axes for the layer dim.
+    return jax.tree.map(
+        lambda p: Param(p.value, (None,) + tuple(p.axes)), stacked, is_leaf=is_param
+    )
+
+
+def _maybe_remat(fn, cfg: ArchConfig):
+    if not cfg.remat:
+        return fn
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+def _scan_layers(body, carry, xs, cfg: ArchConfig):
+    """lax.scan over layers, or an unrolled Python loop when
+    cfg.scan_layers=False.
+
+    The unrolled form exists for the dry-run's per-layer cost probes: XLA's
+    cost analysis counts a while-loop body ONCE regardless of trip count, so
+    honest roofline totals come from unrolled few-layer probes scaled
+    analytically (launch/dryrun.py), while the scanned form keeps compile
+    time/HLO size sane for the real configs.
+    """
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x_i = jax.tree.map(lambda v: v[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _cast_params(cfg: ArchConfig, params):
+    """Cast float params to the compute dtype once, up front (MaxText-style).
+
+    The optimizer keeps the fp32 master copy; gradients flow back through
+    the convert.  No-op when param and compute dtypes already agree.
+    """
+    cdt = cfg.cdtype
+
+    def one(v):
+        if hasattr(v, "dtype") and jnp.issubdtype(v.dtype, jnp.floating) and v.dtype != cdt:
+            return v.astype(cdt)
+        return v
+
+    return jax.tree.map(one, params)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init(cfg: ArchConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {}
+
+    if cfg.family == "audio":
+        params["frame_proj"] = tfm.init_frame_proj(ks[0], cfg.frame_dim, cfg.d_model, cfg.dtype)
+        params["head"] = {
+            "w": dense_param(ks[1], (cfg.d_model, cfg.vocab), ("embed", "vocab"), cfg.dtype)
+        }
+    else:
+        params["embed"] = init_embedding(ks[0], cfg.vocab, cfg.d_model, cfg.dtype)
+        if not cfg.tie_embeddings:
+            params["head"] = {
+                "w": dense_param(ks[1], (cfg.d_model, cfg.vocab), ("embed", "vocab"), cfg.dtype)
+            }
+    if cfg.family == "vlm":
+        params["projector"] = tfm.init_vlm_projector(ks[2], cfg.vision_dim, cfg.d_model, cfg.dtype)
+
+    if cfg.family in ("dense", "vlm", "audio"):
+        params["layers"] = _stacked(lambda k: tfm.init_block(k, cfg), ks[3], cfg.n_layers)
+    elif cfg.family == "moe":
+        n_moe = cfg.n_layers - cfg.first_dense
+        if cfg.first_dense:
+            params["dense_layers"] = _stacked(
+                lambda k: tfm.init_dense_block(k, cfg), ks[4], cfg.first_dense
+            )
+        params["layers"] = _stacked(lambda k: tfm.init_block(k, cfg), ks[3], n_moe)
+    elif cfg.family == "hybrid":
+        g = cfg.attn_every
+        n_grouped = (cfg.n_layers // g) * g
+        n_tail = cfg.n_layers - n_grouped
+
+        def init_mamba_layer(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "norm": init_norm(cfg.norm, cfg.d_model, cfg.dtype),
+                "mixer": ssm_mod.init_mamba2(
+                    k2, cfg.d_model, d_state=cfg.ssm_state,
+                    head_dim=cfg.ssm_head_dim, expand=cfg.ssm_expand, dtype=cfg.dtype,
+                ),
+            }
+
+        params["mamba"] = _stacked(init_mamba_layer, ks[3], n_grouped)
+        if n_tail:
+            params["mamba_tail"] = _stacked(init_mamba_layer, ks[5], n_tail)
+        params["shared_attn"] = tfm.init_block(ks[4], cfg)  # weight-tied block
+    elif cfg.family == "xlstm":
+        g = cfg.slstm_every
+        assert cfg.n_layers % g == 0, "xlstm expects n_layers % slstm_every == 0"
+        n_groups = cfg.n_layers // g
+
+        def init_mlstm_layer(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "norm": init_norm(cfg.norm, cfg.d_model, cfg.dtype),
+                "mixer": xlstm_mod.init_mlstm(
+                    k2, cfg.d_model, cfg.n_heads,
+                    proj_factor=cfg.mlstm_proj_factor, dtype=cfg.dtype,
+                ),
+            }
+
+        def init_slstm_layer(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "norm": init_norm(cfg.norm, cfg.d_model, cfg.dtype),
+                "mixer": xlstm_mod.init_slstm(k2, cfg.d_model, cfg.n_heads, dtype=cfg.dtype),
+            }
+
+        params["mlstm"] = _stacked(init_mlstm_layer, ks[3], n_groups * (g - 1))
+        params["slstm"] = _stacked(init_slstm_layer, ks[5], n_groups)
+    else:
+        raise KeyError(cfg.family)
+
+    params["final_norm"] = init_norm(cfg.norm, cfg.d_model, cfg.dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Embedding front-ends
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(cfg: ArchConfig, params, batch: Dict[str, Array]) -> Array:
+    cdt = cfg.cdtype
+    if cfg.family == "audio":
+        return tfm.apply_frame_proj(params["frame_proj"], batch["features"], cdt)
+    h = embed(params["embed"], batch["tokens"], scale_by_dim=cfg.embed_scale).astype(cdt)
+    if cfg.family == "vlm" and "img_embeds" in batch:
+        img = tfm.apply_vlm_projector(params["projector"], batch["img_embeds"], cdt)
+        h = jnp.concatenate([img, h], axis=1)
+    return h
+
+
+def _logits(cfg: ArchConfig, params, h: Array) -> Array:
+    h = apply_norm(cfg.norm, params["final_norm"], h)
+    if cfg.family == "audio" or not cfg.tie_embeddings:
+        return jnp.dot(h, params["head"]["w"].astype(h.dtype), preferred_element_type=jnp.float32)
+    return unembed(params["embed"], h)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill-without-cache)
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ArchConfig, params, batch: Dict[str, Array]) -> Tuple[Array, Array]:
+    """Returns (logits (B, S, V) fp32, moe_aux scalar)."""
+    params = _cast_params(cfg, params)
+    h = _embed_inputs(cfg, params, batch)
+    positions = jnp.arange(h.shape[1], dtype=jnp.int32)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        if cfg.family == "moe" and cfg.first_dense:
+            def dense_body(hh, lp):
+                hh, aux = tfm.apply_block(lp, hh, positions, cfg)
+                return hh, aux
+
+            h, auxs = _scan_layers(_maybe_remat(dense_body, cfg), h, params["dense_layers"], cfg)
+            aux_total = aux_total + jnp.sum(auxs)
+
+        def body(hh, lp):
+            hh, aux = tfm.apply_block(lp, hh, positions, cfg)
+            return hh, aux
+
+        h, auxs = _scan_layers(_maybe_remat(body, cfg), h, params["layers"], cfg)
+        aux_total = aux_total + jnp.sum(auxs)
+
+    elif cfg.family == "hybrid":
+        g = cfg.attn_every
+        n_groups = cfg.n_layers // g
+        mamba_vals = params["mamba"]
+        grouped = jax.tree.map(
+            lambda v: v.reshape((n_groups, g) + v.shape[1:]), mamba_vals
+        )
+        shared_vals = params["shared_attn"]
+
+        def mamba_body(hh, lp):
+            h_in = apply_norm(cfg.norm, lp["norm"], hh)
+            out = ssm_mod.mamba2_block(
+                lp["mixer"], h_in, d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+                expand=cfg.ssm_expand, chunk=cfg.ssm_chunk,
+            )
+            return tfm.shard_activations(hh + out), None
+
+        mamba_body = _maybe_remat(mamba_body, cfg)
+
+        def attn_body(hh):
+            hh, _ = tfm.apply_block(shared_vals, hh, positions, cfg)
+            return hh
+
+        attn_body = _maybe_remat(attn_body, cfg)
+
+        def group_body(hh, gp):
+            hh, _ = _scan_layers(mamba_body, hh, gp, cfg)
+            return attn_body(hh), None
+
+        h, _ = _scan_layers(group_body, h, grouped, cfg)
+        if "mamba_tail" in params:
+            def tail_body(hh, lp):
+                return mamba_body(hh, lp)
+
+            h, _ = _scan_layers(tail_body, h, params["mamba_tail"], cfg)
+
+    elif cfg.family == "xlstm":
+        g = cfg.slstm_every
+        n_groups = cfg.n_layers // g
+        m_vals = params["mlstm"]
+        m_grouped = jax.tree.map(
+            lambda v: v.reshape((n_groups, g - 1) + v.shape[1:]), m_vals
+        )
+        s_vals = params["slstm"]
+
+        def mlstm_body(hh, lp):
+            h_in = apply_norm(cfg.norm, lp["norm"], hh)
+            out = xlstm_mod.mlstm_block(
+                lp["mixer"], h_in, n_heads=cfg.n_heads,
+                proj_factor=cfg.mlstm_proj_factor, chunk=cfg.ssm_chunk,
+            )
+            return tfm.shard_activations(hh + out), None
+
+        mlstm_body = _maybe_remat(mlstm_body, cfg)
+
+        def slstm_body(hh, lp):
+            h_in = apply_norm(cfg.norm, lp["norm"], hh)
+            out = xlstm_mod.slstm_block_auto(lp["mixer"], h_in, n_heads=cfg.n_heads)
+            return tfm.shard_activations(hh + out), None
+
+        # NOT rematted: sLSTM is sequential and compute-cheap; recomputing the
+        # 4096-step recurrence in the backward pass would double its wall
+        # time, and remat(shard_map(scan)) trips an XLA CPU-pipeline crash
+        # (AllReducePromotion on resharding copies).
+
+        def group_body(hh, gp):
+            mg, sg = gp
+            hh, _ = _scan_layers(mlstm_body, hh, mg, cfg)
+            hh, _ = slstm_body(hh, sg)
+            return hh, None
+
+        h, _ = _scan_layers(group_body, h, (m_grouped, s_vals), cfg)
+    else:
+        raise KeyError(cfg.family)
+
+    return _logits(cfg, params, h), aux_total
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def _ce(logits: Array, targets: Array, mask: Array) -> Tuple[Array, Array]:
+    """Masked mean cross-entropy in fp32. Returns (loss, n_tokens)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    n = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll) / n, n
+
+
+def loss_fn(cfg: ArchConfig, params, batch: Dict[str, Array]) -> Tuple[Array, Dict[str, Array]]:
+    logits, aux = forward(cfg, params, batch)
+    if cfg.family == "audio":
+        mask = batch["mask"].astype(jnp.float32)
+        loss, n = _ce(logits, batch["targets"], mask)
+    elif cfg.family == "vlm":
+        n_img = cfg.n_img_tokens
+        text_logits = logits[:, n_img:, :]
+        tokens = batch["tokens"]
+        mask = jnp.ones_like(tokens[:, 1:], jnp.float32)
+        loss, n = _ce(text_logits[:, :-1, :], tokens[:, 1:], mask)
+    else:
+        tokens = batch["tokens"]
+        mask = jnp.ones_like(tokens[:, 1:], jnp.float32)
+        loss, n = _ce(logits[:, :-1, :], tokens[:, 1:], mask)
+    total = loss + 0.01 * aux
+    return total, {"ce": loss, "moe_aux": aux, "n_tokens": n}
+
+
+# ---------------------------------------------------------------------------
+# Cache specs / init
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int) -> Tuple[Any, Any]:
+    """(sds tree, logical-axes tree) for the decode cache."""
+    hd = cfg.resolved_head_dim
+    cdt = cfg.cdtype
+
+    def stack(spec_tree, n):
+        return jax.tree.map(lambda s: sds((n,) + s.shape, s.dtype), spec_tree)
+
+    def stack_axes(ax_tree, n):
+        return jax.tree.map(
+            lambda a: (None,) + tuple(a), ax_tree,
+            is_leaf=lambda x: isinstance(x, tuple),
+        )
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        one = attn_cache_specs(batch, max_len, cfg.n_kv_heads, hd, cdt)
+        n = cfg.n_layers
+        if cfg.family == "moe" and cfg.first_dense:
+            return (
+                {"dense": stack(one, cfg.first_dense), "layers": stack(one, n - cfg.first_dense)},
+                {"dense": stack_axes(CACHE_AXES, cfg.first_dense),
+                 "layers": stack_axes(CACHE_AXES, n - cfg.first_dense)},
+            )
+        return {"layers": stack(one, n)}, {"layers": stack_axes(CACHE_AXES, n)}
+
+    if cfg.family == "hybrid":
+        g = cfg.attn_every
+        n_groups = cfg.n_layers // g
+        n_tail = cfg.n_layers - n_groups * g
+        m_one = ssm_mod.mamba2_cache_specs(
+            batch, cfg.d_model, d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+            expand=cfg.ssm_expand, dtype=cdt,
+        )
+        a_one = attn_cache_specs(batch, max_len, cfg.n_kv_heads, hd, cdt)
+        spec = {
+            "mamba": jax.tree.map(lambda s: sds((n_groups, g) + s.shape, s.dtype), m_one),
+            "attn": stack(a_one, n_groups),
+        }
+        axes = {
+            "mamba": jax.tree.map(
+                lambda a: (None, None) + tuple(a), ssm_mod.MAMBA_CACHE_AXES,
+                is_leaf=lambda x: isinstance(x, tuple),
+            ),
+            "attn": stack_axes(CACHE_AXES, n_groups),
+        }
+        if n_tail:
+            spec["mamba_tail"] = stack(m_one, n_tail)
+            axes["mamba_tail"] = stack_axes(ssm_mod.MAMBA_CACHE_AXES, n_tail)
+        return spec, axes
+
+    if cfg.family == "xlstm":
+        g = cfg.slstm_every
+        n_groups = cfg.n_layers // g
+        m_one = xlstm_mod.mlstm_cache_specs(
+            batch, cfg.d_model, cfg.n_heads,
+            proj_factor=cfg.mlstm_proj_factor, dtype=cdt,
+        )
+        s_one = xlstm_mod.slstm_cache_specs(batch, cfg.d_model)
+        spec = {
+            "mlstm": jax.tree.map(lambda s: sds((n_groups, g - 1) + s.shape, s.dtype), m_one),
+            "slstm": stack(s_one, n_groups),
+        }
+        axes = {
+            "mlstm": jax.tree.map(
+                lambda a: (None, None) + tuple(a), xlstm_mod.MLSTM_CACHE_AXES,
+                is_leaf=lambda x: isinstance(x, tuple),
+            ),
+            "slstm": stack_axes(xlstm_mod.SLSTM_CACHE_AXES, n_groups),
+        }
+        return spec, axes
+
+    raise KeyError(f"no decode cache for family {cfg.family!r}")
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    spec, _ = cache_specs(cfg, batch, max_len)
+
+    def make(path, s):
+        # Stabilizer entries start at -inf-ish, everything else at zero.
+        leaf_name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if leaf_name == "m":
+            return jnp.full(s.shape, -1e30, s.dtype)
+        return jnp.zeros(s.shape, s.dtype)
+
+    return jax.tree_util.tree_map_with_path(make, spec)
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token)
+# ---------------------------------------------------------------------------
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params,
+    cache,
+    tokens: Array,  # (B, 1)
+    pos: Array,  # scalar int32 — current position (write index)
+) -> Tuple[Array, Any]:
+    """Returns (logits (B, 1, V) fp32, new cache)."""
+    params = _cast_params(cfg, params)
+    cdt = cfg.cdtype
+    h = embed(params["embed"], tokens, scale_by_dim=cfg.embed_scale).astype(cdt) \
+        if cfg.family != "audio" else None
+    if cfg.family == "audio":
+        raise ValueError("encoder-only arch has no decode step")
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        if cfg.family == "moe" and cfg.first_dense:
+            def dense_body(hh, inp):
+                lp, c = inp
+                hh, c_new, _ = tfm.decode_block(lp, hh, c, pos, cfg)
+                return hh, c_new
+
+            h, dense_cache = _scan_layers(
+                dense_body, h, (params["dense_layers"], cache["dense"]), cfg
+            )
+
+        def body(hh, inp):
+            lp, c = inp
+            hh, c_new, _ = tfm.decode_block(lp, hh, c, pos, cfg)
+            return hh, c_new
+
+        h, layer_cache = _scan_layers(body, h, (params["layers"], cache["layers"]), cfg)
+        new_cache = {"layers": layer_cache}
+        if cfg.family == "moe" and cfg.first_dense:
+            new_cache["dense"] = dense_cache
+
+    elif cfg.family == "hybrid":
+        g = cfg.attn_every
+        n_groups = cfg.n_layers // g
+        mamba_vals = params["mamba"]
+        grouped = jax.tree.map(lambda v: v.reshape((n_groups, g) + v.shape[1:]), mamba_vals)
+        shared_vals = params["shared_attn"]
+
+        def mamba_body(hh, inp):
+            lp, c = inp
+            h_in = apply_norm(cfg.norm, lp["norm"], hh)
+            out, c_new = ssm_mod.mamba2_decode(
+                lp["mixer"], h_in, c, d_state=cfg.ssm_state,
+                head_dim=cfg.ssm_head_dim, expand=cfg.ssm_expand,
+            )
+            return hh + out, c_new
+
+        def group_body(hh, inp):
+            gp, gc = inp
+            hh, mc = _scan_layers(mamba_body, hh, (gp, gc["mamba"]), cfg)
+            hh, ac, _ = tfm.decode_block(shared_vals, hh, gc["attn"], pos, cfg)
+            return hh, {"mamba": mc, "attn": ac}
+
+        h, gcache = _scan_layers(
+            group_body, h,
+            (grouped, {"mamba": cache["mamba"], "attn": cache["attn"]}), cfg,
+        )
+        new_cache = {"mamba": gcache["mamba"], "attn": gcache["attn"]}
+        if "mamba_tail" in params:
+            h, tail_cache = _scan_layers(
+                mamba_body, h, (params["mamba_tail"], cache["mamba_tail"]), cfg
+            )
+            new_cache["mamba_tail"] = tail_cache
+
+    elif cfg.family == "xlstm":
+        g = cfg.slstm_every
+        n_groups = cfg.n_layers // g
+        m_vals = params["mlstm"]
+        m_grouped = jax.tree.map(lambda v: v.reshape((n_groups, g - 1) + v.shape[1:]), m_vals)
+        s_vals = params["slstm"]
+
+        def mlstm_body(hh, inp):
+            lp, c = inp
+            h_in = apply_norm(cfg.norm, lp["norm"], hh)
+            out, c_new = xlstm_mod.mlstm_decode(
+                lp["mixer"], h_in, c, n_heads=cfg.n_heads,
+                proj_factor=cfg.mlstm_proj_factor,
+            )
+            return hh + out, c_new
+
+        def group_body2(hh, inp):
+            (gp, sp), (mc_in, sc_in) = inp
+            hh, mc = _scan_layers(mlstm_body, hh, (gp, mc_in), cfg)
+            h_in = apply_norm(cfg.norm, sp["norm"], hh)
+            out, s_new = xlstm_mod.slstm_decode(sp["mixer"], h_in, sc_in, n_heads=cfg.n_heads)
+            return hh + out, (mc, s_new)
+
+        h, (m_cache, s_cache) = _scan_layers(
+            group_body2, h, ((m_grouped, s_vals), (cache["mlstm"], cache["slstm"])), cfg
+        )
+        new_cache = {"mlstm": m_cache, "slstm": s_cache}
+    else:
+        raise KeyError(cfg.family)
+
+    return _logits(cfg, params, h), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill (full sequence -> logits + cache)
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg: ArchConfig, params, batch: Dict[str, Array]) -> Tuple[Array, Any]:
+    """Full-sequence forward that also returns the decode cache."""
+    params = _cast_params(cfg, params)
+    h = _embed_inputs(cfg, params, batch)
+    positions = jnp.arange(h.shape[1], dtype=jnp.int32)
+
+    if cfg.family == "audio":
+        # Encoder-only: no cache; "prefill" == encode.
+        def body(hh, lp):
+            hh, _ = tfm.apply_block(lp, hh, positions, cfg)
+            return hh, None
+
+        h, _ = _scan_layers(_maybe_remat(body, cfg), h, params["layers"], cfg)
+        return _logits(cfg, params, h), None
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        if cfg.family == "moe" and cfg.first_dense:
+            def dense_body(hh, lp):
+                hh, kv, _ = tfm.prefill_block(lp, hh, positions, cfg)
+                return hh, kv
+
+            h, dense_kv = _scan_layers(
+                _maybe_remat(dense_body, cfg), h, params["dense_layers"], cfg
+            )
+
+        def body(hh, lp):
+            hh, kv, _ = tfm.prefill_block(lp, hh, positions, cfg)
+            return hh, kv
+
+        h, kv = _scan_layers(_maybe_remat(body, cfg), h, params["layers"], cfg)
+        cache = {"layers": kv}
+        if cfg.family == "moe" and cfg.first_dense:
+            cache["dense"] = dense_kv
+        return _logits(cfg, params, h), cache
+
+    if cfg.family == "hybrid":
+        g = cfg.attn_every
+        n_groups = cfg.n_layers // g
+        mamba_vals = params["mamba"]
+        grouped = jax.tree.map(lambda v: v.reshape((n_groups, g) + v.shape[1:]), mamba_vals)
+        shared_vals = params["shared_attn"]
+
+        def mamba_body(hh, lp):
+            h_in = apply_norm(cfg.norm, lp["norm"], hh)
+            out, c = ssm_mod.mamba2_block(
+                lp["mixer"], h_in, d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+                expand=cfg.ssm_expand, chunk=cfg.ssm_chunk, return_cache=True,
+            )
+            return hh + out, c
+
+        def group_body(hh, gp):
+            hh, mc = _scan_layers(_maybe_remat(mamba_body, cfg), hh, gp, cfg)
+            hh, kv, _ = tfm.prefill_block(shared_vals, hh, positions, cfg)
+            return hh, {"mamba": mc, "attn": kv}
+
+        h, gcache = _scan_layers(group_body, h, grouped, cfg)
+        cache = {"mamba": gcache["mamba"], "attn": gcache["attn"]}
+        if "mamba_tail" in params:
+            h, tc = _scan_layers(
+                _maybe_remat(mamba_body, cfg), h, params["mamba_tail"], cfg
+            )
+            cache["mamba_tail"] = tc
+        return _logits(cfg, params, h), cache
+
+    if cfg.family == "xlstm":
+        g = cfg.slstm_every
+        n_groups = cfg.n_layers // g
+        m_vals = params["mlstm"]
+        m_grouped = jax.tree.map(lambda v: v.reshape((n_groups, g - 1) + v.shape[1:]), m_vals)
+        s_vals = params["slstm"]
+
+        def mlstm_body(hh, lp):
+            h_in = apply_norm(cfg.norm, lp["norm"], hh)
+            out, c = xlstm_mod.mlstm_block(
+                lp["mixer"], h_in, n_heads=cfg.n_heads,
+                proj_factor=cfg.mlstm_proj_factor, chunk=cfg.ssm_chunk,
+                return_cache=True,
+            )
+            return hh + out, c
+
+        def group_body(hh, gp):
+            mg, sg = gp
+            hh, mc = _scan_layers(_maybe_remat(mlstm_body, cfg), hh, mg, cfg)
+            h_in = apply_norm(cfg.norm, sg["norm"], hh)
+            out, sc = xlstm_mod.slstm_block_auto(
+                sg["mixer"], h_in, n_heads=cfg.n_heads, return_cache=True
+            )
+            return hh + out, (mc, sc)
+
+        h, (m_cache, s_cache) = _scan_layers(group_body, h, (m_grouped, s_vals), cfg)
+        return _logits(cfg, params, h), {"mlstm": m_cache, "slstm": s_cache}
+
+    raise KeyError(cfg.family)

@@ -1,0 +1,168 @@
+"""Mixture-of-Experts FFN with grouped, capacity-based dispatch.
+
+Design (DESIGN.md §4): experts are sharded along the `model` mesh axis
+(expert parallelism); tokens stay sharded along `data` like every other
+activation.  Dispatch happens *within* token groups that align with the
+data shards, so the position-in-expert cumsum never crosses a shard
+boundary.  Because TP keeps activations replicated along `model`, each
+expert shard gathers its own tokens locally — no all-to-all is required;
+the only cross-shard traffic is the output reduction XLA already inserts
+for the expert-sharded combine (the same psum TP needs for row-parallel
+matmuls).
+
+For 1T-class configs the expert weights additionally carry a `d_ff`
+logical axis mapped to the `data` mesh axis (FSDP); XLA all-gathers them
+per layer under the scan, which is the standard ZeRO-3 trade.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Param, dense_param
+from repro.models.sharding_hook import shard
+
+Array = jax.Array
+
+
+def init_moe(
+    key,
+    d_model: int,
+    d_ff: int,
+    n_experts: int,
+    *,
+    n_shared: int = 0,
+    dtype=jnp.float32,
+) -> dict:
+    kr, k1, k2, k3, ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_param(kr, (d_model, n_experts), ("embed", None), dtype),
+        "wi": dense_param(
+            k1, (n_experts, d_model, d_ff), ("experts", "embed", "expert_ffn"),
+            dtype, fan_in=d_model,
+        ),
+        "wg": dense_param(
+            k2, (n_experts, d_model, d_ff), ("experts", "embed", "expert_ffn"),
+            dtype, fan_in=d_model,
+        ),
+        "wo": dense_param(
+            k3, (n_experts, d_ff, d_model), ("experts", "expert_ffn", "embed"),
+            dtype, fan_in=d_ff,
+        ),
+    }
+    if n_shared:
+        ksi, ksg, kso = jax.random.split(ks, 3)
+        p["shared"] = {
+            "wi": dense_param(ksi, (d_model, n_shared * d_ff), ("embed", "ffn"), dtype),
+            "wg": dense_param(ksg, (d_model, n_shared * d_ff), ("embed", "ffn"), dtype),
+            "wo": dense_param(kso, (n_shared * d_ff, d_model), ("ffn", "embed"), dtype),
+        }
+    return p
+
+
+def apply_moe(
+    params: dict,
+    x: Array,  # (B, S, D)
+    *,
+    top_k: int,
+    n_groups: int,
+    capacity_factor: float = 1.25,
+    router_dtype=jnp.float32,
+) -> Tuple[Array, Array]:
+    """Returns (output (B, S, D), aux load-balancing loss scalar)."""
+    b, s, d = x.shape
+    e = params["router"].shape[1]
+    xf = x.reshape(-1, d)  # (T, D)
+    t = xf.shape[0]
+    g = min(n_groups, t)
+    while t % g:
+        g -= 1
+    tg = t // g
+    xg = shard(xf.reshape(g, tg, d), "moe_tokens")
+
+    logits = (xg.astype(router_dtype) @ params["router"].astype(router_dtype))  # (G, Tg, E)
+    logits = shard(logits, "moe_logits")
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)  # (G, Tg, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Load-balance aux loss (Switch-style): E * mean_e(frac_e * prob_e).
+    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_ids, e, dtype=router_dtype), axis=2), axis=(0, 1)
+    ) / top_k
+    aux = e * jnp.sum(me * ce)
+
+    cap = int(max(1, round(tg * top_k / e * capacity_factor)))
+
+    # Position of each assignment within its expert (per group).  All the
+    # (G, ...) dispatch intermediates carry explicit sharding constraints:
+    # without them GSPMD loses G->data through the scatter/gather chain and
+    # falls back to replicate+all-reduce, which at the 1T-MoE scale costs
+    # ~TBs of wire per step (EXPERIMENTS.md §Perf, kimi iteration 1).
+    flat_ids = expert_ids.reshape(g, tg * top_k)  # row-major: token-major, slot-minor
+    onehot = shard(jax.nn.one_hot(flat_ids, e, dtype=jnp.int32), "moe_dispatch")
+    pos = jnp.cumsum(onehot, axis=1) - 1  # (G, Tg*k, E)
+    pos_in_expert = jnp.take_along_axis(pos, flat_ids[..., None], axis=-1)[..., 0]
+    valid = pos_in_expert < cap
+
+    # Scatter token indices into (G, E*cap) slot table.
+    slot = jnp.where(valid, flat_ids * cap + pos_in_expert, e * cap)  # drop if invalid
+    token_idx = jnp.broadcast_to(
+        jnp.arange(tg)[:, None], (tg, top_k)
+    ).reshape(tg * top_k)
+    gidx = jnp.arange(g)[:, None]
+    token_of_slot = jnp.zeros((g, e * cap), jnp.int32).at[gidx, slot].set(
+        jnp.broadcast_to(token_idx, (g, tg * top_k)), mode="drop"
+    )
+    filled = jnp.zeros((g, e * cap), bool).at[gidx, slot].set(True, mode="drop")
+    gate_of_slot = jnp.zeros((g, e * cap), x.dtype).at[gidx, slot].set(
+        gate_vals.reshape(g, tg * top_k).astype(x.dtype), mode="drop"
+    )
+
+    # Gather -> expert FFN -> weighted scatter-add back.
+    xe = jnp.take_along_axis(xg, token_of_slot[..., None], axis=1)  # (G, E*cap, D)
+    xe = jnp.where(filled[..., None], xe, 0.0).reshape(g, e, cap, d)
+    xe = shard(xe, "moe_expert")
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, params["wg"])) * jnp.einsum(
+        "gecd,edf->gecf", xe, params["wi"]
+    )
+    h = shard(h, "moe_expert")
+    ye = jnp.einsum("gecf,efd->gecd", h, params["wo"])
+    ye = shard(ye, "moe_expert").reshape(g, e * cap, d)
+    ye = ye * gate_of_slot[..., None]  # unfilled slots have gate 0
+    out = jnp.zeros_like(xg).at[gidx, token_of_slot].add(ye, mode="drop")
+    out = shard(out, "moe_tokens")
+
+    out = out.reshape(b, s, d)
+    if "shared" in params:
+        sp = params["shared"]
+        hs = jax.nn.silu(x @ sp["wg"]) * (x @ sp["wi"])
+        out = out + hs @ sp["wo"]
+    return out, aux.astype(jnp.float32)
+
+
+def moe_ref(params: dict, x: Array, *, top_k: int) -> Array:
+    """Dense per-token reference (computes every expert; tests only)."""
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = xf.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", xf, params["wg"])) * jnp.einsum(
+        "td,edf->tef", xf, params["wi"]
+    )
+    ye = jnp.einsum("tef,efd->ted", h, params["wo"])  # (T, E, D)
+    gates_dense = jnp.zeros_like(probs).at[
+        jnp.arange(xf.shape[0])[:, None], expert_ids
+    ].set(gate_vals)
+    out = jnp.einsum("ted,te->td", ye, gates_dense.astype(ye.dtype))
+    if "shared" in params:
+        sp = params["shared"]
+        hs = jax.nn.silu(xf @ sp["wg"]) * (xf @ sp["wi"])
+        out = out + hs @ sp["wo"]
+    return out.reshape(b, s, d)

@@ -1,0 +1,289 @@
+"""All-to-all expert-parallel MoE (shard_map, explicit collectives).
+
+Why: the capacity-dispatch MoE in moe.py leaves dispatch to GSPMD.  At the
+1T-MoE scale (kimi: 384 experts, d=7168, 1M tokens/step) that lowers to
+replicated dispatch intermediates, f32-promoted scatter-adds on the wire,
+and full (G, Tg, D) token tensors summed over `model` — ~7.7 TB of wire
+bytes per device per step (EXPERIMENTS.md §Perf, kimi baseline).  The
+structural fix, as in DeepSeek/Switch-class systems, is to move TOKENS to
+the experts with an all-to-all over the expert-parallel axis and keep
+everything else local:
+
+  per chip (i on data, j on model), tokens (T_loc, D), experts E_loc = E/TP:
+    1. route locally (router gathered over `data` — it is FSDP-sharded);
+    2. bucket assignments by destination model rank, capacity-bounded;
+    3. all_to_all over `model`: send (TP, C_send, D) token payloads;
+    4. locally dispatch received tokens to E_loc experts (one-hot cumsum);
+    5. all_gather expert weights over `data` (the FSDP gather — bf16 here;
+       its transpose is the grads' psum_scatter, both explicit);
+    6. expert FFN; un-dispatch; all_to_all back; weighted combine.
+
+  wire/layer/chip  = 2 x a2a (~0.5 GB bf16) + weight AG (~2.1 GB)
+                     + grad RS (~2.1 GB)            ~= 5-7 GB
+  vs. the GSPMD gather-dispatch baseline            ~= 126 GB.
+
+Everything is differentiable: all_to_all transposes to all_to_all,
+all_gather to psum_scatter; local scatter-adds stay on-chip (their f32
+promotion costs HBM, not ICI).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# int8 wire compression (beyond-paper; the training-path analogue of the
+# dictionary engine's ring_q8 gossip).  Forward collectives move int8 +
+# per-row fp16 scales (~4x fewer wire bytes than the f32 the CPU backend
+# legalizes bf16 to; ~2x vs true bf16); backward runs straight-through in
+# bf16 (custom_vjp), so gradients see the unquantized linearization — the
+# standard QSGD/DeepSeek-fp8-dispatch trade.
+# ---------------------------------------------------------------------------
+
+
+def _q8(x: Array, axis: int = -1):
+    scale = (jnp.max(jnp.abs(x), axis=axis, keepdims=True) / 127.0 + 1e-30).astype(jnp.float16)
+    q = jnp.clip(jnp.round(x / scale.astype(x.dtype)), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def q8_all_gather(x: Array, axis_name: str, gather_axis: int, scale_axis: int = -1) -> Array:
+    """The quantization (scale) axis must differ from the gather axis so the
+    per-shard scales broadcast after the tiled gather."""
+    q, s = _q8(x, scale_axis)
+    qg = jax.lax.all_gather(q, axis_name, axis=gather_axis, tiled=True)
+    sg = jax.lax.all_gather(s, axis_name, axis=gather_axis, tiled=True)
+    return qg.astype(x.dtype) * sg.astype(x.dtype)
+
+
+def _q8ag_fwd(x, axis_name, gather_axis, scale_axis):
+    return q8_all_gather(x, axis_name, gather_axis, scale_axis), None
+
+
+def _q8ag_bwd(axis_name, gather_axis, scale_axis, _, g):
+    return (jax.lax.psum_scatter(g, axis_name, scatter_dimension=gather_axis, tiled=True),)
+
+
+q8_all_gather.defvjp(_q8ag_fwd, _q8ag_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def q8_all_to_all(x: Array, axis_name: str) -> Array:
+    """all_to_all over leading axis with int8 payload; bf16 backward."""
+    q, s = _q8(x)
+    qg = jax.lax.all_to_all(q, axis_name, split_axis=0, concat_axis=0, tiled=True)
+    sg = jax.lax.all_to_all(s, axis_name, split_axis=0, concat_axis=0, tiled=True)
+    return qg.astype(x.dtype) * sg.astype(x.dtype)
+
+
+def _q8a2a_fwd(x, axis_name):
+    return q8_all_to_all(x, axis_name), None
+
+
+def _q8a2a_bwd(axis_name, _, g):
+    return (jax.lax.all_to_all(g, axis_name, split_axis=0, concat_axis=0, tiled=True),)
+
+
+q8_all_to_all.defvjp(_q8a2a_fwd, _q8a2a_bwd)
+
+
+def _count_dispatch(ids: Array, n_bins: int, cap: int):
+    """ids (N,) int32 in [0, n_bins) -> (slot (N,), valid (N,)) where slot =
+    bin * cap + position-within-bin, capacity-dropped."""
+    onehot = jax.nn.one_hot(ids, n_bins, dtype=jnp.int32)  # (N, bins)
+    pos = jnp.cumsum(onehot, axis=0) - 1
+    pos_in_bin = jnp.take_along_axis(pos, ids[:, None], axis=1)[:, 0]
+    valid = pos_in_bin < cap
+    slot = jnp.where(valid, ids * cap + pos_in_bin, n_bins * cap)
+    return slot, valid
+
+
+def _scatter_rows(values: Array, slot: Array, n_slots: int):
+    """Scatter rows of `values` (N, ...) into (n_slots, ...) by slot (drop
+    out-of-range)."""
+    out_shape = (n_slots,) + values.shape[1:]
+    return jnp.zeros(out_shape, values.dtype).at[slot].set(values, mode="drop")
+
+
+def moe_a2a_body(
+    params: dict,
+    x: Array,  # (B_loc, S_loc, D) — local shard
+    *,
+    top_k: int,
+    n_experts: int,
+    tp: int,  # model-axis size
+    capacity_factor: float,
+    data_axes: Tuple[str, ...],
+    model_axis: str = "model",
+    router_dtype=jnp.float32,
+    wire_dtype: str = "native",  # native | int8 (q8 gathers + dispatch a2a)
+) -> Tuple[Array, Array]:
+    b, s, d = x.shape
+    t_loc = b * s
+    e_loc = n_experts // tp
+    xf = x.reshape(t_loc, d)
+    cdt = x.dtype
+
+    # -- routing (router is FSDP-sharded on embed; gather it: it is tiny) --
+    router = params["router"]
+    for ax in data_axes:
+        router = jax.lax.all_gather(router, ax, axis=0, tiled=True)
+    logits = xf.astype(router_dtype) @ router.astype(router_dtype)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)  # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # aux load-balance loss over the GLOBAL batch
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_ids, n_experts, dtype=router_dtype), axis=1),
+        axis=0,
+    ) / top_k
+    for ax in (model_axis,) + tuple(data_axes):
+        me = jax.lax.pmean(me, ax)
+        ce = jax.lax.pmean(ce, ax)
+    aux = n_experts * jnp.sum(me * ce)
+
+    # -- bucket assignments by destination model rank -----------------------
+    n_assign = t_loc * top_k
+    flat_ids = expert_ids.reshape(n_assign)  # (N,)
+    flat_gates = gate_vals.reshape(n_assign).astype(cdt)
+    token_of_assign = jnp.repeat(jnp.arange(t_loc, dtype=jnp.int32), top_k)
+    dest = flat_ids // e_loc  # (N,) destination model rank
+    c_send = int(max(1, round(n_assign / tp * capacity_factor)))
+    send_slot, send_valid = _count_dispatch(dest, tp, c_send)
+
+    payload = _scatter_rows(
+        jnp.where(send_valid[:, None], xf[token_of_assign], 0), send_slot, tp * c_send
+    ).reshape(tp, c_send, d)
+    # metadata rides int32/cdt lanes (invalid -> expert e_loc = dummy)
+    local_eid = jnp.where(send_valid, flat_ids % e_loc, e_loc).astype(jnp.int32)
+    meta_eid = _scatter_rows(local_eid + 1, send_slot, tp * c_send).reshape(tp, c_send) - 1
+    # -1 marks empty send slots (scatter default 0, stored +1)
+
+    # -- all-to-all over the model axis -------------------------------------
+    if wire_dtype == "int8":
+        recv = q8_all_to_all(payload, model_axis)
+    else:
+        recv = jax.lax.all_to_all(payload, model_axis, split_axis=0, concat_axis=0, tiled=True)
+    recv_eid = jax.lax.all_to_all(meta_eid, model_axis, split_axis=0, concat_axis=0, tiled=True)
+    n_recv = tp * c_send
+    recv = recv.reshape(n_recv, d)
+    recv_eid = recv_eid.reshape(n_recv)
+
+    # -- local dispatch to E_loc experts ------------------------------------
+    c_exp = int(max(1, round(n_recv / max(e_loc, 1) * capacity_factor)))
+    eid_for_dispatch = jnp.where(recv_eid >= 0, recv_eid, e_loc)
+    exp_slot, exp_valid = _count_dispatch(eid_for_dispatch, e_loc + 1, c_exp)
+    exp_slot = jnp.where(recv_eid >= 0, exp_slot, (e_loc + 1) * c_exp)
+    xe = _scatter_rows(recv, exp_slot, (e_loc + 1) * c_exp)[: e_loc * c_exp]
+    xe = xe.reshape(e_loc, c_exp, d)
+
+    # -- FSDP weight gather over data (transpose = grads' psum_scatter) ------
+    def gathered(name, axis, scale_axis=-1):
+        w = params[name]
+        for ax in data_axes:
+            if wire_dtype == "int8":
+                w = q8_all_gather(w, ax, axis, scale_axis)
+            else:
+                w = jax.lax.all_gather(w, ax, axis=axis, tiled=True)
+        return w.astype(cdt)
+
+    wi, wg = gathered("wi", 1), gathered("wg", 1)
+    wo = gathered("wo", 2, scale_axis=1)  # gather along D -> scale along f
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, wg)) * jnp.einsum(
+        "ecd,edf->ecf", xe, wi
+    )
+    ye = jnp.einsum("ecf,efd->ecd", h, wo).reshape(e_loc * c_exp, d)
+
+    # -- un-dispatch, return a2a, combine ------------------------------------
+    ye_padded = jnp.concatenate([ye, jnp.zeros((1, d), ye.dtype)], axis=0)
+    back = ye_padded[jnp.minimum(exp_slot, e_loc * c_exp)]  # (n_recv, D)
+    ok = (recv_eid >= 0) & (exp_slot < e_loc * c_exp)
+    back = jnp.where(ok[:, None], back, 0)
+    back = back.reshape(tp, c_send, d)
+    if wire_dtype == "int8":
+        returned = q8_all_to_all(back, model_axis)
+    else:
+        returned = jax.lax.all_to_all(back, model_axis, split_axis=0, concat_axis=0, tiled=True)
+    returned = returned.reshape(tp * c_send, d)
+
+    # map each assignment back through its send slot (dummy row for dropped)
+    ret_padded = jnp.concatenate([returned, jnp.zeros((1, d), returned.dtype)], axis=0)
+    per_assign = ret_padded[jnp.minimum(send_slot, tp * c_send)]  # (N, D)
+    per_assign = per_assign * (flat_gates * send_valid.astype(cdt))[:, None]
+    out = jnp.sum(per_assign.reshape(t_loc, top_k, d), axis=1)
+
+    # shared expert (dense, FSDP-gathered the same way)
+    if "shared" in params:
+        sp = params["shared"]
+        swi = sp["wi"]
+        swg = sp["wg"]
+        swo = sp["wo"]
+        for ax in data_axes:
+            swi = jax.lax.all_gather(swi, ax, axis=0, tiled=True)
+            swg = jax.lax.all_gather(swg, ax, axis=0, tiled=True)
+            swo = jax.lax.all_gather(swo, ax, axis=1, tiled=True)
+        hs = jax.nn.silu(xf @ swg.astype(cdt)) * (xf @ swi.astype(cdt))
+        out = out + hs @ swo.astype(cdt)
+
+    return out.reshape(b, s, d), aux.astype(jnp.float32)
+
+
+def apply_moe_a2a(
+    mesh,
+    params: dict,
+    x: Array,  # (B, S, D) global
+    *,
+    top_k: int,
+    n_experts: int,
+    capacity_factor: float = 1.25,
+    model_axis: str = "model",
+    wire_dtype: str = "native",
+) -> Tuple[Array, Array]:
+    """shard_map wrapper. Param shardings: router (embed->data, None),
+    wi/wg (experts->model, embed->data, None), wo (experts->model, None,
+    embed->data); x: (batch->dp, seq->model, None)."""
+    sizes = dict(mesh.shape)
+    tp = sizes.get(model_axis, 1)
+    data_axes = tuple(a for a in ("data",) if a in sizes)
+    dp_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    bspec = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+
+    body = functools.partial(
+        moe_a2a_body,
+        top_k=top_k, n_experts=n_experts, tp=tp,
+        capacity_factor=capacity_factor, data_axes=data_axes,
+        model_axis=model_axis, wire_dtype=wire_dtype,
+    )
+    param_specs = {
+        "router": P("data" if "data" in sizes else None, None),
+        "wi": P(model_axis, "data" if "data" in sizes else None, None),
+        "wg": P(model_axis, "data" if "data" in sizes else None, None),
+        "wo": P(model_axis, None, "data" if "data" in sizes else None),
+    }
+    if "shared" in params:
+        param_specs["shared"] = {
+            "wi": P("data" if "data" in sizes else None, None),
+            "wg": P("data" if "data" in sizes else None, None),
+            "wo": P(None, "data" if "data" in sizes else None),
+        }
+    fn = shard_map(
+        lambda p, xx: body(p, xx),
+        mesh=mesh,
+        in_specs=(param_specs, P(bspec, model_axis, None)),
+        out_specs=(P(bspec, model_axis, None), P()),
+        check_vma=False,
+    )
+    return fn(params, x)

@@ -1,0 +1,39 @@
+"""Module-level activation-sharding hook.
+
+Models call `shard(x, kind)` at structurally meaningful points; the runtime
+(runtime/steps.py) installs a with_sharding_constraint closure for the
+current mesh before tracing.  Kinds:
+
+  residual     (B, S, D)      batch->DP axes, seq->model (SP)
+  moe_tokens   (G, Tg, D)     G->data
+  moe_logits   (G, Tg, E)     G->data, E->model
+  moe_dispatch (G, Tg*k, E)   G->data, E->model (one-hot/cumsum tensors)
+  moe_slots    (G, E*cap, D)  G->data, slots->model (slot-major tables)
+  moe_expert   (G, E, cap, X) G->data, E->model
+
+Default hook: identity (single-host tests and examples never pay it).
+"""
+
+from __future__ import annotations
+
+_HOOK = [lambda x, kind="residual": x]
+_MESH = [None]
+
+
+def set_hook(fn, mesh=None) -> None:
+    _HOOK[0] = fn
+    _MESH[0] = mesh
+
+
+def clear_hook() -> None:
+    _HOOK[0] = lambda x, kind="residual": x
+    _MESH[0] = None
+
+
+def shard(x, kind: str = "residual"):
+    return _HOOK[0](x, kind=kind)
+
+
+def current_mesh():
+    """The mesh the runtime installed (None on single-host test paths)."""
+    return _MESH[0]

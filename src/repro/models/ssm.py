@@ -1,0 +1,290 @@
+"""Mamba2 (SSD) blocks — chunked parallel scan for train/prefill, recurrent
+state update for decode.
+
+The SSD recurrence per head (state S of shape (d_state, head_dim)):
+
+    S_t = a_t * S_{t-1} + dt_t * B_t (x) x_t          a_t = exp(dt_t * A)
+    y_t = C_t^T S_t + D * x_t
+
+Training/prefill uses the chunked formulation: within a chunk of length Q
+the causal decay matrix exp(L_i - L_j) is materialized (Q x Q per head, in
+fp32 — stable because L is non-increasing), across chunks the state is
+carried with a lax.scan.  The chunk length is the VMEM-friendly tile; the
+arithmetic is all einsums so the MXU sees (Q x d_state) x (d_state x hd)
+matmuls.
+
+Decode carries (conv_buf, S) per layer and does the O(1) recurrence.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Param, dense_param, ones_param, zeros_param
+
+Array = jax.Array
+
+
+def init_mamba2(
+    key,
+    d_model: int,
+    *,
+    d_state: int = 64,
+    head_dim: int = 64,
+    expand: int = 2,
+    conv_width: int = 4,
+    dtype=jnp.float32,
+) -> dict:
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * d_state  # x, B, C share the conv
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # in_proj emits [z, x, B, C, dt].
+    d_proj = 2 * d_inner + 2 * d_state + n_heads
+    return {
+        "in_proj": dense_param(k1, (d_model, d_proj), ("embed", "ssm_inner"), dtype),
+        "conv_w": dense_param(k2, (conv_width, conv_dim), (None, "ssm_inner"), dtype, fan_in=conv_width),
+        "conv_b": zeros_param((conv_dim,), ("ssm_inner",), dtype),
+        "dt_bias": zeros_param((n_heads,), ("ssm_heads",), dtype),
+        "A_log": Param(
+            jnp.log(jnp.arange(1, n_heads + 1, dtype=jnp.float32)).astype(dtype),
+            ("ssm_heads",),
+        ),
+        "D": ones_param((n_heads,), ("ssm_heads",), dtype),
+        "norm_scale": ones_param((d_inner,), ("ssm_inner",), dtype),
+        "out_proj": dense_param(k4, (d_inner, d_model), ("ssm_inner", "embed"), dtype),
+    }
+
+
+def _split_proj(proj: Array, d_inner: int, d_state: int, n_heads: int):
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner : 2 * d_inner + 2 * d_state]
+    dt = proj[..., 2 * d_inner + 2 * d_state :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: Array, conv_w: Array, conv_b: Array) -> Array:
+    """Depthwise causal conv over seq: xbc (B, S, C), conv_w (W, C)."""
+    w = conv_w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(w):  # width is tiny (4); unrolled adds
+        out = out + pad[:, i : i + xbc.shape[1], :] * conv_w[i]
+    return jax.nn.silu(out + conv_b)
+
+
+def _ssd_chunked(
+    x: Array,  # (B, S, H, P)  inputs (already dt-free)
+    dt: Array,  # (B, S, H)    softplus'd step sizes
+    A: Array,  # (H,)          negative decay rates
+    Bm: Array,  # (B, S, Nst)  input projection (shared across heads, G=1)
+    Cm: Array,  # (B, S, Nst)
+    chunk: int,
+) -> Array:
+    """Chunked SSD: returns y (B, S, H, P). fp32 internally."""
+    b, s, h, p = x.shape
+    nst = Bm.shape[-1]
+    q = min(chunk, s)
+    while s % q:
+        q //= 2
+    nc = s // q
+
+    xf = x.astype(jnp.float32).reshape(b, nc, q, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, q, h)
+    Bf = Bm.astype(jnp.float32).reshape(b, nc, q, nst)
+    Cf = Cm.astype(jnp.float32).reshape(b, nc, q, nst)
+
+    l = dtf * A.astype(jnp.float32)  # (B, nc, Q, H) log-decay per step (<= 0)
+    L = jnp.cumsum(l, axis=2)  # inclusive cumulative log decay
+
+    # Intra-chunk: att[i, j] = exp(L_i - L_j) * (C_i . B_j) * dt_j, i >= j.
+    diff = L[:, :, :, None, :] - L[:, :, None, :, :]  # (B, nc, Q, Q, H)
+    mask = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    # Mask BEFORE exp: masked (i < j) entries have diff > 0 and would overflow
+    # to inf, whose gradient leaks NaN through the where (the where-grad trap).
+    diff = jnp.where(mask, diff, -jnp.inf)
+    decay = jnp.exp(diff)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cf, Bf)  # (B, nc, Q, Q)
+    att = decay * cb[..., None] * dtf[:, :, None, :, :]  # (B, nc, Q, Q, H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att, xf)
+
+    # Chunk summaries: state contribution decayed to the end of the chunk.
+    end_decay = jnp.exp(L[:, :, -1:, :] - L)  # (B, nc, Q, H)
+    s_chunk = jnp.einsum(
+        "bcjn,bcjh,bcjhp->bchnp", Bf, dtf * end_decay, xf
+    )  # (B, nc, H, Nst, P)
+    chunk_decay = jnp.exp(L[:, :, -1, :])  # (B, nc, H) total chunk decay
+
+    # Inter-chunk scan over nc.
+    def body(S_prev, blk):
+        s_c, cd = blk  # (B, H, Nst, P), (B, H)
+        S_new = S_prev * cd[:, :, None, None] + s_c
+        return S_new, S_prev
+
+    S0 = jnp.zeros((b, h, nst, p), jnp.float32)
+    S_last, S_before = jax.lax.scan(
+        body,
+        S0,
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )  # (nc, B, H, Nst, P) — state entering each chunk
+    S_before = jnp.moveaxis(S_before, 0, 1)  # (B, nc, H, Nst, P)
+
+    in_decay = jnp.exp(L)  # (B, nc, Q, H): decay from chunk start to i
+    y_inter = jnp.einsum(
+        "bcin,bcih,bchnp->bcihp", Cf, in_decay, S_before
+    )
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, S_last
+
+
+def mamba2_block(
+    params: dict,
+    hidden: Array,  # (B, S, D)
+    *,
+    d_state: int,
+    head_dim: int,
+    expand: int,
+    chunk: int = 128,
+    return_cache: bool = False,
+    conv_width: int = 4,
+):
+    """Full Mamba2 mixer (train/prefill path).
+
+    With return_cache=True also returns the decode cache after consuming the
+    sequence: {"conv_buf": last (W-1) raw xbc rows, "S": final SSD state}.
+    """
+    d_model = hidden.shape[-1]
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    dt_in = hidden.dtype
+
+    proj = hidden @ params["in_proj"].astype(hidden.dtype)
+    z, xbc_raw, dt_raw = _split_proj(proj, d_inner, d_state, n_heads)
+    xbc = _causal_conv(xbc_raw, params["conv_w"].astype(hidden.dtype), params["conv_b"].astype(hidden.dtype))
+    x = xbc[..., :d_inner]
+    Bm = xbc[..., d_inner : d_inner + d_state]
+    Cm = xbc[..., d_inner + d_state :]
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )  # (B, S, H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (H,) < 0
+
+    xh = x.reshape(*x.shape[:-1], n_heads, head_dim)
+    y, S_last = _ssd_chunked(xh, dt, A, Bm, Cm, chunk)  # fp32 (B, S, H, P)
+    y = y + params["D"].astype(jnp.float32)[:, None] * xh.astype(jnp.float32)
+    y = y.reshape(*hidden.shape[:-1], d_inner)
+
+    # Gated RMSNorm (Mamba2's norm-before-out_proj).
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * params["norm_scale"].astype(jnp.float32)
+    out = (y.astype(dt_in) @ params["out_proj"].astype(dt_in)).astype(dt_in)
+    if not return_cache:
+        return out
+    w = conv_width
+    cache = {"conv_buf": xbc_raw[:, -(w - 1):, :], "S": S_last}
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (recurrent) path
+# ---------------------------------------------------------------------------
+
+
+def mamba2_cache_specs(batch: int, d_model: int, *, d_state: int, head_dim: int,
+                       expand: int, conv_width: int = 4, dtype=jnp.float32):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * d_state
+    sds = jax.ShapeDtypeStruct
+    return {
+        "conv_buf": sds((batch, conv_width - 1, conv_dim), dtype),
+        "S": sds((batch, n_heads, d_state, head_dim), jnp.float32),
+    }
+
+
+MAMBA_CACHE_AXES = {
+    "conv_buf": ("batch", None, "ssm_inner"),
+    "S": ("batch", "ssm_heads", None, None),
+}
+
+
+def init_mamba2_cache(batch: int, d_model: int, **kw) -> dict:
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), mamba2_cache_specs(batch, d_model, **kw)
+    )
+
+
+def mamba2_decode(
+    params: dict,
+    hidden: Array,  # (B, 1, D)
+    cache: dict,
+    *,
+    d_state: int,
+    head_dim: int,
+    expand: int,
+) -> Tuple[Array, dict]:
+    """One recurrent step; returns (out (B, 1, D), new cache)."""
+    d_model = hidden.shape[-1]
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    dt_in = hidden.dtype
+
+    proj = hidden[:, 0] @ params["in_proj"].astype(dt_in)  # (B, d_proj)
+    z, xbc, dt_raw = _split_proj(proj, d_inner, d_state, n_heads)
+
+    # Causal conv via the rolling buffer.
+    conv_w = params["conv_w"].astype(dt_in)  # (W, C)
+    buf = jnp.concatenate([cache["conv_buf"], xbc[:, None, :]], axis=1)  # (B, W, C)
+    conv_out = jnp.einsum("bwc,wc->bc", buf, conv_w) + params["conv_b"].astype(dt_in)
+    xbc_t = jax.nn.silu(conv_out)
+    new_buf = buf[:, 1:, :]
+
+    x = xbc_t[..., :d_inner]
+    Bm = xbc_t[..., d_inner : d_inner + d_state].astype(jnp.float32)
+    Cm = xbc_t[..., d_inner + d_state :].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A)  # (B, H)
+
+    xh = x.reshape(-1, n_heads, head_dim).astype(jnp.float32)
+    S = cache["S"] * a[..., None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", Bm, dt, xh
+    )
+    y = jnp.einsum("bn,bhnp->bhp", Cm, S) + params["D"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(-1, d_inner)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * params["norm_scale"].astype(jnp.float32)
+    out = (y.astype(dt_in) @ params["out_proj"].astype(dt_in))[:, None, :]
+    return out, {"conv_buf": new_buf, "S": S}
+
+
+# ---------------------------------------------------------------------------
+# Sequential reference (tests only)
+# ---------------------------------------------------------------------------
+
+
+def ssd_ref(x: Array, dt: Array, A: Array, Bm: Array, Cm: Array) -> Array:
+    """Step-by-step recurrence; oracle for _ssd_chunked."""
+    b, s, h, p = x.shape
+    nst = Bm.shape[-1]
+    a = jnp.exp(dt.astype(jnp.float32) * A.astype(jnp.float32))  # (B, S, H)
+
+    def body(S, t):
+        S = S * a[:, t][..., None, None] + jnp.einsum(
+            "bn,bh,bhp->bhnp", Bm[:, t].astype(jnp.float32), dt[:, t].astype(jnp.float32),
+            x[:, t].astype(jnp.float32),
+        )
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, t].astype(jnp.float32), S)
+        return S, y
+
+    S0 = jnp.zeros((b, h, nst, p), jnp.float32)
+    _, ys = jax.lax.scan(body, S0, jnp.arange(s))
+    return jnp.moveaxis(ys, 0, 1)  # (B, S, H, P)

@@ -1,0 +1,222 @@
+"""Decoder/encoder blocks assembled from attention + MLP/MoE mixers, plus
+the modality glue (VLM projector, audio feature projection).
+
+A "block" here is the standard pre-norm residual unit:
+
+    h = h + mixer(norm1(h))        # attention or SSM/xLSTM mixer
+    h = h + ffn(norm2(h))          # dense MLP or MoE (absent for SSM blocks)
+
+All block params are Param(value, logical_axes) trees (see layers.py); the
+model assembler (model.py) stacks them along a leading `layers` axis for
+lax.scan and applies jax.checkpoint per layer.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    dense_param,
+    init_mlp,
+    init_norm,
+)
+from repro.models.moe import apply_moe, init_moe
+
+Array = jax.Array
+
+
+# The activation-sharding hook lives in models/sharding_hook.py (moe.py needs
+# it too and importing transformer from moe would be circular); re-exported
+# here for the runtime.
+from repro.models.sharding_hook import set_hook as set_sharding_hook  # noqa: F401
+from repro.models.sharding_hook import shard as shard_activations  # noqa: F401
+
+
+# ---------------------------------------------------------------------------
+# Transformer block (attention + MLP / MoE)
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg) -> dict:
+    """One decoder block's params. cfg is an ArchConfig."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    head_dim = cfg.head_dim or cfg.d_model // cfg.n_heads
+    p = {
+        "norm1": init_norm(cfg.norm, cfg.d_model, cfg.dtype),
+        "attn": attn_mod.init_attention(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, head_dim,
+            qk_norm=cfg.qk_norm, dtype=cfg.dtype,
+        ),
+        "norm2": init_norm(cfg.norm, cfg.d_model, cfg.dtype),
+    }
+    if cfg.n_experts:
+        p["moe"] = init_moe(
+            k2, cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.n_experts,
+            n_shared=cfg.n_shared_experts, dtype=cfg.dtype,
+        )
+    else:
+        p["mlp"] = init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.act, cfg.dtype)
+    return p
+
+
+def init_dense_block(key, cfg) -> dict:
+    """A dense (non-MoE) block even when cfg is MoE — kimi's first layer."""
+    k1, k3 = jax.random.split(key, 2)
+    head_dim = cfg.head_dim or cfg.d_model // cfg.n_heads
+    return {
+        "norm1": init_norm(cfg.norm, cfg.d_model, cfg.dtype),
+        "attn": attn_mod.init_attention(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, head_dim,
+            qk_norm=cfg.qk_norm, dtype=cfg.dtype,
+        ),
+        "norm2": init_norm(cfg.norm, cfg.d_model, cfg.dtype),
+        "mlp": init_mlp(k3, cfg.d_model, cfg.dense_d_ff or cfg.d_ff, cfg.act, cfg.dtype),
+    }
+
+
+def apply_block(
+    params: dict,
+    h: Array,  # (B, S, D)
+    positions: Array,  # (S,)
+    cfg,
+    *,
+    causal: Optional[bool] = None,
+) -> Tuple[Array, Array]:
+    """Returns (h, moe_aux)."""
+    causal = cfg.causal if causal is None else causal
+    a_in = apply_norm(cfg.norm, params["norm1"], h)
+    a_out = attn_mod.attention(
+        params["attn"], a_in, positions,
+        causal=causal, qk_norm=cfg.qk_norm, rope=True, rope_base=cfg.rope_base,
+        impl=cfg.attn_impl, block=cfg.attn_block,
+    )
+    h = h + a_out
+    h = shard_activations(h)
+    f_in = apply_norm(cfg.norm, params["norm2"], h)
+    if "moe" in params:
+        f_out, aux = _moe_ffn(params["moe"], f_in, cfg)
+    else:
+        f_out = apply_mlp(params["mlp"], f_in, cfg.act)
+        aux = jnp.zeros((), jnp.float32)
+    h = h + f_out
+    return shard_activations(h), aux
+
+
+def _moe_ffn(moe_params: dict, f_in: Array, cfg):
+    """Route to the a2a expert-parallel implementation when the config asks
+    for it AND the runtime installed a mesh whose axes divide the shapes;
+    otherwise the GSPMD capacity-dispatch path (single-host tests, decode)."""
+    if cfg.moe_impl == "a2a":
+        from repro.models.sharding_hook import current_mesh
+
+        mesh = current_mesh()
+        if mesh is not None:
+            sizes = dict(mesh.shape)
+            tp = sizes.get("model", 1)
+            b, s, _ = f_in.shape
+            dp = 1
+            for a in ("pod", "data"):
+                dp *= sizes.get(a, 1)
+            if (cfg.n_experts % tp == 0 and s % tp == 0 and b % dp == 0
+                    and tp > 1):
+                from repro.models.moe_a2a import apply_moe_a2a
+
+                return apply_moe_a2a(
+                    mesh, moe_params, f_in, top_k=cfg.top_k,
+                    n_experts=cfg.n_experts,
+                    capacity_factor=cfg.capacity_factor,
+                    wire_dtype=cfg.moe_wire_dtype,
+                )
+    return apply_moe(
+        moe_params, f_in, top_k=cfg.top_k, n_groups=cfg.moe_groups,
+        capacity_factor=cfg.capacity_factor,
+    )
+
+
+def prefill_block(
+    params: dict,
+    h: Array,
+    positions: Array,
+    cfg,
+) -> Tuple[Array, dict, Array]:
+    """apply_block that also emits this layer's KV cache."""
+    a_in = apply_norm(cfg.norm, params["norm1"], h)
+    a_out, kv = attn_mod.prefill_attention(
+        params["attn"], a_in, positions,
+        causal=cfg.causal, qk_norm=cfg.qk_norm, rope=True, rope_base=cfg.rope_base,
+        impl=cfg.attn_impl, block=cfg.attn_block,
+    )
+    h = h + a_out
+    h = shard_activations(h)
+    f_in = apply_norm(cfg.norm, params["norm2"], h)
+    if "moe" in params:
+        f_out, aux = _moe_ffn(params["moe"], f_in, cfg)
+    else:
+        f_out = apply_mlp(params["mlp"], f_in, cfg.act)
+        aux = jnp.zeros((), jnp.float32)
+    h = h + f_out
+    return shard_activations(h), kv, aux
+
+
+def decode_block(
+    params: dict,
+    h: Array,  # (B, 1, D)
+    cache: dict,
+    pos: Array,  # scalar int32
+    cfg,
+) -> Tuple[Array, dict, Array]:
+    """One decode step through a transformer block."""
+    a_in = apply_norm(cfg.norm, params["norm1"], h)
+    a_out, new_cache = attn_mod.decode_attention(
+        params["attn"], a_in, cache, pos,
+        qk_norm=cfg.qk_norm, rope=True, rope_base=cfg.rope_base,
+    )
+    h = h + a_out
+    f_in = apply_norm(cfg.norm, params["norm2"], h)
+    if "moe" in params:
+        f_out, aux = apply_moe(
+            params["moe"], f_in, top_k=cfg.top_k, n_groups=1,
+            capacity_factor=cfg.capacity_factor,
+        )
+    else:
+        f_out = apply_mlp(params["mlp"], f_in, cfg.act)
+        aux = jnp.zeros((), jnp.float32)
+    return h + f_out, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# VLM projector (phi-3-vision stub frontend)
+# ---------------------------------------------------------------------------
+
+
+def init_vlm_projector(key, vision_dim: int, d_model: int, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": dense_param(k1, (vision_dim, d_model), (None, "embed"), dtype),
+        "w2": dense_param(k2, (d_model, d_model), ("embed", "embed_out"), dtype),
+    }
+
+
+def apply_vlm_projector(params: dict, img_embeds: Array, dtype) -> Array:
+    """(B, n_img_tokens, vision_dim) precomputed CLIP features -> (B, n, D)."""
+    h = jax.nn.gelu(img_embeds.astype(dtype) @ params["w1"].astype(dtype))
+    return h @ params["w2"].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Audio frame projection (hubert stub frontend)
+# ---------------------------------------------------------------------------
+
+
+def init_frame_proj(key, frame_dim: int, d_model: int, dtype) -> dict:
+    return {"w": dense_param(key, (frame_dim, d_model), (None, "embed"), dtype)}
+
+
+def apply_frame_proj(params: dict, features: Array, dtype) -> Array:
+    return features.astype(dtype) @ params["w"].astype(dtype)

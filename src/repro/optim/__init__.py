@@ -1,0 +1,21 @@
+"""Optimizers (hand-rolled, optax-style but fused) + schedules + compression.
+
+The Optimizer interface carries a `state_axes` derivation so runtime/steps.py
+can shard optimizer state consistently with the parameters (factored
+Adafactor states drop the factored dimension's axis).
+"""
+
+from repro.optim.optimizers import Optimizer, adamw, adafactor, sgd
+from repro.optim.schedules import constant, cosine_warmup, inverse_sqrt
+from repro.optim.compression import error_feedback_q8
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "adafactor",
+    "sgd",
+    "constant",
+    "cosine_warmup",
+    "inverse_sqrt",
+    "error_feedback_q8",
+]

@@ -1,0 +1,63 @@
+"""Gradient compression with error feedback (beyond-paper distributed trick).
+
+`error_feedback_q8(opt)` wraps an Optimizer so the gradient each step is
+int8-quantized (per-tensor-row symmetric) with the quantization error
+accumulated into a feedback buffer and re-injected next step.  This is the
+same error-feedback scheme the dictionary-learning gossip engine uses for
+its ring messages (core/distributed.py `ring_q8`), lifted to the training
+path: on a real multi-pod run the quantized gradient is what crosses the
+DCI/pod boundary, cutting cross-pod all-reduce bytes 4x while the error
+feedback keeps the optimizer unbiased in the long run (Karimireddy et al.,
+2019).
+
+State cost: one fp32 buffer per param (same as one Adam moment); enable for
+cross-pod regimes where the collective term dominates the roofline.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import Optimizer
+
+
+def _q8(x):
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dq8(q, scale):
+    return q.astype(scale.dtype) * scale
+
+
+def compress_decompress(g):
+    """The lossy channel: what the wire would carry (int8 + fp32 row scales)."""
+    gf = g.astype(jnp.float32)
+    if gf.ndim == 0:
+        return gf
+    q, s = _q8(gf)
+    return _dq8(q, s)
+
+
+def error_feedback_q8(opt: Optimizer) -> Optimizer:
+    def init(params):
+        return {
+            "inner": opt.init(params),
+            "ef": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(grads, state, params, step):
+        corrected = jax.tree.map(
+            lambda g, e: g.astype(jnp.float32) + e, grads, state["ef"]
+        )
+        sent = jax.tree.map(compress_decompress, corrected)
+        new_ef = jax.tree.map(lambda c, s: c - s, corrected, sent)
+        new_params, new_inner = opt.update(sent, state["inner"], params, step)
+        return new_params, {"inner": new_inner, "ef": new_ef}
+
+    def state_axes(param_axes):
+        return {"inner": opt.state_axes(param_axes), "ef": param_axes}
+
+    return Optimizer(init, update, state_axes, name=f"{opt.name}+efq8")

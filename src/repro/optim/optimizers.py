@@ -1,0 +1,230 @@
+"""Fused optimizers over plain pytrees of arrays.
+
+Optimizer = (init, update, state_axes):
+  init(params) -> state
+  update(grads, state, params, step) -> (new_params, new_state)
+  state_axes(param_axes_tree) -> axes tree matching state structure, so the
+    runtime can build NamedShardings for optimizer state (Adafactor's
+    factored moments drop the factored dimension's logical axis).
+
+All moments are fp32 regardless of param dtype; updates are computed in
+fp32 and cast back to the param dtype (bf16-param + fp32-state regime used
+by the 1T-class config).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, Array], tuple]
+    state_axes: Callable[[Any], Any]
+    name: str = "opt"
+
+
+def _tree_f32(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _global_norm(tree) -> Array:
+    return jnp.sqrt(
+        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(tree))
+    )
+
+
+def _clipped(grads, clip_norm: Optional[float]):
+    if clip_norm is None:
+        return grads
+    gn = _global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+
+# ---------------------------------------------------------------------------
+# SGD (+momentum) — used by tests and the dictionary-learning examples
+# ---------------------------------------------------------------------------
+
+
+def sgd(lr, momentum: float = 0.0, clip_norm: Optional[float] = None) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        if momentum:
+            return {"mu": _tree_f32(params)}
+        return {}
+
+    def update(grads, state, params, step):
+        grads = _clipped(grads, clip_norm)
+        lr_t = lr_fn(step)
+        if momentum:
+            mu = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32), state["mu"], grads
+            )
+            new_params = jax.tree.map(
+                lambda p, m: (p.astype(jnp.float32) - lr_t * m).astype(p.dtype), params, mu
+            )
+            return new_params, {"mu": mu}
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr_t * g.astype(jnp.float32)).astype(p.dtype),
+            params,
+            grads,
+        )
+        return new_params, {}
+
+    def state_axes(param_axes):
+        if momentum:
+            return {"mu": param_axes}
+        return {}
+
+    return Optimizer(init, update, state_axes, name="sgd")
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw(
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: Optional[float] = 1.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        return {"m": _tree_f32(params), "v": _tree_f32(params)}
+
+    def update(grads, state, params, step):
+        grads = _clipped(grads, clip_norm)
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / bc1
+            vh = v / bc2
+            step_ = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * step_).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v}
+
+    def state_axes(param_axes):
+        return {"m": param_axes, "v": param_axes}
+
+    return Optimizer(init, update, state_axes, name="adamw")
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; the 1T-class optimizer)
+# ---------------------------------------------------------------------------
+
+
+def _factored(shape) -> bool:
+    # Purely structural (ndim >= 2) so init and state_axes always agree;
+    # size-1 dims just degenerate gracefully (mean over a singleton).
+    return len(shape) >= 2
+
+
+def adafactor(
+    lr,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    decay_pow: float = 0.8,
+    weight_decay: float = 0.0,
+    clip_norm: Optional[float] = None,
+) -> Optimizer:
+    """Adafactor without momentum: O(sum-of-dims) state per matrix instead of
+    O(product) — 12-bytes/param Adam state is not deployable for the 1T MoE
+    on 16 GB chips (DESIGN.md §4)."""
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"f": jax.tree.map(one, params)}
+
+    def update(grads, state, params, step):
+        grads = _clipped(grads, clip_norm)
+        t = step.astype(jnp.float32) + 1.0
+        beta2t = 1.0 - t ** (-decay_pow)
+        lr_t = lr_fn(step)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if "vr" in s:
+                vr = beta2t * s["vr"] + (1 - beta2t) * jnp.mean(g2, axis=-1)
+                vc = beta2t * s["vc"] + (1 - beta2t) * jnp.mean(g2, axis=-2)
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                u = (
+                    g
+                    / jnp.sqrt(vr / jnp.maximum(denom, eps))[..., None]
+                    / jnp.sqrt(vc)[..., None, :]
+                )
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta2t * s["v"] + (1 - beta2t) * g2
+                u = g / jnp.sqrt(v)
+                new_s = {"v": v}
+            # RMS update clipping.
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            pf = p.astype(jnp.float32)
+            if weight_decay:
+                u = u + weight_decay * pf
+            return (pf - lr_t * u).astype(p.dtype), new_s
+
+        flat, treedef = jax.tree.flatten(params)
+        gflat = treedef.flatten_up_to(grads)
+        sflat = treedef.flatten_up_to(state["f"])
+        out = [upd(p, g, s) for p, g, s in zip(flat, gflat, sflat)]
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_state = {"f": treedef.unflatten([o[1] for o in out])}
+        return new_params, new_state
+
+    def state_axes(param_axes):
+        def one(axes):
+            axes = tuple(axes)
+            if len(axes) >= 2:  # mirror _factored on the axes tuple
+                return {"vr": axes[:-1], "vc": axes[:-2] + axes[-1:]}
+            return {"v": axes}
+
+        return {
+            "f": jax.tree.map(one, param_axes, is_leaf=lambda x: isinstance(x, tuple))
+        }
+
+    return Optimizer(init, update, state_axes, name="adafactor")
+
+
+def for_arch(cfg, lr=None) -> Optimizer:
+    """The deployment choice per DESIGN.md: Adafactor for the 1T-class
+    (bf16-param) config, AdamW elsewhere."""
+    if cfg.param_dtype == "bfloat16":
+        return adafactor(lr if lr is not None else 1e-3)
+    return adamw(lr if lr is not None else 3e-4)

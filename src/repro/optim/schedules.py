@@ -1,0 +1,30 @@
+"""Learning-rate schedules: step (int32 array) -> lr (fp32 scalar)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_warmup(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    """Linear warmup to peak, cosine decay to floor*peak."""
+
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return f
+
+
+def inverse_sqrt(peak_lr: float, warmup: int):
+    def f(step):
+        step = jnp.maximum(step.astype(jnp.float32), 1.0)
+        return peak_lr * jnp.minimum(step / max(warmup, 1), jnp.sqrt(warmup / step))
+
+    return f

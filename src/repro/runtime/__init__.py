@@ -1,0 +1,2 @@
+"""Distributed runtime: logical-axis sharding, step builders, fault-tolerant
+runner, elastic rescale."""

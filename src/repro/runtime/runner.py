@@ -1,0 +1,157 @@
+"""Fault-tolerant training runner: checkpoint/restart, failure recovery,
+straggler detection, elastic rescale.
+
+The runner wraps the jit'd train step with:
+  * resume-on-start from the newest complete checkpoint;
+  * periodic async checkpoints (keep-k);
+  * failure recovery — any exception from the step (device loss, preemption,
+    injected fault) triggers restore-from-last-checkpoint and replay; the
+    data stream is step-indexed so replayed batches are identical;
+  * straggler detection — steps slower than `deadline_factor` x the rolling
+    median are logged as straggler events (on a real pod this feeds the
+    controller's hot-swap logic; here it feeds tests);
+  * elastic rescale — `Runner.rescale(...)` reloads the latest checkpoint
+    with shardings for a DIFFERENT mesh and returns a new runner, which is
+    the N->M chips move (checkpoints are mesh-agnostic host arrays).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ArchConfig
+from repro.optim.optimizers import Optimizer
+from repro.runtime import sharding as shd
+from repro.runtime import steps as S
+
+
+@dataclasses.dataclass
+class RunnerConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep: int = 3
+    async_ckpt: bool = True
+    max_restarts: int = 3
+    deadline_factor: float = 3.0  # straggler threshold vs rolling median
+    log_every: int = 10
+
+
+class TrainRunner:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        mesh,
+        opt: Optimizer,
+        run_cfg: RunnerConfig,
+        *,
+        rules: Optional[dict] = None,
+        fault_hook: Optional[Callable[[int], None]] = None,
+    ):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.opt = opt
+        self.run_cfg = run_cfg
+        self.rules = shd.rules_for(cfg) if rules is None else rules
+        self.ckpt = CheckpointManager(run_cfg.ckpt_dir, keep=run_cfg.keep)
+        self.fault_hook = fault_hook
+        self.step_times: List[float] = []
+        self.events: List[Dict[str, Any]] = []
+
+        S.install_activation_sharding(mesh, self.rules)
+        self._state_sds, self._state_axes = S.abstract_train_state(cfg, opt)
+        self._shardings = S.state_shardings(mesh, self._state_sds, self._state_axes, self.rules)
+        step_fn = S.make_train_step(cfg, opt)
+        self._step = jax.jit(
+            step_fn, in_shardings=(self._shardings, None),
+            out_shardings=(self._shardings, None), donate_argnums=(0,),
+        )
+
+    # -- state ------------------------------------------------------------
+
+    def init_state(self, seed: int = 0):
+        with self.mesh:
+            state = S.init_train_state(self.cfg, self.opt, jax.random.PRNGKey(seed))
+            return jax.device_put(state, self._shardings)
+
+    def restore_or_init(self, seed: int = 0):
+        restored, step = self.ckpt.restore(self._state_sds, shardings=self._shardings)
+        if restored is None:
+            self.events.append({"kind": "init", "step": 0})
+            return self.init_state(seed)
+        self.events.append({"kind": "restore", "step": step})
+        return restored
+
+    # -- main loop ----------------------------------------------------------
+
+    def run(
+        self,
+        batches: Callable[[int], Any],
+        n_steps: int,
+        *,
+        seed: int = 0,
+        metrics_cb: Optional[Callable[[int, dict], None]] = None,
+    ):
+        """batches(step) -> batch pytree. Step-indexed so replay after a
+        restore sees identical data."""
+        rc = self.run_cfg
+        state = self.restore_or_init(seed)
+        step = int(jax.device_get(state["step"]))
+        restarts = 0
+        history = []
+        while step < n_steps:
+            t0 = time.time()
+            try:
+                if self.fault_hook is not None:
+                    self.fault_hook(step)  # may raise (injected failure)
+                batch = batches(step)
+                with self.mesh:
+                    state, metrics = self._step(state, batch)
+                metrics = {k: float(v) for k, v in jax.device_get(metrics).items()}
+            except Exception as e:  # noqa: BLE001 — any fault => restore path
+                restarts += 1
+                self.events.append({"kind": "fault", "step": step, "error": repr(e)})
+                if restarts > rc.max_restarts:
+                    raise RuntimeError(
+                        f"exceeded max_restarts={rc.max_restarts}; last error: {e!r}"
+                    ) from e
+                self.ckpt.wait()
+                state = self.restore_or_init(seed)
+                step = int(jax.device_get(state["step"]))
+                continue
+
+            dt = time.time() - t0
+            self.step_times.append(dt)
+            med = float(np.median(self.step_times[-20:]))
+            if len(self.step_times) > 5 and dt > rc.deadline_factor * med:
+                self.events.append({"kind": "straggler", "step": step, "dt": dt, "median": med})
+
+            step += 1
+            history.append(metrics)
+            if metrics_cb and step % rc.log_every == 0:
+                metrics_cb(step, metrics)
+            if step % rc.ckpt_every == 0 or step == n_steps:
+                self.ckpt.save(step, state, blocking=not rc.async_ckpt)
+        self.ckpt.wait()
+        return state, history
+
+    # -- elastic rescale -----------------------------------------------------
+
+    @classmethod
+    def rescale(
+        cls,
+        cfg: ArchConfig,
+        new_mesh,
+        opt: Optimizer,
+        run_cfg: RunnerConfig,
+        *,
+        rules: Optional[dict] = None,
+    ) -> "TrainRunner":
+        """New runner on a different mesh; restore_or_init() re-places the
+        latest (mesh-agnostic) checkpoint with the new shardings."""
+        return cls(cfg, new_mesh, opt, run_cfg, rules=rules)

@@ -1,0 +1,150 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Parameters carry logical axis names (Param.axes); this module maps them to
+PartitionSpecs for a concrete mesh, with divisibility-aware fallbacks (an
+axis only shards if the dimension divides the mesh axis size) and a
+first-come-first-served guard so no mesh axis is used twice in one spec.
+
+Default rules (DESIGN.md §4):
+  TP over `model`: heads / kv_heads / ffn / vocab / experts / ssm dims.
+  FSDP over `data`: the `embed` axis of >=8B archs (cfg.fsdp_embed).
+  DP over `pod`+`data`: the batch axis of activations and caches.
+  SP over `model`: the seq axis of the saved residual stream (training) and
+  of KV caches (decode) — softmax over a sharded axis lowers to the
+  flash-decode LSE-combine psum pattern.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisAssign = Union[None, str, Tuple[str, ...]]
+
+
+def default_rules(fsdp_embed: bool = False) -> Dict[str, AxisAssign]:
+    return {
+        # parameters
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "ffn": "model",
+        "ffn_out": None,
+        "experts": "model",
+        "expert_ffn": None,
+        "embed": "data" if fsdp_embed else None,
+        "embed_out": None,
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        # activations / caches
+        "batch": ("pod", "data"),
+        "kv_seq": "model",
+        "seq": "model",
+    }
+
+
+def rules_for(cfg, overrides: Optional[Dict[str, AxisAssign]] = None) -> Dict[str, AxisAssign]:
+    r = default_rules(getattr(cfg, "fsdp_embed", False))
+    if overrides:
+        r.update(overrides)
+    return r
+
+
+def _mesh_axes(mesh) -> Dict[str, int]:
+    # Mesh.shape is an axis-name -> size mapping (works for AbstractMesh too).
+    return dict(mesh.shape)
+
+
+def spec_for_axes(
+    mesh: Mesh,
+    axes: Sequence[Optional[str]],
+    shape: Optional[Sequence[int]],
+    rules: Dict[str, AxisAssign],
+) -> P:
+    """PartitionSpec for one tensor given logical axes (+ shape for
+    divisibility checks; pass None to skip them, e.g. when only axes exist)."""
+    sizes = _mesh_axes(mesh)
+    used = set()
+    parts = []
+    for i, name in enumerate(axes):
+        assign = rules.get(name) if name is not None else None
+        if assign is None:
+            parts.append(None)
+            continue
+        cand = (assign,) if isinstance(assign, str) else tuple(assign)
+        cand = tuple(a for a in cand if a in sizes and a not in used)
+        if not cand:
+            parts.append(None)
+            continue
+        total = 1
+        for a in cand:
+            total *= sizes[a]
+        if shape is not None and shape[i] % total != 0:
+            # try progressively smaller prefixes of the tuple
+            ok = None
+            for j in range(len(cand) - 1, 0, -1):
+                t = 1
+                for a in cand[:j]:
+                    t *= sizes[a]
+                if shape[i] % t == 0:
+                    ok = cand[:j]
+                    break
+            if ok is None:
+                parts.append(None)
+                continue
+            cand = ok
+        used.update(cand)
+        parts.append(cand if len(cand) > 1 else cand[0])
+    return P(*parts)
+
+
+def tree_shardings(mesh: Mesh, axes_tree, shape_tree, rules: Dict[str, AxisAssign]):
+    """NamedSharding tree from (axes tree, matching SDS/array tree)."""
+
+    def one(axes, arr):
+        shape = getattr(arr, "shape", None)
+        return NamedSharding(mesh, spec_for_axes(mesh, axes, shape, rules))
+
+    return jax.tree.map(
+        one, axes_tree, shape_tree, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+def batch_spec(mesh: Mesh, rules: Dict[str, AxisAssign]) -> P:
+    """Sharding for (B, ...) model inputs: batch over the DP axes."""
+    assign = rules.get("batch", ("pod", "data"))
+    cand = (assign,) if isinstance(assign, str) else tuple(assign)
+    sizes = _mesh_axes(mesh)
+    cand = tuple(a for a in cand if a in sizes)
+    return P(cand if len(cand) > 1 else (cand[0] if cand else None))
+
+
+def batch_shardings(mesh: Mesh, batch_tree, rules: Dict[str, AxisAssign]):
+    """Shard every model input on the batch (leading) dim where divisible."""
+    sizes = _mesh_axes(mesh)
+    assign = rules.get("batch", ("pod", "data"))
+    cand = (assign,) if isinstance(assign, str) else tuple(assign)
+    cand = tuple(a for a in cand if a in sizes)
+
+    def one(arr):
+        b = arr.shape[0] if arr.ndim else 0
+        use = cand
+        total = 1
+        for a in use:
+            total *= sizes[a]
+        while use and (b % total):
+            use = use[:-1]
+            total = 1
+            for a in use:
+                total *= sizes[a]
+        lead = use if len(use) > 1 else (use[0] if use else None)
+        return NamedSharding(mesh, P(lead, *([None] * (arr.ndim - 1))))
+
+    return jax.tree.map(one, batch_tree)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

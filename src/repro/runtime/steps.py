@@ -1,0 +1,301 @@
+"""Step builders: jit'd train_step / prefill_step / decode_step with
+explicit in/out shardings derived from logical axes.
+
+The same builders serve three callers:
+  * examples/ and tests     — concrete state on the host mesh;
+  * launch/train.py         — the fault-tolerant runner;
+  * launch/dryrun.py        — .lower(**ShapeDtypeStructs).compile() on the
+    512-device production mesh (no allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig, input_specs
+from repro.models import model as M
+from repro.models import transformer as tfm
+from repro.models.layers import split_tree
+from repro.optim.optimizers import Optimizer
+from repro.runtime import sharding as shd
+
+Array = jax.Array
+sds = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# Activation-sharding hook (SP for the saved residual stream)
+# ---------------------------------------------------------------------------
+
+
+def install_activation_sharding(mesh: Mesh, rules, *, seq_axis: str = "seq") -> None:
+    """Constrain (B, S, D) residuals to batch-over-DP x seq-over-model.
+
+    Divisibility-guarded: dims that don't divide stay unconstrained.  The
+    seq constraint is what makes remat-saved activations 1/TP-degree per
+    chip (Megatron-SP pattern); GSPMD inserts the all-gather at layer entry
+    and reduce-scatter at exit.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    batch_assign = rules.get("batch", ("pod", "data"))
+    batch_axes = (batch_assign,) if isinstance(batch_assign, str) else tuple(batch_assign)
+    batch_axes = tuple(a for a in batch_axes if a in sizes)
+    seq_assign = rules.get(seq_axis, "model")
+    seq_axes = () if seq_assign is None else (
+        (seq_assign,) if isinstance(seq_assign, str) else tuple(seq_assign)
+    )
+    seq_axes = tuple(a for a in seq_axes if a in sizes)
+
+    def _fit(axes_tuple, dim):
+        # Drop axes from the FRONT on divisibility failure: ("pod", "data")
+        # degrades to ("data",), which is the right fallback for MoE group
+        # dims that equal the single-pod DP degree.
+        axes_ = axes_tuple
+        while axes_ and dim % _prod(sizes, axes_):
+            axes_ = axes_[1:]
+        if not axes_:
+            return None
+        return axes_ if len(axes_) > 1 else axes_[0]
+
+    model_axes = ("model",) if "model" in sizes else ()
+
+    def hook(x, kind: str = "residual"):
+        if kind == "residual":
+            if x.ndim != 3:
+                return x
+            spec = P(_fit(batch_axes, x.shape[0]), _fit(seq_axes, x.shape[1]), None)
+        elif kind in ("moe_tokens",):  # (G, Tg, D)
+            spec = P(_fit(batch_axes, x.shape[0]), None, None)
+        elif kind in ("moe_logits", "moe_dispatch"):  # (G, Tg[*k], E)
+            spec = P(_fit(batch_axes, x.shape[0]), None, _fit(model_axes, x.shape[2]))
+        elif kind == "moe_slots":  # (G, E*cap, D)
+            spec = P(_fit(batch_axes, x.shape[0]), _fit(model_axes, x.shape[1]), None)
+        elif kind == "moe_expert":  # (G, E, cap, D|f)
+            spec = P(
+                _fit(batch_axes, x.shape[0]), _fit(model_axes, x.shape[1]), None, None
+            )
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    tfm.set_sharding_hook(hook, mesh=mesh)
+
+
+def clear_activation_sharding() -> None:
+    tfm.set_sharding_hook(lambda x, kind="residual": x)
+
+
+def _prod(sizes, axes):
+    t = 1
+    for a in axes:
+        t *= sizes[a]
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Abstract state (dry-run) and concrete state (tests/examples)
+# ---------------------------------------------------------------------------
+
+
+def abstract_params(cfg: ArchConfig) -> Tuple[Any, Any]:
+    """(SDS values tree, logical axes tree) without allocating anything."""
+    key = jax.random.PRNGKey(0)
+    ptree = jax.eval_shape(lambda k: M.init(cfg, k), key)
+    return split_tree(ptree)
+
+
+def abstract_train_state(cfg: ArchConfig, opt: Optimizer) -> Tuple[Any, Any]:
+    """(SDS state tree, axes state tree) for {"params", "opt", "step"}."""
+    vals, axes = abstract_params(cfg)
+    opt_sds = jax.eval_shape(opt.init, vals)
+    opt_axes = opt.state_axes(axes)
+    state = {"params": vals, "opt": opt_sds, "step": sds((), jnp.int32)}
+    state_axes = {"params": axes, "opt": opt_axes, "step": ()}
+    return state, state_axes
+
+
+def init_train_state(cfg: ArchConfig, opt: Optimizer, key) -> Dict[str, Any]:
+    vals, _ = split_tree(M.init(cfg, key))
+    return {"params": vals, "opt": opt.init(vals), "step": jnp.zeros((), jnp.int32)}
+
+
+def state_shardings(mesh: Mesh, state_sds, state_axes, rules):
+    def one(axes, arr):
+        if isinstance(axes, tuple) and len(axes) == 0 and getattr(arr, "ndim", 0) == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(
+            mesh, shd.spec_for_axes(mesh, axes, getattr(arr, "shape", None), rules)
+        )
+
+    return jax.tree.map(
+        one, state_axes, state_sds, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ArchConfig, opt: Optimizer):
+    def train_step(state, batch):
+        def lf(p):
+            return M.loss_fn(cfg, p, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(state["params"])
+        new_params, new_opt = opt.update(grads, state["opt"], state["params"], state["step"])
+        new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+        out_metrics = {"loss": loss, **metrics}
+        return new_state, out_metrics
+
+    return train_step
+
+
+@dataclasses.dataclass
+class CompiledStep:
+    fn: Any  # jitted callable
+    state_sharding: Any
+    batch_sharding: Any
+
+
+def jit_train_step(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    opt: Optimizer,
+    *,
+    rules: Optional[dict] = None,
+    donate: bool = True,
+) -> CompiledStep:
+    rules = shd.rules_for(cfg) if rules is None else rules
+    install_activation_sharding(mesh, rules)
+    state_sds, state_axes = abstract_train_state(cfg, opt)
+    st_shard = state_shardings(mesh, state_sds, state_axes, rules)
+    # batch sharding from a representative spec: leading dim = batch.
+    step_fn = make_train_step(cfg, opt)
+    metrics_shard = {
+        k: NamedSharding(mesh, P()) for k in ("loss", "ce", "moe_aux", "n_tokens")
+    }
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(st_shard, None),  # batch sharding supplied at lower time
+        out_shardings=(st_shard, metrics_shard),
+        donate_argnums=(0,) if donate else (),
+    )
+    return CompiledStep(jitted, st_shard, None)
+
+
+def lower_train(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    opt: Optimizer,
+    shape: ShapeConfig,
+    *,
+    rules: Optional[dict] = None,
+):
+    """lower() the train step for the dry-run. Returns the Lowered object."""
+    rules = shd.rules_for(cfg) if rules is None else rules
+    install_activation_sharding(mesh, rules)
+    state_sds, state_axes = abstract_train_state(cfg, opt)
+    st_shard = state_shardings(mesh, state_sds, state_axes, rules)
+    batch = input_specs(cfg, shape)
+    b_shard = shd.batch_shardings(mesh, batch, rules)
+    metrics_shard = {
+        k: NamedSharding(mesh, P()) for k in ("loss", "ce", "moe_aux", "n_tokens")
+    }
+    step_fn = make_train_step(cfg, opt)
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(st_shard, b_shard),
+        out_shardings=(st_shard, metrics_shard),
+        donate_argnums=(0,),
+    )
+    with mesh:
+        return jitted.lower(state_sds, batch)
+
+
+# ---------------------------------------------------------------------------
+# Serve steps (prefill + decode)
+# ---------------------------------------------------------------------------
+
+
+def make_decode_step(cfg: ArchConfig):
+    def serve_step(params, cache, tokens, pos):
+        logits, new_cache = M.decode_step(cfg, params, cache, tokens, pos)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        logits, cache = M.prefill(cfg, params, batch)
+        return logits[:, -1:, :], cache
+
+    return prefill_step
+
+
+def lower_decode(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    shape: ShapeConfig,
+    *,
+    rules: Optional[dict] = None,
+):
+    """Lower one decode step: new token with a KV/state cache of seq_len."""
+    rules = shd.rules_for(cfg) if rules is None else rules
+    install_activation_sharding(mesh, rules)
+    p_sds, p_axes = abstract_params(cfg)
+    p_shard = state_shardings(mesh, p_sds, p_axes, rules)
+    cache_sds, cache_axes = M.cache_specs(cfg, shape.global_batch, shape.seq_len)
+    c_shard = state_shardings(mesh, cache_sds, cache_axes, rules)
+    tok = sds((shape.global_batch, 1), jnp.int32)
+    t_shard = shd.batch_shardings(mesh, tok, rules)
+    nt_shard = shd.batch_shardings(mesh, sds((shape.global_batch,), jnp.int32), rules)
+    pos = sds((), jnp.int32)
+    step_fn = make_decode_step(cfg)
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(p_shard, c_shard, t_shard, NamedSharding(mesh, P())),
+        out_shardings=(nt_shard, c_shard),
+        donate_argnums=(1,),
+    )
+    with mesh:
+        return jitted.lower(p_sds, cache_sds, tok, pos)
+
+
+def lower_prefill(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    shape: ShapeConfig,
+    *,
+    rules: Optional[dict] = None,
+):
+    rules = shd.rules_for(cfg) if rules is None else rules
+    install_activation_sharding(mesh, rules)
+    p_sds, p_axes = abstract_params(cfg)
+    p_shard = state_shardings(mesh, p_sds, p_axes, rules)
+    batch = input_specs(cfg, shape)
+    b_shard = shd.batch_shardings(mesh, batch, rules)
+    step_fn = make_prefill_step(cfg)
+
+    if cfg.family == "audio":
+        out_shardings = None  # (logits, None) — let GSPMD place them
+    else:
+        cache_sds, cache_axes = M.cache_specs(cfg, shape.global_batch, shape.seq_len)
+        c_shard = state_shardings(mesh, cache_sds, cache_axes, rules)
+        out_shardings = (shd.batch_shardings(mesh, jax.eval_shape(
+            lambda: jnp.zeros((shape.global_batch, 1, cfg.vocab), jnp.float32)), rules), c_shard)
+
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(p_shard, b_shard),
+        out_shardings=out_shardings,
+    )
+    with mesh:
+        return jitted.lower(p_sds, batch)

@@ -1,0 +1,31 @@
+"""Shared pytest fixtures.
+
+NOTE: no XLA_FLAGS here on purpose — unit/smoke tests must see the real
+single CPU device (the 512-device override belongs to launch/dryrun.py
+ONLY).  Tests that need a multi-device mesh spawn a subprocess with the
+flag set in its environment (see test_distributed_engine.py, test_runner.py).
+"""
+
+import os
+import sys
+import pathlib
+
+import numpy as np
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+SRC = REPO / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def subprocess_env(n_devices: int = 8):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = str(SRC)
+    return env

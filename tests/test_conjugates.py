@@ -1,0 +1,140 @@
+"""Property tests for the conjugate-function machinery (paper Tables I-II,
+Appendix A) — the mathematical foundation of the dual protocol."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.conjugates import (
+    make_elastic_net,
+    make_huber_residual,
+    make_l2_residual,
+    make_nonneg_elastic_net,
+    make_task,
+    soft_threshold,
+    soft_threshold_pos,
+)
+
+settings.register_profile("fast", max_examples=25, deadline=None)
+settings.load_profile("fast")
+
+floats = st.floats(-10.0, 10.0, allow_nan=False, allow_infinity=False)
+
+
+# ---------------------------------------------------------------------------
+# Thresholding operators (Fig. 3)
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(floats, min_size=1, max_size=16), st.floats(0.01, 5.0))
+def test_soft_threshold_properties(xs, lam):
+    x = jnp.asarray(xs)
+    t = soft_threshold(x, lam)
+    assert bool(jnp.all(jnp.abs(t) <= jnp.abs(x) + 1e-6))  # shrinkage
+    assert bool(jnp.all(t * x >= -1e-6))  # sign preservation
+    big = jnp.abs(x) > lam
+    # beyond the threshold the shrink is exactly lam
+    np.testing.assert_allclose(
+        np.abs(np.asarray(t))[np.asarray(big)],
+        (np.abs(np.asarray(x)) - lam)[np.asarray(big)],
+        rtol=1e-5, atol=1e-6,
+    )
+    assert bool(jnp.all(jnp.where(~big, t == 0, True)))
+
+
+@given(st.lists(floats, min_size=1, max_size=16), st.floats(0.01, 5.0))
+def test_one_sided_threshold(xs, lam):
+    x = jnp.asarray(xs)
+    t = soft_threshold_pos(x, lam)
+    assert bool(jnp.all(t >= 0))
+    np.testing.assert_allclose(np.asarray(t), np.maximum(np.asarray(x) - lam, 0.0), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Fenchel-Young (in)equality: h*(v) = v.ystar - h(ystar) >= v.y - h(y)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    st.integers(1, 12),
+    st.floats(0.05, 2.0),
+    st.floats(0.05, 2.0),
+    st.integers(0, 2**31 - 1),
+    st.booleans(),
+)
+def test_fenchel_young_elastic_net(k, gamma, delta, seed, nonneg):
+    reg = make_nonneg_elastic_net(gamma, delta) if nonneg else make_elastic_net(gamma, delta)
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.normal(size=(k,)), jnp.float32)
+    ystar = reg.ystar(v)
+    hstar = reg.hstar(v)
+    val_at_star = jnp.dot(v, ystar) - reg.h(ystar)
+    # equality at the maximizer (closed forms from Appendix A)
+    np.testing.assert_allclose(float(hstar), float(val_at_star), rtol=1e-4, atol=1e-5)
+    # inequality at random feasible y
+    for _ in range(5):
+        y = jnp.asarray(rng.normal(size=(k,)), jnp.float32)
+        if nonneg:
+            y = jnp.abs(y)
+        assert float(jnp.dot(v, y) - reg.h(y)) <= float(hstar) + 1e-4
+
+
+@given(st.integers(1, 12), st.integers(0, 2**31 - 1))
+def test_fenchel_young_l2(m, seed):
+    res = make_l2_residual()
+    rng = np.random.default_rng(seed)
+    nu = jnp.asarray(rng.normal(size=(m,)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(m,)), jnp.float32)
+    # f(u) + f*(nu) >= nu.u, equality at u = nu (since grad f*(nu) = nu)
+    assert float(res.f(u) + res.fstar(nu)) >= float(jnp.dot(nu, u)) - 1e-5
+    np.testing.assert_allclose(
+        float(res.f(nu) + res.fstar(nu)), float(jnp.dot(nu, nu)), rtol=1e-5
+    )
+
+
+@given(st.integers(1, 12), st.floats(0.05, 1.0), st.integers(0, 2**31 - 1))
+def test_fenchel_young_huber(m, eta, seed):
+    res = make_huber_residual(eta)
+    rng = np.random.default_rng(seed)
+    nu = jnp.clip(jnp.asarray(rng.normal(size=(m,)), jnp.float32), -1.0, 1.0)
+    for _ in range(5):
+        u = jnp.asarray(rng.normal(size=(m,)) * 3, jnp.float32)
+        assert float(res.f(u) + res.fstar(nu)) >= float(jnp.dot(nu, u)) - 1e-4
+    # the maximizer of nu.u - f(u) is u = eta*nu (interior of |nu|<=1)
+    u_star = eta * nu
+    np.testing.assert_allclose(
+        float(jnp.dot(nu, u_star) - res.f(u_star)), float(res.fstar(nu)), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_huber_projection():
+    res = make_huber_residual(0.2)
+    nu = jnp.asarray([-3.0, -0.5, 0.0, 0.7, 42.0])
+    np.testing.assert_allclose(
+        np.asarray(res.project_dual(nu)), [-1.0, -0.5, 0.0, 0.7, 1.0]
+    )
+    assert res.bounded_dual and not res.strongly_convex
+
+
+# ---------------------------------------------------------------------------
+# ystar is the gradient of hstar (Danskin) — finite-difference check
+# ---------------------------------------------------------------------------
+
+
+@given(st.floats(0.05, 2.0), st.floats(0.1, 2.0), st.integers(0, 2**31 - 1))
+def test_ystar_is_grad_hstar(gamma, delta, seed):
+    reg = make_elastic_net(gamma, delta)
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.normal(size=(6,)), jnp.float32)
+    g_auto = jax.grad(lambda vv: reg.hstar(vv))(v)
+    np.testing.assert_allclose(np.asarray(g_auto), np.asarray(reg.ystar(v)), rtol=2e-3, atol=2e-3)
+
+
+def test_task_registry():
+    for name in ("sparse_svd", "bi_clustering", "nmf", "nmf_huber"):
+        res, reg = make_task(name)
+        assert res is not None and reg is not None
+    with pytest.raises(KeyError):
+        make_task("nope")

@@ -1,0 +1,154 @@
+"""Multi-device tests for the shard_map production engine — run in a
+subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8 so the
+main pytest process keeps its single-device view (see conftest)."""
+
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from conftest import REPO, subprocess_env
+
+
+def _run(code: str, n_devices: int = 8, timeout: int = 900):
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        env=subprocess_env(n_devices), cwd=str(REPO),
+        capture_output=True, text=True, timeout=timeout,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-4000:]}"
+    return proc.stdout
+
+
+@pytest.mark.slow
+def test_all_gossip_modes_converge_to_centralized():
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from repro.core.conjugates import make_task
+        from repro.core.distributed import DistributedSparseCoder, DistConfig, make_debug_mesh
+        from repro.core.inference import fista_infer, snr_db
+
+        res, reg = make_task("nmf", gamma=0.05, delta=0.1)
+        mesh = make_debug_mesh(model=4, data=2)
+        M, K, B = 24, 32, 8
+        W = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (M, K)))
+        W = W / jnp.linalg.norm(W, axis=0)
+        x = jax.random.normal(jax.random.PRNGKey(2), (B, M))
+        nu_ref = fista_infer(res, reg, W, x, iters=800)
+
+        # exact uses a conservative Frobenius-style 1/L (safe but slow) —
+        # give it the iterations it needs; fista converges ~30x faster
+        expect = {"exact": 40, "exact_fista": 60, "ring": 25, "ring_q8": 20, "ring_async": 20}
+        for mode, min_snr in expect.items():
+            iters = 3000 if mode.startswith("ring") else (5000 if mode == "exact" else 600)
+            coder = DistributedSparseCoder(mesh, res, reg, DistConfig(mode=mode, iters=iters))
+            Ws, xs = coder.shard(W, x)
+            nu, y = coder.solve(Ws, xs)
+            snr = float(snr_db(nu_ref, nu))
+            print(mode, snr)
+            assert snr > min_snr, (mode, snr)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_distributed_fit_and_score_match_single_host():
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.conjugates import make_task
+        from repro.core.distributed import DistributedSparseCoder, DistConfig, make_debug_mesh
+        from repro.core.inference import fista_infer, recover_y, snr_db
+        from repro.core.detection import exact_score
+        from repro.core.dictionary import dict_update, project_nonneg_unit_cols
+
+        res, reg = make_task("nmf", gamma=0.05, delta=0.1)
+        mesh = make_debug_mesh(model=4, data=2)
+        M, K, B = 24, 32, 8
+        W = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (M, K)))
+        W = W / jnp.linalg.norm(W, axis=0)
+        x = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (B, M)))
+
+        coder = DistributedSparseCoder(mesh, res, reg, DistConfig(mode="exact_fista", iters=400))
+        Ws, xs = coder.shard(W, x)
+
+        # fit: one distributed dictionary step == the single-host update
+        W2 = coder.fit_batch(Ws, xs, 0.05)
+        nu = fista_infer(res, reg, W, x, iters=800)
+        y = recover_y(reg, W, nu)
+        W2_ref = project_nonneg_unit_cols(W + 0.05 * nu.T @ y / B)
+        err = float(jnp.max(jnp.abs(jnp.asarray(W2) - W2_ref)))
+        print("fit err", err)
+        assert err < 1e-3
+
+        # score: distributed psum aggregation == exact formula
+        s = coder.score(Ws, xs)
+        s_ref = exact_score(res, reg, W, nu, x)
+        snr = float(snr_db(s_ref, jnp.asarray(s)))
+        print("score snr", snr)
+        assert snr > 30
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_single_informed_agent_production_engine():
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from repro.core.conjugates import make_task
+        from repro.core.distributed import DistributedSparseCoder, DistConfig, make_debug_mesh
+        from repro.core.inference import fista_infer, snr_db
+
+        res, reg = make_task("sparse_svd", gamma=0.05, delta=0.1)
+        mesh = make_debug_mesh(model=8, data=1)
+        M, K, B = 16, 32, 4
+        W = jax.random.normal(jax.random.PRNGKey(1), (M, K))
+        W = W / jnp.linalg.norm(W, axis=0)
+        x = jax.random.normal(jax.random.PRNGKey(2), (B, M))
+        nu_ref = fista_infer(res, reg, W, x, iters=800)
+
+        # informed=one maximizes gradient heterogeneity across agents, so the
+        # O(mu^2) bias needs a small explicit step + many iterations
+        coder = DistributedSparseCoder(
+            mesh, res, reg, DistConfig(mode="ring", iters=40000, informed="one", mu=0.003))
+        Ws, xs = coder.shard(W, x)
+        nu, _ = coder.solve(Ws, xs)
+        snr = float(snr_db(nu_ref, nu))
+        print("informed=one snr", snr)
+        assert snr > 20
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_kernel_inside_shard_map():
+    """use_kernel=True routes the hot loop through the Pallas kernel
+    (interpret mode) and must agree with the jnp path."""
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from repro.core.conjugates import make_task
+        from repro.core.distributed import DistributedSparseCoder, DistConfig, make_debug_mesh
+        from repro.core.inference import snr_db
+
+        res, reg = make_task("sparse_svd", gamma=0.05, delta=0.1)
+        mesh = make_debug_mesh(model=2, data=2)
+        M, K, B = 32, 64, 8
+        W = jax.random.normal(jax.random.PRNGKey(1), (M, K))
+        W = W / jnp.linalg.norm(W, axis=0)
+        x = jax.random.normal(jax.random.PRNGKey(2), (B, M))
+
+        a = DistributedSparseCoder(mesh, res, reg, DistConfig(mode="exact", iters=100))
+        b = DistributedSparseCoder(mesh, res, reg,
+                                   DistConfig(mode="exact", iters=100, use_kernel=True))
+        Ws, xs = a.shard(W, x)
+        nu_a, _ = a.solve(Ws, xs)
+        nu_b, _ = b.solve(Ws, xs)
+        snr = float(snr_db(jnp.asarray(nu_a), jnp.asarray(nu_b)))
+        print("kernel-vs-jnp snr", snr)
+        assert snr > 50
+        print("OK")
+    """, n_devices=4)
+    assert "OK" in out

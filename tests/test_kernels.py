@@ -1,0 +1,150 @@
+"""Pallas kernel sweeps: every kernel vs its pure-jnp ref.py oracle across
+shapes (including non-tile-aligned), dtypes, and flag combinations — in
+interpret mode (the container is CPU; TPU is the lowering target)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.dict_dual_step.ops import dict_dual_step
+from repro.kernels.dict_dual_step.ref import dict_dual_step_ref
+from repro.kernels.flash_attention.ops import flash_attention, flash_decode
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+# ---------------------------------------------------------------------------
+# dict_dual_step
+# ---------------------------------------------------------------------------
+
+DD_SHAPES = [
+    # (M, K, B) — aligned and deliberately non-aligned
+    (128, 512, 128),
+    (100, 49, 5),
+    (96, 196, 1),
+    (100, 196, 4),   # the paper's image-denoising geometry
+    (257, 33, 17),
+    (8, 1024, 256),
+]
+
+
+@pytest.mark.parametrize("m,k,b", DD_SHAPES)
+@pytest.mark.parametrize("nonneg", [False, True])
+def test_dict_dual_step_sweep(m, k, b, nonneg):
+    key = jax.random.PRNGKey(m * 1000 + k)
+    W = jax.random.normal(key, (m, k), jnp.float32)
+    nu = jax.random.normal(jax.random.PRNGKey(b), (b, m), jnp.float32)
+    y, g = dict_dual_step(W, nu, gamma=0.1, delta=0.1, nonneg=nonneg, interpret=True)
+    yr, gr = dict_dual_step_ref(W, nu, gamma=0.1, delta=0.1, nonneg=nonneg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=1e-4, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dict_dual_step_dtypes(dtype):
+    key = jax.random.PRNGKey(0)
+    W = jax.random.normal(key, (64, 96), dtype)
+    nu = jax.random.normal(jax.random.PRNGKey(1), (16, 64), dtype)
+    y, g = dict_dual_step(W, nu, gamma=0.1, delta=0.1, interpret=True)
+    yr, gr = dict_dual_step_ref(W, nu, gamma=0.1, delta=0.1)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(yr, np.float32), rtol=tol, atol=tol
+    )
+    np.testing.assert_allclose(
+        np.asarray(g, np.float32), np.asarray(gr, np.float32), rtol=tol, atol=5 * tol
+    )
+
+
+def test_dict_dual_step_vector_input():
+    W = jax.random.normal(jax.random.PRNGKey(0), (32, 48))
+    nu = jax.random.normal(jax.random.PRNGKey(1), (32,))
+    y, g = dict_dual_step(W, nu, gamma=0.05, delta=0.1, interpret=True)
+    assert y.shape == (48,) and g.shape == (32,)
+
+
+def test_dict_dual_step_block_shapes():
+    """Different BlockSpec tilings give identical results."""
+    W = jax.random.normal(jax.random.PRNGKey(0), (130, 300))
+    nu = jax.random.normal(jax.random.PRNGKey(1), (37, 130))
+    outs = []
+    for bb, bk in [(8, 128), (16, 256), (128, 512)]:
+        y, g = dict_dual_step(W, nu, gamma=0.1, delta=0.1, block_b=bb, block_k=bk,
+                              interpret=True)
+        outs.append((np.asarray(y), np.asarray(g)))
+    for y, g in outs[1:]:
+        # tilings change fp32 accumulation order; bitwise equality is not
+        # expected, 1e-3 absolute is (values are O(10))
+        np.testing.assert_allclose(y, outs[0][0], rtol=1e-3, atol=2e-3)
+        np.testing.assert_allclose(g, outs[0][1], rtol=1e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FA_SHAPES = [
+    # (B, Hq, Hkv, S, T, D)
+    (1, 4, 4, 128, 128, 32),
+    (2, 8, 2, 128, 128, 64),   # GQA 4:1
+    (1, 4, 1, 256, 256, 32),   # MQA
+    (2, 4, 4, 100, 100, 32),   # non-aligned seq
+    (1, 2, 2, 64, 192, 32),    # cross: T > S (decode-history geometry)
+]
+
+
+@pytest.mark.parametrize("b,hq,hkv,s,t,d", FA_SHAPES)
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(b, hq, hkv, s, t, d, causal):
+    if causal and t < s:
+        pytest.skip("causal requires T >= S")
+    key = jax.random.PRNGKey(s * 7 + t)
+    q = jax.random.normal(key, (b, hq, s, d), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, hkv, t, d), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, hkv, t, d), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 128, 32), jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 128, 32), jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 4, 128, 32), jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=5e-2, atol=5e-2
+    )
+
+
+def test_flash_decode_lengths():
+    """flash_decode with per-sequence valid lengths == ref on the valid prefix."""
+    b, hq, hkv, t, d = 3, 8, 4, 64, 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, hq, 1, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, hkv, t, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, hkv, t, d))
+    lengths = jnp.asarray([5, 32, 64], jnp.int32)
+    out = flash_decode(q, k, v, length=lengths)
+    for i, L in enumerate([5, 32, 64]):
+        ref = attention_ref(q[i : i + 1], k[i : i + 1, :, :L], v[i : i + 1, :, :L], causal=False)
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(ref[0]), rtol=1e-4, atol=1e-4)
+
+
+def test_blockwise_matches_pallas_and_dense():
+    """The three attention paths in models/attention.py agree."""
+    from repro.models.attention import _blockwise_attention, _dense_attention
+
+    b, h, s, d = 2, 4, 96, 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, d))
+    pos = jnp.arange(s, dtype=jnp.int32)
+    dense = _dense_attention(q, k, v, causal=True, q_pos=pos, k_pos=pos)
+    blockw = _blockwise_attention(q, k, v, causal=True, q_pos=pos, k_pos=pos, block=32)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(blockw), rtol=1e-4, atol=1e-4)
+    pallas = flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=True, interpret=True,
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(pallas), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,254 @@
+"""Per-arch smoke tests (deliverable f): every assigned architecture's
+REDUCED config runs one forward + one train step on CPU with correct output
+shapes and no NaNs; plus chunked-vs-sequential oracles for the SSM/xLSTM
+math and prefill/decode consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.base import SHAPES, cell_supported, input_specs
+from repro.models import model as M
+from repro.models.layers import split_tree
+from repro.optim import adamw
+
+settings.register_profile("fast", max_examples=10, deadline=None)
+settings.load_profile("fast")
+
+
+def _batch_for(cfg, b=2, s=32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    if cfg.family == "audio":
+        return {
+            "features": jax.random.normal(key, (b, s, cfg.frame_dim)),
+            "targets": jax.random.randint(key, (b, s), 0, cfg.vocab),
+            "mask": jnp.ones((b, s), bool),
+        }
+    if cfg.family == "vlm":
+        return {
+            "tokens": jax.random.randint(key, (b, max(s - cfg.n_img_tokens, 8)), 0, cfg.vocab),
+            "img_embeds": jax.random.normal(key, (b, cfg.n_img_tokens, cfg.vision_dim)),
+        }
+    return {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab)}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    params, axes = split_tree(M.init(cfg, jax.random.PRNGKey(0)))
+    batch = _batch_for(cfg)
+    b = batch.get("tokens", batch.get("features")).shape[0]
+
+    logits, aux = M.forward(cfg, params, batch)
+    s_expect = 32 if cfg.family != "vlm" else cfg.n_img_tokens + batch["tokens"].shape[1]
+    assert logits.shape == (b, s_expect, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
+
+    # one full train step through the optimizer
+    opt = adamw(1e-3)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(p, os):
+        (loss, m), grads = jax.value_and_grad(
+            lambda pp: M.loss_fn(cfg, pp, batch), has_aux=True
+        )(p)
+        p2, os2 = opt.update(grads, os, p, jnp.zeros((), jnp.int32))
+        return p2, os2, loss
+
+    p2, os2, loss = step(params, opt_state)
+    assert bool(jnp.isfinite(loss)), arch
+    # params actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b_.astype(jnp.float32)))) > 0
+        for a, b_ in zip(jax.tree.leaves(params), jax.tree.leaves(p2))
+    )
+    assert moved, arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_loss_decreases(arch):
+    """A few steps on a fixed batch must reduce the loss (training sanity)."""
+    cfg = get_smoke_config(arch)
+    params, _ = split_tree(M.init(cfg, jax.random.PRNGKey(0)))
+    batch = _batch_for(cfg)
+    opt = adamw(3e-3)
+    os_ = opt.init(params)
+
+    @jax.jit
+    def step(p, os, i):
+        (loss, m), grads = jax.value_and_grad(
+            lambda pp: M.loss_fn(cfg, pp, batch), has_aux=True
+        )(p)
+        p2, os2 = opt.update(grads, os, p, i)
+        return p2, os2, loss
+
+    losses = []
+    for i in range(8):
+        params, os_, loss = step(params, os_, jnp.asarray(i, jnp.int32))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], f"{arch}: {losses}"
+
+
+@pytest.mark.parametrize("arch", ["qwen3_32b", "zamba2_1p2b", "xlstm_1p3b", "gemma_2b"])
+def test_prefill_decode_consistency(arch):
+    """Teacher-forced decode reproduces the forward logits (the serving path
+    computes the same function as training)."""
+    cfg = get_smoke_config(arch)
+    params, _ = split_tree(M.init(cfg, jax.random.PRNGKey(1)))
+    b, s = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0, cfg.vocab)
+    logits_full, _ = M.forward(cfg, params, {"tokens": toks})
+
+    cache = M.init_cache(cfg, b, s)
+    outs = []
+    for t in range(s):
+        lg, cache = M.decode_step(cfg, params, cache, toks[:, t : t + 1], jnp.asarray(t, jnp.int32))
+        outs.append(lg)
+    logits_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(logits_full, np.float32), np.asarray(logits_dec, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+@pytest.mark.parametrize("arch", ["qwen3_32b", "zamba2_1p2b", "xlstm_1p3b"])
+def test_prefill_cache_continues_decode(arch):
+    """prefill() at length s then decode must equal full forward at s+1."""
+    cfg = get_smoke_config(arch)
+    params, _ = split_tree(M.init(cfg, jax.random.PRNGKey(3)))
+    b, s = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(4), (b, s + 1), 0, cfg.vocab)
+    logits_full, _ = M.forward(cfg, params, {"tokens": toks})
+
+    logits_pre, cache = M.prefill(cfg, params, {"tokens": toks[:, :s]})
+    if cfg.family in ("dense", "vlm", "moe"):
+        # grow the kv cache to s+1
+        full_cache = M.init_cache(cfg, b, s + 1)
+        cache = jax.tree.map(
+            lambda full, part: jax.lax.dynamic_update_slice(
+                full, part.astype(full.dtype), (0,) * full.ndim
+            ),
+            full_cache, cache,
+        )
+    elif cfg.family == "hybrid":
+        full_cache = M.init_cache(cfg, b, s + 1)
+        cache = {
+            "mamba": cache["mamba"],
+            "attn": jax.tree.map(
+                lambda full, part: jax.lax.dynamic_update_slice(
+                    full, part.astype(full.dtype), (0,) * full.ndim
+                ),
+                full_cache["attn"], cache["attn"],
+            ),
+            **({"mamba_tail": cache["mamba_tail"]} if "mamba_tail" in cache else {}),
+        }
+    lg, _ = M.decode_step(cfg, params, cache, toks[:, s : s + 1], jnp.asarray(s, jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(logits_full[:, s], np.float32), np.asarray(lg[:, 0], np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits_full[:, :s], np.float32), np.asarray(logits_pre, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Chunked-scan oracles (hypothesis over shapes/chunks)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    st.integers(1, 3), st.sampled_from([16, 32, 48]), st.integers(1, 4),
+    st.sampled_from([4, 8, 16]), st.sampled_from([4, 8]), st.sampled_from([8, 16, 64]),
+)
+def test_ssd_chunked_vs_sequential(b, s, h, p, nst, chunk):
+    from repro.models.ssm import _ssd_chunked, ssd_ref
+
+    k = jax.random.PRNGKey(b * s + h)
+    x = jax.random.normal(k, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (b, s, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (h,)) * 0.3)
+    Bm = jax.random.normal(jax.random.PRNGKey(3), (b, s, nst))
+    Cm = jax.random.normal(jax.random.PRNGKey(4), (b, s, nst))
+    y, _ = _ssd_chunked(x, dt, A, Bm, Cm, chunk)
+    yr = ssd_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-3, atol=1e-3)
+
+
+@given(
+    st.integers(1, 2), st.sampled_from([16, 32, 64]), st.integers(1, 3),
+    st.sampled_from([8, 16]), st.sampled_from([8, 16, 32]),
+)
+def test_mlstm_chunked_vs_sequential(b, s, h, p, chunk):
+    from repro.models.xlstm import _mlstm_chunked, mlstm_ref
+
+    key = jax.random.PRNGKey(s + h)
+    q = jax.random.normal(key, (b, s, h, p))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, p))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, p))
+    ig = jax.random.normal(jax.random.PRNGKey(3), (b, s, h))
+    fg = jax.random.normal(jax.random.PRNGKey(4), (b, s, h)) + 2.0
+    out, _ = _mlstm_chunked(q, k, v, ig, fg, chunk)
+    ref = mlstm_ref(q, k, v, ig, fg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3)
+
+
+def test_moe_dispatch_vs_dense_ref():
+    from repro.models.moe import apply_moe, init_moe, moe_ref
+    from repro.models.layers import split_tree as split
+
+    key = jax.random.PRNGKey(0)
+    p, _ = split(init_moe(key, 32, 16, 8, dtype=jnp.float32))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 32))
+    out, aux = apply_moe(p, x, top_k=2, n_groups=2, capacity_factor=4.0)
+    ref = moe_ref(p, x, top_k=2)
+    # with a generous capacity factor no tokens are dropped => exact match
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+    assert float(aux) > 0
+
+
+def test_full_configs_param_counts():
+    """The assigned configs hit their nameplate parameter classes."""
+    expect = {
+        "zamba2_1p2b": (0.9e9, 1.6e9),
+        "qwen3_32b": (28e9, 36e9),
+        "olmo_1b": (0.9e9, 1.5e9),
+        "granite_8b": (7e9, 9e9),
+        "gemma_2b": (2.0e9, 3.2e9),
+        "phi3_vision_4p2b": (3.5e9, 4.8e9),
+        "kimi_k2_1t_a32b": (0.9e12, 1.15e12),
+        "granite_moe_1b_a400m": (0.9e9, 1.5e9),
+        # nominal "1.3b"; with the paper's proj_factor=2 + block-diag qkv the
+        # exact config lands at 1.82B (DESIGN.md §6 notes the deviation)
+        "xlstm_1p3b": (1.0e9, 2.0e9),
+        "hubert_xlarge": (0.8e9, 1.3e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_counts()["total"]
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]B"
+    # MoE active < total
+    kimi = get_config("kimi_k2_1t_a32b").param_counts()
+    assert kimi["active"] < 0.1 * kimi["total"]
+
+
+def test_input_specs_and_skips():
+    """Every (arch x shape) cell is either well-defined or an explicit skip."""
+    n_ok = n_skip = 0
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, reason = cell_supported(cfg, shape)
+            if not ok:
+                n_skip += 1
+                assert reason
+                continue
+            n_ok += 1
+            specs = input_specs(cfg, shape)
+            assert all(hasattr(s, "shape") for s in jax.tree.leaves(specs))
+    assert n_ok + n_skip == 40
+    assert n_skip == 9  # 7 long_500k skips + hubert decode_32k + hubert long? (see DESIGN)

@@ -1,0 +1,128 @@
+"""Optimizers: convergence on a quadratic, state/axes structural agreement,
+error-feedback compression, schedules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adamw, adafactor, sgd, error_feedback_q8
+from repro.optim.schedules import constant, cosine_warmup, inverse_sqrt
+
+
+def _quadratic_problem(seed=0, n=12):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(n, n)).astype(np.float32)
+    A = A @ A.T / n + np.eye(n, dtype=np.float32)
+    b = rng.normal(size=(n,)).astype(np.float32)
+    params = {"w": jnp.asarray(rng.normal(size=(n, 1)).astype(np.float32)),
+              "bias": jnp.zeros((1,))}
+
+    def loss(p):
+        w = p["w"][:, 0]
+        return 0.5 * w @ jnp.asarray(A) @ w - jnp.asarray(b) @ w + p["bias"][0] ** 2
+
+    return params, loss
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: sgd(0.05), lambda: sgd(0.05, momentum=0.9),
+    lambda: adamw(0.05, weight_decay=0.0), lambda: adafactor(0.2),
+    lambda: error_feedback_q8(adamw(0.05, weight_decay=0.0)),
+])
+def test_optimizers_minimize_quadratic(make_opt):
+    params, loss = _quadratic_problem()
+    opt = make_opt()
+    state = opt.init(params)
+    l0 = float(loss(params))
+    for i in range(200):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, jnp.asarray(i, jnp.int32))
+    l1 = float(loss(params))
+    assert l1 < 0.05 * abs(l0) + 1e-3, (l0, l1)
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: sgd(0.1, momentum=0.9), lambda: adamw(1e-3), lambda: adafactor(1e-2),
+    lambda: error_feedback_q8(adafactor(1e-2)),
+])
+def test_state_axes_structure_matches_state(make_opt):
+    """state_axes(param_axes) must mirror init(params) exactly — the dry-run
+    builds optimizer-state shardings from it (incl. the (1, d) edge case that
+    broke the kimi cell)."""
+    opt = make_opt()
+    params = {
+        "w": jnp.zeros((4, 8)),
+        "b": jnp.zeros((8,)),
+        "edge": jnp.zeros((1, 8)),  # leading singleton (kimi first_dense=1)
+        "deep": {"u": jnp.zeros((2, 3, 5))},
+    }
+    axes = {
+        "w": ("embed", "ffn"), "b": (None,), "edge": (None, "ffn"),
+        "deep": {"u": (None, "embed", None)},
+    }
+    state = opt.init(params)
+    ax = opt.state_axes(axes)
+    sdef = jax.tree.structure(state)
+    adef = jax.tree.structure(ax, is_leaf=lambda x: isinstance(x, tuple))
+    assert sdef == adef, f"\nstate: {sdef}\naxes:  {adef}"
+    # every axes tuple has the same rank as its state leaf
+    for leaf, a in zip(jax.tree.leaves(state),
+                       jax.tree.leaves(ax, is_leaf=lambda x: isinstance(x, tuple))):
+        assert leaf.ndim == len(a), (leaf.shape, a)
+
+
+def test_adafactor_memory_is_factored():
+    opt = adafactor(1e-2)
+    p = {"big": jnp.zeros((512, 1024))}
+    state = opt.init(p)
+    n_state = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(state))
+    assert n_state == 512 + 1024  # O(sum), not O(product)
+
+
+def test_error_feedback_tracks_uncompressed():
+    """With error feedback, compressed SGD follows plain SGD closely on a
+    smooth problem (the bias telescopes)."""
+    params, loss = _quadratic_problem(seed=3)
+    p1, p2 = params, jax.tree.map(lambda x: x, params)
+    o1, o2 = sgd(0.03), error_feedback_q8(sgd(0.03))
+    s1, s2 = o1.init(p1), o2.init(p2)
+    for i in range(150):
+        g1 = jax.grad(loss)(p1)
+        g2 = jax.grad(loss)(p2)
+        p1, s1 = o1.update(g1, s1, p1, jnp.asarray(i, jnp.int32))
+        p2, s2 = o2.update(g2, s2, p2, jnp.asarray(i, jnp.int32))
+    assert abs(float(loss(p1)) - float(loss(p2))) < 2e-2
+
+
+def test_grad_clipping():
+    opt = adamw(1e-2, clip_norm=1.0)
+    params = {"w": jnp.zeros((4,))}
+    state = opt.init(params)
+    huge = {"w": jnp.full((4,), 1e9)}
+    p2, state = opt.update(huge, state, params, jnp.asarray(0, jnp.int32))
+    assert bool(jnp.all(jnp.isfinite(p2["w"])))
+    assert float(jnp.max(jnp.abs(p2["w"]))) < 1.0
+
+
+def test_schedules():
+    cw = cosine_warmup(1.0, warmup=10, total=100)
+    assert float(cw(jnp.asarray(0))) < 0.11
+    np.testing.assert_allclose(float(cw(jnp.asarray(10))), 1.0, rtol=1e-5)
+    assert float(cw(jnp.asarray(99))) < 0.2
+    isr = inverse_sqrt(1.0, warmup=16)
+    assert float(isr(jnp.asarray(16))) == pytest.approx(1.0, rel=1e-5)
+    assert float(isr(jnp.asarray(64))) == pytest.approx(0.5, rel=1e-5)
+    assert float(constant(0.3)(jnp.asarray(5))) == pytest.approx(0.3)
+
+
+def test_bf16_params_fp32_state():
+    """bf16 params (kimi regime): update runs in fp32, casts back to bf16."""
+    opt = adafactor(1e-2)
+    params = {"w": jnp.ones((8, 8), jnp.bfloat16)}
+    state = opt.init(params)
+    assert state["f"]["w"]["vr"].dtype == jnp.float32
+    g = {"w": jnp.full((8, 8), 0.1, jnp.bfloat16)}
+    p2, _ = opt.update(g, state, params, jnp.asarray(0, jnp.int32))
+    assert p2["w"].dtype == jnp.bfloat16
+    assert float(p2["w"][0, 0]) < 1.0

@@ -1,0 +1,173 @@
+"""End-to-end behaviour tests for the paper's system: the full Algorithm 1
+pipeline (distributed inference -> primal recovery -> local dictionary
+update) reproduces the paper's qualitative claims C1-C4 (DESIGN.md §1) at
+test scale, plus a dry-run entry-point smoke test."""
+
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import REPO, subprocess_env
+from repro.core import topology as topo
+from repro.core.conjugates import make_task
+from repro.core.inference import (
+    DiffusionConfig,
+    diffusion_infer,
+    fista_infer,
+    safe_diffusion_mu,
+    snr_db,
+)
+from repro.core.learner import DictionaryLearner, LearnerConfig
+from repro.data import synthetic as ds
+
+
+def test_c1_convergence_snr_curve():
+    """C1 (paper Fig. 4): agent SNR vs iteration climbs monotonically into
+    the 40+ dB regime."""
+    key = jax.random.PRNGKey(0)
+    res, reg = make_task("sparse_svd", gamma=0.05, delta=0.1)
+    from repro.core.dictionary import blocks_from_full, init_dictionary
+
+    W = init_dictionary(key, 20, 32)
+    Wb = blocks_from_full(W, 8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (20,))
+    A = jnp.asarray(topo.make_topology("erdos", 8, seed=0), jnp.float32)
+    # mu at 3% of the stability bound: the O(mu^2) bias floor sits above the
+    # paper's 40-50 dB target (Fig. 4 regime; see Sec. IV-A on tuning mu).
+    mu = 0.03 * safe_diffusion_mu(res, reg, Wb)
+    nu_ref = fista_infer(res, reg, W, x, iters=800)
+    _, _, traj = diffusion_infer(
+        res, reg, Wb, x, A, jnp.ones((8,), jnp.float32),
+        DiffusionConfig(iters=42000), record_every=7000, mu=mu,
+    )
+    snrs = [float(snr_db(nu_ref, traj[i][0])) for i in range(traj.shape[0])]
+    assert snrs[-1] > 40.0, snrs
+    assert all(b >= a - 1.0 for a, b in zip(snrs, snrs[1:])), snrs
+
+
+def test_c2_distributed_matches_centralized_denoising():
+    """C2 (paper Fig. 5): distributed learner's denoising PSNR within tol of
+    the centralized Mairal baseline on the same data."""
+    from repro.core.baselines import MairalConfig, MairalLearner
+    from repro.core.denoise import denoise_image, psnr
+
+    imgs = ds.synthetic_images(16, 40, seed=0)
+    patches = jnp.asarray(ds.patch_dataset(imgs, patch=6, n_patches=3000, seed=1))
+
+    cfg = LearnerConfig(m=36, k=72, n_agents=12, task="sparse_svd", gamma=0.2,
+                        delta=0.05, mu=-1.0, inference_iters=200, engine="fista",
+                        mu_w=0.5, seed=0)
+    dist = DictionaryLearner(cfg)
+    st = dist.init_state()
+    for _ in range(2):
+        st, _ = dist.fit(st, patches, batch_size=32)
+
+    central = MairalLearner(
+        MairalConfig(m=36, k=72, gamma=0.2, delta=0.05, seed=0), dist.reg
+    )
+    mst = central.init_state()
+    for _ in range(2):
+        mst, _ = central.fit(mst, patches, batch_size=32)
+
+    clean = jnp.asarray(ds.synthetic_images(1, 40, seed=77)[0])
+    noisy = jnp.asarray(ds.noisy_version(np.asarray(clean)[None], 0.15, seed=3)[0])
+    p_dist = float(psnr(clean, denoise_image(dist, st, noisy, patch=6, stride=2)))
+
+    # evaluate the centralized dictionary through the same denoising path
+    st_c = st._replace(W_blocks=jnp.moveaxis(mst.W.reshape(36, 12, 6), 1, 0))
+    p_cent = float(psnr(clean, denoise_image(dist, st_c, noisy, patch=6, stride=2)))
+    p_noisy = float(psnr(clean, noisy))
+    assert p_dist > p_noisy + 3.0
+    # Mairal's sufficient-statistics BCD is more sample-efficient than the
+    # paper's SGD-style update at this offline 3k-patch budget; the paper's
+    # +0.2 dB parity holds at its 1M-patch scale. We assert within 1.8 dB
+    # here and track the gap honestly (EXPERIMENTS.md §Claims C2).
+    assert p_dist > p_cent - 1.8, f"dist {p_dist:.2f} vs central {p_cent:.2f}"
+
+
+def test_c3_novel_document_auc_over_time_steps():
+    """C3 (paper Tables III/IV): the online distributed detector sustains a
+    high AUC across time steps while the dictionary grows."""
+    from repro.core.detection import auc, exact_score
+
+    ts = ds.topic_documents(m_vocab=120, n_topics=16, docs_per_step=150,
+                            n_steps=3, topics_per_step=3, seed=1)
+    cfg = LearnerConfig(m=120, k=40, n_agents=10, task="nmf", gamma=0.05,
+                        delta=0.1, mu=-1.0, inference_iters=200, engine="fista",
+                        mu_w=0.3, seed=0)
+    learner = DictionaryLearner(cfg)
+    state = learner.init_state()
+    state, _ = learner.fit(state, jnp.asarray(ts.docs[0]), batch_size=16)
+
+    aucs = []
+    for s in range(1, 4):
+        h = jnp.asarray(ts.docs[s])
+        labels = np.isin(ts.labels[s], list(ts.novel_steps[s]))
+        if labels.sum() == 0:
+            continue
+        nu = fista_infer(learner.res, learner.reg, learner.dictionary(state), h, iters=300)
+        scores = np.asarray(
+            exact_score(learner.res, learner.reg, learner.dictionary(state), nu, h)
+        )
+        aucs.append(auc(scores, labels))
+        # incorporate the block + grow the network (paper: +10 atoms/step)
+        learner, state = learner.expanded(state, extra_agents=2, key=jax.random.PRNGKey(s))
+        state, _ = learner.fit(state, h, batch_size=16)
+    assert len(aucs) >= 2
+    assert np.mean(aucs) > 0.7, aucs
+
+
+def test_c4_huber_more_robust_than_l2_under_outliers():
+    """C4: with outlier-contaminated documents, the Huber residual detector
+    degrades less than the l2 one."""
+    from repro.core.detection import auc, exact_score
+    from repro.core.inference import exact_infer
+
+    ts = ds.topic_documents(m_vocab=100, n_topics=10, docs_per_step=150,
+                            n_steps=1, topics_per_step=3, seed=5)
+    train = np.asarray(ts.docs[0])
+    rng = np.random.default_rng(0)
+    spikes = rng.random(train.shape) < 0.01  # sparse gross corruption
+    train_noisy = train + 5.0 * spikes
+    train_noisy /= np.linalg.norm(train_noisy, axis=-1, keepdims=True)
+
+    h = jnp.asarray(ts.docs[1])
+    labels = np.isin(ts.labels[1], list(ts.novel_steps[1]))
+
+    aucs = {}
+    for task in ("nmf", "nmf_huber"):
+        # the plain projected-gradient engine needs ~2000 iterations to
+        # converge the dual here; an unconverged nu gives a garbage
+        # dictionary and chance-level AUC for BOTH residuals
+        cfg = LearnerConfig(m=100, k=30, n_agents=10, task=task, gamma=0.05,
+                            delta=0.1, eta=0.2, mu=-1.0, inference_iters=2000,
+                            engine="exact", mu_w=0.3, seed=0)
+        learner = DictionaryLearner(cfg)
+        state = learner.init_state()
+        for _ in range(2):
+            state, _ = learner.fit(state, jnp.asarray(train_noisy), batch_size=16)
+        W = learner.dictionary(state)
+        nu = exact_infer(learner.res, learner.reg, W, h, iters=2000)
+        scores = np.asarray(exact_score(learner.res, learner.reg, W, nu, h))
+        aucs[task] = auc(scores, labels)
+    # measured: huber ~0.87 vs l2 ~0.55 under 1% spike corruption
+    assert aucs["nmf_huber"] > 0.7, aucs
+    assert aucs["nmf_huber"] >= aucs["nmf"] + 0.1, aucs
+
+
+@pytest.mark.slow
+def test_dryrun_entry_point():
+    """The multi-pod dry-run CLI works end to end for one cheap cell (its own
+    process owns the 512-device override)."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "olmo_1b", "--shape", "decode_32k", "--resume"],
+        env={**subprocess_env(1), "PYTHONPATH": str(REPO / "src")},
+        cwd=str(REPO), capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr[-2000:]
+    assert "olmo_1b x decode_32k" in proc.stdout or "skip-cached" in proc.stdout

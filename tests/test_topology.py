@@ -1,0 +1,55 @@
+"""Topology / combination-matrix properties (the convergence precondition of
+the diffusion iteration is a doubly-stochastic A)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as topo
+
+settings.register_profile("fast", max_examples=20, deadline=None)
+settings.load_profile("fast")
+
+
+@given(st.integers(2, 24))
+def test_ring_weights_doubly_stochastic(n):
+    assert topo.is_doubly_stochastic(topo.ring_weights(n))
+    assert topo.is_doubly_stochastic(topo.metropolis_weights(topo.ring_adjacency(n)))
+
+
+@given(st.integers(2, 20), st.integers(0, 1000))
+def test_erdos_metropolis_doubly_stochastic(n, seed):
+    adj = topo.erdos_renyi_adjacency(n, p=0.5, seed=seed)
+    assert topo.is_connected(adj)
+    assert topo.is_doubly_stochastic(topo.metropolis_weights(adj))
+
+
+@given(st.integers(2, 6), st.integers(2, 6))
+def test_torus_doubly_stochastic(r, c):
+    a = topo.metropolis_weights(topo.torus_adjacency(r, c))
+    assert topo.is_doubly_stochastic(a)
+
+
+def test_full_is_exact_averaging():
+    a = topo.uniform_weights(7)
+    v = np.random.default_rng(0).normal(size=(7, 3))
+    out = a @ v
+    np.testing.assert_allclose(out, np.broadcast_to(v.mean(0), out.shape), rtol=1e-12)
+    assert topo.mixing_rate(a) < 1e-10
+
+
+def test_mixing_rate_ordering():
+    n = 16
+    full = topo.mixing_rate(topo.uniform_weights(n))
+    erdos = topo.mixing_rate(topo.metropolis_weights(topo.erdos_renyi_adjacency(n, seed=0)))
+    ring = topo.mixing_rate(topo.ring_weights(n))
+    assert full < erdos < ring < 1.0  # denser graphs mix faster
+
+
+def test_make_topology_kinds():
+    for kind in ("ring", "ring_metropolis", "torus", "erdos", "full"):
+        a = topo.make_topology(kind, 12)
+        assert a.shape == (12, 12)
+        assert topo.is_doubly_stochastic(a)
+    with pytest.raises(KeyError):
+        topo.make_topology("hypercube", 8)

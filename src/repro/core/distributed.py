@@ -40,11 +40,11 @@ from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.conjugates import Regularizer, Residual
+from repro.runtime import dist
+from repro.runtime.dist import shard_map
 
 Array = jax.Array
 
@@ -65,19 +65,12 @@ class DistConfig:
 
 
 # ---------------------------------------------------------------------------
-# int8 quantization with error feedback (ring_q8)
+# int8 quantization with error feedback (ring_q8) — wire format shared with
+# the runtime layer (runtime/dist.py)
 # ---------------------------------------------------------------------------
 
-
-def _quantize_q8(x: Array) -> Tuple[Array, Array]:
-    """Symmetric per-row int8 quantization; returns (q, scale)."""
-    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0 + 1e-30
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    return q, scale
-
-
-def _dequantize_q8(q: Array, scale: Array) -> Array:
-    return q.astype(scale.dtype) * scale
+_quantize_q8 = dist.quantize_q8
+_dequantize_q8 = dist.dequantize_q8
 
 
 # ---------------------------------------------------------------------------
@@ -222,7 +215,7 @@ class DistributedSparseCoder:
 
             def total_grad(nu):
                 y, back = _local_code_and_back(res, reg, W_loc, nu, cfg)
-                return res.grad_fstar(nu) - x_loc + jax.lax.psum(back, ax)
+                return res.grad_fstar(nu) - x_loc + dist.gossip_psum(back, ax)
 
             if cfg.mode == "exact":
 
@@ -252,10 +245,8 @@ class DistributedSparseCoder:
                 else jnp.asarray(cfg.mu, x_loc.dtype)
             )
             beta = jnp.asarray(cfg.beta, x_loc.dtype)
-            # ppermute perms must be static; build from mesh axis size.
-            nm = self.mesh.shape[ax]
-            perm_fwd = [(i, (i + 1) % nm) for i in range(nm)]
-            perm_bwd = [(i, (i - 1) % nm) for i in range(nm)]
+            # ring exchanges need the static axis size (perms can't trace).
+            nm = dist.axis_sizes(self.mesh)[ax]
 
             def local_grad(nu):
                 y, back = _local_code_and_back(res, reg, W_loc, nu, cfg)
@@ -273,8 +264,7 @@ class DistributedSparseCoder:
 
                 def step(nu, _):
                     psi = nu - mu * local_grad(nu)
-                    left = jax.lax.ppermute(psi, ax, perm_fwd)
-                    right = jax.lax.ppermute(psi, ax, perm_bwd)
+                    left, right = dist.ring_shift(psi, ax, nm)
                     return combine(psi, left, right), None
 
                 nu, _ = jax.lax.scan(step, nu0, None, length=cfg.iters)
@@ -288,14 +278,7 @@ class DistributedSparseCoder:
                     # local copy of psi stays full precision.
                     q, s = _quantize_q8(psi + err)
                     err = (psi + err) - _dequantize_q8(q, s)
-                    ql, sl = (
-                        jax.lax.ppermute(q, ax, perm_fwd),
-                        jax.lax.ppermute(s, ax, perm_fwd),
-                    )
-                    qr, sr = (
-                        jax.lax.ppermute(q, ax, perm_bwd),
-                        jax.lax.ppermute(s, ax, perm_bwd),
-                    )
+                    (ql, sl), (qr, sr) = dist.ring_shift((q, s), ax, nm)
                     nu = combine(
                         psi, _dequantize_q8(ql, sl), _dequantize_q8(qr, sr)
                     )
@@ -311,8 +294,7 @@ class DistributedSparseCoder:
                     psi = nu - mu * local_grad(nu)
                     nu_next = combine(psi, left_prev, right_prev)
                     # These sends overlap with the *next* local_grad compute.
-                    left = jax.lax.ppermute(psi, ax, perm_fwd)
-                    right = jax.lax.ppermute(psi, ax, perm_bwd)
+                    left, right = dist.ring_shift(psi, ax, nm)
                     return (nu_next, left, right), None
 
                 (nu, _, _), _ = jax.lax.scan(
@@ -373,19 +355,9 @@ class DistributedSparseCoder:
 
 
 # ---------------------------------------------------------------------------
-# Helper: build a CPU debug mesh (tests force multi-device via XLA_FLAGS)
+# Helper: build a CPU debug mesh (tests force multi-device via XLA_FLAGS).
+# Kept as a name here for callers of the engine; construction lives in the
+# runtime layer.
 # ---------------------------------------------------------------------------
 
-
-def make_debug_mesh(
-    model: int, data: int = 1, pods: int = 0
-) -> Mesh:
-    """Mesh over however many devices the platform exposes."""
-    devs = np.array(jax.devices())
-    if pods:
-        need = pods * data * model
-        return Mesh(
-            devs[:need].reshape(pods, data, model), ("pod", "data", "model")
-        )
-    need = data * model
-    return Mesh(devs[:need].reshape(data, model), ("data", "model"))
+make_debug_mesh = dist.debug_mesh

@@ -10,7 +10,10 @@ Three engines, all solving the dual problem (paper Eq. 28):
    Implemented as a vmap over agents + scan over iterations; this is the
    single-host *reference* used by tests and the convergence benchmark.
    The multi-device production engine lives in core/distributed.py and
-   computes the same iterates with `shard_map` + `ppermute`.
+   computes the same iterates with the gossip collectives of the runtime
+   seam (repro.runtime.dist: shard_map + gossip_psum / ring_shift).  This
+   module deliberately contains NO mesh or collective calls, so it runs on
+   any jax version and anchors the equivalence tests for that seam.
 
 2. `exact_infer` — centralized (projected) gradient descent on the dual;
    equals fully-connected diffusion (A = 11^T/N) with exact averaging.

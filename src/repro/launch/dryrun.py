@@ -30,6 +30,7 @@ from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import SHAPES, ShapeConfig, cell_supported
 from repro.launch.mesh import HW, make_production_mesh
 from repro.optim import optimizers as opt_mod
+from repro.runtime import compat
 from repro.runtime import steps as S
 
 OUT_ROOT = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
@@ -137,7 +138,7 @@ def analyze(lowered, n_chips: int, extra: dict) -> dict:
             "hlo_flops": flops,
             "hlo_bytes_accessed": bytes_acc,
             "collective_bytes": coll_bytes,
-            "peak_memory_bytes": int(ma.peak_memory_in_bytes),
+            "peak_memory_bytes": compat.peak_memory_bytes(ma),
             "argument_bytes": int(ma.argument_size_in_bytes),
             "output_bytes": int(ma.output_size_in_bytes),
         },
@@ -164,8 +165,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: pathlib.Path,
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
     out = outdir / mesh_name / f"{arch}-{shape_name}{tag}.json"
     if resume and out.exists():
-        print(f"[skip-cached] {arch} x {shape_name} ({mesh_name})")
-        return json.loads(out.read_text())
+        cached = json.loads(out.read_text())
+        # only green/skip cells are resumable; errored cells re-run (their
+        # failure may be fixed code, not a property of the cell)
+        if cached.get("status") != "error":
+            print(f"[skip-cached] {arch} x {shape_name} ({mesh_name})")
+            return cached
+        print(f"[retry-errored] {arch} x {shape_name} ({mesh_name})")
 
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
@@ -254,8 +260,11 @@ def run_dictlearn(multi_pod: bool, outdir: pathlib.Path, resume: bool = False,
     tag = f"dictlearn_{mode}"
     out = outdir / mesh_name / f"{tag}-fit.json"
     if resume and out.exists():
-        print(f"[skip-cached] {tag} ({mesh_name})")
-        return json.loads(out.read_text())
+        cached = json.loads(out.read_text())
+        if cached.get("status") != "error":
+            print(f"[skip-cached] {tag} ({mesh_name})")
+            return cached
+        print(f"[retry-errored] {tag} ({mesh_name})")
     out.parent.mkdir(parents=True, exist_ok=True)
 
     mesh = make_production_mesh(multi_pod=multi_pod)

@@ -1,7 +1,10 @@
-"""Production mesh factory.
+"""Production mesh factory — a thin front for `repro.runtime.dist`.
 
-A FUNCTION, not a module-level constant — importing this module never
-touches jax device state (the dry-run sets XLA_FLAGS before first init).
+Mesh construction (and all jax mesh/shard_map API compat) lives in the
+runtime layer; this module keeps the launch-facing names and the TPU
+hardware constants the roofline analysis consumes.  FUNCTIONS, not
+module-level constants — importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before first init).
 
 Single pod : (data=16, model=16)            = 256 chips (one v5e pod)
 Multi-pod  : (pod=2, data=16, model=16)     = 512 chips
@@ -13,18 +16,16 @@ remaining intra-pod dimension (DP/FSDP), `pod` to the cross-pod DCI links
 
 from __future__ import annotations
 
-import jax
+from repro.runtime import dist
 
 
 def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return dist.production_mesh(multi_pod=multi_pod)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests / elastic rescale)."""
-    return jax.make_mesh(tuple(shape), tuple(axes))
+    return dist.make_mesh(tuple(shape), tuple(axes))
 
 
 # TPU v5e hardware constants (per chip) used by the roofline analysis.

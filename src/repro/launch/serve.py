@@ -19,9 +19,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ALIASES, ARCH_IDS, get_config, get_smoke_config
-from repro.launch.mesh import make_mesh
 from repro.models import model as M
 from repro.models.layers import split_tree
+from repro.runtime import dist
 from repro.runtime import sharding as shd
 from repro.runtime import steps as S
 
@@ -41,7 +41,7 @@ def main() -> None:
     if not cfg.decode_supported:
         raise SystemExit(f"{args.arch} is encoder-only; no decode loop")
     d, m = (int(x) for x in args.mesh.split("x"))
-    mesh = make_mesh((d, m), ("data", "model"))
+    mesh = dist.make_mesh((d, m), ("data", "model"))
     rules = shd.rules_for(cfg)
     S.install_activation_sharding(mesh, rules)
 

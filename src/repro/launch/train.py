@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.configs import ALIASES, ARCH_IDS, get_config, get_smoke_config
 from repro.data import synthetic as data
-from repro.launch.mesh import make_mesh
+from repro.runtime.dist import make_mesh
 from repro.optim import optimizers as opt_mod
 from repro.optim.schedules import cosine_warmup
 from repro.runtime.runner import RunnerConfig, TrainRunner

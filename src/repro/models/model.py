@@ -300,8 +300,9 @@ def forward(cfg: ArchConfig, params, batch: Dict[str, Array]) -> Tuple[Array, Ar
 
         # NOT rematted: sLSTM is sequential and compute-cheap; recomputing the
         # 4096-step recurrence in the backward pass would double its wall
-        # time, and remat(shard_map(scan)) trips an XLA CPU-pipeline crash
-        # (AllReducePromotion on resharding copies).
+        # time, and remat(shard_map(scan)) — the manual-over-DP wrapper that
+        # xlstm.slstm_block_auto enters via runtime/dist — trips an XLA
+        # CPU-pipeline crash (AllReducePromotion on resharding copies).
 
         def group_body(hh, gp):
             mg, sg = gp

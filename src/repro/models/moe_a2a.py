@@ -34,8 +34,10 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.runtime import dist
+from repro.runtime.dist import shard_map
 
 Array = jax.Array
 
@@ -51,9 +53,7 @@ Array = jax.Array
 
 
 def _q8(x: Array, axis: int = -1):
-    scale = (jnp.max(jnp.abs(x), axis=axis, keepdims=True) / 127.0 + 1e-30).astype(jnp.float16)
-    q = jnp.clip(jnp.round(x / scale.astype(x.dtype)), -127, 127).astype(jnp.int8)
-    return q, scale
+    return dist.quantize_q8(x, axis=axis, scale_dtype=jnp.float16)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
@@ -61,8 +61,8 @@ def q8_all_gather(x: Array, axis_name: str, gather_axis: int, scale_axis: int = 
     """The quantization (scale) axis must differ from the gather axis so the
     per-shard scales broadcast after the tiled gather."""
     q, s = _q8(x, scale_axis)
-    qg = jax.lax.all_gather(q, axis_name, axis=gather_axis, tiled=True)
-    sg = jax.lax.all_gather(s, axis_name, axis=gather_axis, tiled=True)
+    qg = dist.all_gather_tiled(q, axis_name, axis=gather_axis)
+    sg = dist.all_gather_tiled(s, axis_name, axis=gather_axis)
     return qg.astype(x.dtype) * sg.astype(x.dtype)
 
 
@@ -71,7 +71,7 @@ def _q8ag_fwd(x, axis_name, gather_axis, scale_axis):
 
 
 def _q8ag_bwd(axis_name, gather_axis, scale_axis, _, g):
-    return (jax.lax.psum_scatter(g, axis_name, scatter_dimension=gather_axis, tiled=True),)
+    return (dist.psum_scatter_tiled(g, axis_name, axis=gather_axis),)
 
 
 q8_all_gather.defvjp(_q8ag_fwd, _q8ag_bwd)
@@ -81,8 +81,8 @@ q8_all_gather.defvjp(_q8ag_fwd, _q8ag_bwd)
 def q8_all_to_all(x: Array, axis_name: str) -> Array:
     """all_to_all over leading axis with int8 payload; bf16 backward."""
     q, s = _q8(x)
-    qg = jax.lax.all_to_all(q, axis_name, split_axis=0, concat_axis=0, tiled=True)
-    sg = jax.lax.all_to_all(s, axis_name, split_axis=0, concat_axis=0, tiled=True)
+    qg = dist.all_to_all_tiled(q, axis_name)
+    sg = dist.all_to_all_tiled(s, axis_name)
     return qg.astype(x.dtype) * sg.astype(x.dtype)
 
 
@@ -91,7 +91,7 @@ def _q8a2a_fwd(x, axis_name):
 
 
 def _q8a2a_bwd(axis_name, _, g):
-    return (jax.lax.all_to_all(g, axis_name, split_axis=0, concat_axis=0, tiled=True),)
+    return (dist.all_to_all_tiled(g, axis_name),)
 
 
 q8_all_to_all.defvjp(_q8a2a_fwd, _q8a2a_bwd)
@@ -137,7 +137,7 @@ def moe_a2a_body(
     # -- routing (router is FSDP-sharded on embed; gather it: it is tiny) --
     router = params["router"]
     for ax in data_axes:
-        router = jax.lax.all_gather(router, ax, axis=0, tiled=True)
+        router = dist.all_gather_tiled(router, ax, axis=0)
     logits = xf.astype(router_dtype) @ router.astype(router_dtype)  # (T, E)
     probs = jax.nn.softmax(logits, axis=-1)
     gate_vals, expert_ids = jax.lax.top_k(probs, top_k)  # (T, k)
@@ -175,8 +175,8 @@ def moe_a2a_body(
     if wire_dtype == "int8":
         recv = q8_all_to_all(payload, model_axis)
     else:
-        recv = jax.lax.all_to_all(payload, model_axis, split_axis=0, concat_axis=0, tiled=True)
-    recv_eid = jax.lax.all_to_all(meta_eid, model_axis, split_axis=0, concat_axis=0, tiled=True)
+        recv = dist.all_to_all_tiled(payload, model_axis)
+    recv_eid = dist.all_to_all_tiled(meta_eid, model_axis)
     n_recv = tp * c_send
     recv = recv.reshape(n_recv, d)
     recv_eid = recv_eid.reshape(n_recv)
@@ -196,7 +196,7 @@ def moe_a2a_body(
             if wire_dtype == "int8":
                 w = q8_all_gather(w, ax, axis, scale_axis)
             else:
-                w = jax.lax.all_gather(w, ax, axis=axis, tiled=True)
+                w = dist.all_gather_tiled(w, ax, axis=axis)
         return w.astype(cdt)
 
     wi, wg = gathered("wi", 1), gathered("wg", 1)
@@ -216,7 +216,7 @@ def moe_a2a_body(
     if wire_dtype == "int8":
         returned = q8_all_to_all(back, model_axis)
     else:
-        returned = jax.lax.all_to_all(back, model_axis, split_axis=0, concat_axis=0, tiled=True)
+        returned = dist.all_to_all_tiled(back, model_axis)
     returned = returned.reshape(tp * c_send, d)
 
     # map each assignment back through its send slot (dummy row for dropped)
@@ -232,9 +232,9 @@ def moe_a2a_body(
         swg = sp["wg"]
         swo = sp["wo"]
         for ax in data_axes:
-            swi = jax.lax.all_gather(swi, ax, axis=0, tiled=True)
-            swg = jax.lax.all_gather(swg, ax, axis=0, tiled=True)
-            swo = jax.lax.all_gather(swo, ax, axis=1, tiled=True)
+            swi = dist.all_gather_tiled(swi, ax, axis=0)
+            swg = dist.all_gather_tiled(swg, ax, axis=0)
+            swo = dist.all_gather_tiled(swo, ax, axis=1)
         hs = jax.nn.silu(xf @ swg.astype(cdt)) * (xf @ swi.astype(cdt))
         out = out + hs @ swo.astype(cdt)
 
@@ -255,7 +255,7 @@ def apply_moe_a2a(
     """shard_map wrapper. Param shardings: router (embed->data, None),
     wi/wg (experts->model, embed->data, None), wo (experts->model, None,
     embed->data); x: (batch->dp, seq->model, None)."""
-    sizes = dict(mesh.shape)
+    sizes = dist.axis_sizes(mesh)
     tp = sizes.get(model_axis, 1)
     data_axes = tuple(a for a in ("data",) if a in sizes)
     dp_axes = tuple(a for a in ("pod", "data") if a in sizes)

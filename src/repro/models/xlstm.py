@@ -365,16 +365,23 @@ def slstm_block_auto(params: dict, x: Array, *, n_heads: int,
     from jax.sharding import PartitionSpec as P
 
     from repro.models.sharding_hook import current_mesh
+    from repro.runtime import dist
 
     mesh = current_mesh()
     if mesh is None:
         return slstm_block(params, x, n_heads=n_heads, return_cache=return_cache)
-    sizes = dict(mesh.shape)
+    sizes = dist.axis_sizes(mesh)
     dp_axes = tuple(a for a in ("pod", "data") if a in sizes)
     b = x.shape[0]
     while dp_axes and b % _prod(sizes, dp_axes):
         dp_axes = dp_axes[1:]
-    if not dp_axes:
+    # Going manual over the DP axes only (model stays auto/GSPMD for the
+    # TP-sharded W matrices) needs partial-manual shard_map; on jax
+    # versions without it the plain GSPMD path is the only correct option
+    # (same math, it just pays the per-timestep gradient all-reduce).
+    if not dp_axes or not (
+        dist.supports_partial_manual() or set(dp_axes) == set(sizes)
+    ):
         return slstm_block(params, x, n_heads=n_heads, return_cache=return_cache)
     bspec = dp_axes if len(dp_axes) > 1 else dp_axes[0]
     xspec = P(bspec, None, None)
@@ -388,12 +395,12 @@ def slstm_block_auto(params: dict, x: Array, *, n_heads: int,
         p = jax.tree.map(lambda v: v.astype(x.dtype), p)
         return slstm_block(p, xx, n_heads=n_heads, return_cache=return_cache)
 
-    fn = jax.shard_map(
+    fn = dist.shard_map(
         body,
-        mesh=mesh,
-        axis_names=frozenset(dp_axes),
+        mesh,
         in_specs=(P(), xspec),
         out_specs=(xspec, state_spec) if return_cache else xspec,
+        axis_names=frozenset(dp_axes),
         check_vma=False,
     )
     return fn(params32, x)

@@ -1,0 +1,176 @@
+"""Unified mesh/collectives runtime — the repo's single communication seam.
+
+The paper's protocol (arXiv:1402.1515) maps the network of N agents onto
+the `model` axis of a device mesh and realizes gossip as collectives over
+that axis.  Every mesh, every `shard_map` entry, and every gossip exchange
+in the repo is constructed HERE, so (a) jax API drift is absorbed once (in
+runtime/compat.py, which this module fronts), and (b) new topologies,
+combiners, or backends plug in at one seam instead of per solver.
+
+Mode -> collective mapping (core/distributed.py consumes these):
+
+  exact, exact_fista   gossip_psum        one all-reduce of the local
+                                          back-projection per iteration
+                                          (fully-connected A = 11^T/N)
+  ring, ring_async     ring_shift         ppermute to both ring neighbors
+                                          (constant-weight ring combiner)
+  ring_q8              ring_shift over    int8 messages + per-row scales,
+                       (quantize_q8 ..)   error feedback kept by the caller
+
+Mesh factories:
+
+  debug_mesh        (data, model) or (pod, data, model) over however many
+                    devices the platform exposes — tests force N CPU
+                    devices via XLA_FLAGS and call this.
+  production_mesh   (16, 16) v5e pod or (2, 16, 16) two pods.
+  make_mesh         arbitrary (shape, axes) — serving CLIs, elastic
+                    rescale targets.
+  abstract_mesh     shape-only mesh for sharding-rule logic with NO device
+                    requirement (divisibility guards on production sizes).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime import compat
+from repro.runtime.compat import (  # re-exported: THE way to get these
+    abstract_mesh,
+    axis_sizes,
+    make_mesh,
+    shard_map,
+)
+
+__all__ = [
+    "shard_map",
+    "supports_partial_manual",
+    "make_mesh",
+    "abstract_mesh",
+    "axis_sizes",
+    "as_mesh",
+    "debug_mesh",
+    "production_mesh",
+    "gossip_psum",
+    "ring_perms",
+    "ring_shift",
+    "all_to_all_tiled",
+    "all_gather_tiled",
+    "psum_scatter_tiled",
+    "quantize_q8",
+    "dequantize_q8",
+]
+
+Array = jax.Array
+
+# Canonical axis roles (DESIGN §2): `model` is the agent/TP/gossip axis,
+# `data` the intra-pod DP/FSDP axis, `pod` the cross-pod pure-DP axis.
+MODEL_AXIS = "model"
+DATA_AXIS = "data"
+POD_AXIS = "pod"
+
+
+def supports_partial_manual() -> bool:
+    """Whether shard_map can go manual over a strict SUBSET of mesh axes
+    (GSPMD keeping the rest).  False on jax 0.4.x/0.5.x — version-gated
+    optimizations (manual-over-DP sLSTM) must keep a full-GSPMD fallback."""
+    return compat.SUPPORTS_PARTIAL_MANUAL
+
+
+# ---------------------------------------------------------------------------
+# Mesh factories
+# ---------------------------------------------------------------------------
+
+
+def debug_mesh(model: int, data: int = 1, pods: int = 0):
+    """CPU/debug mesh with the production axis names over the first
+    `pods*data*model` visible devices (tests force multi-device via
+    XLA_FLAGS=--xla_force_host_platform_device_count=N)."""
+    if pods:
+        return make_mesh((pods, data, model), (POD_AXIS, DATA_AXIS, MODEL_AXIS))
+    return make_mesh((data, model), (DATA_AXIS, MODEL_AXIS))
+
+
+def production_mesh(*, multi_pod: bool = False):
+    """One v5e pod (data=16, model=16) = 256 chips, or two pods with a
+    leading pure-DP `pod` axis = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = (POD_AXIS, DATA_AXIS, MODEL_AXIS) if multi_pod else (DATA_AXIS, MODEL_AXIS)
+    return make_mesh(shape, axes)
+
+
+def as_mesh(mesh_or_shape, axes: Sequence[str] = (DATA_AXIS, MODEL_AXIS)):
+    """Accept a ready Mesh or an int shape tuple (elastic-rescale callers
+    pass the target shape; everything else passes a Mesh through)."""
+    if hasattr(mesh_or_shape, "axis_names"):
+        return mesh_or_shape
+    return make_mesh(tuple(mesh_or_shape), tuple(axes))
+
+
+# ---------------------------------------------------------------------------
+# Gossip collectives (used inside shard_map bodies)
+# ---------------------------------------------------------------------------
+
+
+def gossip_psum(x, axis_name: str):
+    """Exact-mode gossip: fully-connected combine = one all-reduce."""
+    return jax.lax.psum(x, axis_name)
+
+
+def ring_perms(n: int) -> Tuple[List[Tuple[int, int]], List[Tuple[int, int]]]:
+    """(forward, backward) ppermute permutations of an n-ring; static, so
+    they must be built from the mesh axis SIZE, not from traced values."""
+    fwd = [(i, (i + 1) % n) for i in range(n)]
+    bwd = [(i, (i - 1) % n) for i in range(n)]
+    return fwd, bwd
+
+
+def ring_shift(x, axis_name: str, n: int):
+    """Send `x` (array or pytree) to both ring neighbors over `axis_name`
+    (size n); returns (from_left, from_right).  This is the diffusion
+    combine's data movement: each agent receives psi from its two ring
+    neighbors (doubly-stochastic [beta, 1-2beta, beta] combiner)."""
+    fwd, bwd = ring_perms(n)
+    left = jax.tree.map(lambda v: jax.lax.ppermute(v, axis_name, fwd), x)
+    right = jax.tree.map(lambda v: jax.lax.ppermute(v, axis_name, bwd), x)
+    return left, right
+
+
+def all_to_all_tiled(x: Array, axis_name: str) -> Array:
+    """Tiled all_to_all over the leading dim (expert-parallel dispatch)."""
+    return jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0, tiled=True)
+
+
+def all_gather_tiled(x: Array, axis_name: str, axis: int = 0) -> Array:
+    """Tiled all_gather along `axis` (the FSDP weight gather)."""
+    return jax.lax.all_gather(x, axis_name, axis=axis, tiled=True)
+
+
+def psum_scatter_tiled(x: Array, axis_name: str, axis: int = 0) -> Array:
+    """Tiled reduce-scatter along `axis` (transpose of all_gather_tiled)."""
+    return jax.lax.psum_scatter(x, axis_name, scatter_dimension=axis, tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# int8 wire format (ring_q8 gossip, q8 MoE collectives)
+# ---------------------------------------------------------------------------
+
+
+def quantize_q8(
+    x: Array, axis: int = -1, scale_dtype: Optional[jnp.dtype] = None
+) -> Tuple[Array, Array]:
+    """Symmetric per-slice int8 quantization along `axis`; returns
+    (q int8, scale).  `scale_dtype` defaults to x.dtype; the MoE wire path
+    passes float16 to halve the scale payload."""
+    scale = jnp.max(jnp.abs(x), axis=axis, keepdims=True) / 127.0 + 1e-30
+    if scale_dtype is not None:
+        scale = scale.astype(scale_dtype)
+    q = jnp.clip(jnp.round(x / scale.astype(x.dtype)), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_q8(q: Array, scale: Array, dtype: Optional[jnp.dtype] = None) -> Array:
+    out_dtype = dtype if dtype is not None else scale.dtype
+    return q.astype(out_dtype) * scale.astype(out_dtype)

@@ -27,6 +27,7 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import ArchConfig
 from repro.optim.optimizers import Optimizer
+from repro.runtime import dist
 from repro.runtime import sharding as shd
 from repro.runtime import steps as S
 
@@ -54,6 +55,8 @@ class TrainRunner:
         fault_hook: Optional[Callable[[int], None]] = None,
     ):
         self.cfg = cfg
+        # accept a ready Mesh or a (data, model) shape tuple (elastic callers)
+        mesh = dist.as_mesh(mesh)
         self.mesh = mesh
         self.opt = opt
         self.run_cfg = run_cfg
@@ -152,6 +155,9 @@ class TrainRunner:
         *,
         rules: Optional[dict] = None,
     ) -> "TrainRunner":
-        """New runner on a different mesh; restore_or_init() re-places the
-        latest (mesh-agnostic) checkpoint with the new shardings."""
+        """New runner on a different mesh — the N->M chips move.
+        `new_mesh` may be a Mesh or a (data, model) shape tuple (the
+        constructor normalizes via dist.as_mesh); restore_or_init()
+        re-places the latest (mesh-agnostic) checkpoint with the new
+        shardings."""
         return cls(cfg, new_mesh, opt, run_cfg, rules=rules)

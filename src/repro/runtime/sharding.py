@@ -22,6 +22,8 @@ from typing import Dict, Optional, Sequence, Tuple, Union
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.runtime import dist
+
 AxisAssign = Union[None, str, Tuple[str, ...]]
 
 
@@ -53,9 +55,9 @@ def rules_for(cfg, overrides: Optional[Dict[str, AxisAssign]] = None) -> Dict[st
     return r
 
 
-def _mesh_axes(mesh) -> Dict[str, int]:
-    # Mesh.shape is an axis-name -> size mapping (works for AbstractMesh too).
-    return dict(mesh.shape)
+# Axis-name -> size for Mesh and AbstractMesh (version differences absorbed
+# by the runtime layer).
+_mesh_axes = dist.axis_sizes
 
 
 def spec_for_axes(

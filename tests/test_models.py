@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.configs.base import SHAPES, cell_supported, input_specs

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.runtime import dist
 from repro.runtime import sharding as shd
 
 
@@ -13,7 +14,7 @@ from repro.runtime import sharding as shd
 def mesh():
     # single-device mesh with the production axis NAMES; spec construction is
     # shape-logic only, so axis sizes of 1 exercise the same code paths.
-    return jax.make_mesh((1, 1), ("data", "model"))
+    return dist.make_mesh((1, 1), ("data", "model"))
 
 
 def test_spec_basic(mesh):
@@ -23,7 +24,7 @@ def test_spec_basic(mesh):
 
 
 def test_spec_divisibility_fallback():
-    mesh = jax.make_mesh((1,), ("model",))
+    mesh = dist.make_mesh((1,), ("model",))
     rules = {"heads": "model", "kv_heads": "model"}
     # size-1 axes always divide; use a fake 16-wide mesh via rules on names
     spec = shd.spec_for_axes(mesh, ("kv_heads", None), (8, 32), rules)
@@ -44,10 +45,9 @@ def test_no_mesh_axis_used_twice(mesh):
 
 
 def test_divisibility_guard_production_mesh():
-    """Real production-mesh sizes via AbstractMesh (no devices needed)."""
-    from jax.sharding import AbstractMesh
-
-    amesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    """Real production-mesh sizes via an abstract mesh (no devices needed;
+    constructor signature differences absorbed by runtime/compat)."""
+    amesh = dist.abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     rules = shd.default_rules()
     # kv_heads=8 does not divide model=16 -> falls back to None
     spec = shd.spec_for_axes(amesh, ("batch", "kv_seq", "kv_heads", None),
@@ -63,9 +63,7 @@ def test_divisibility_guard_production_mesh():
 
 
 def test_batch_shardings_nondivisible():
-    from jax.sharding import AbstractMesh
-
-    mesh = AbstractMesh((2, 2), ("data", "model"))
+    mesh = dist.abstract_mesh((2, 2), ("data", "model"))
     rules = shd.default_rules()
     tree = {"tokens": jax.ShapeDtypeStruct((1, 64), jnp.int32)}  # B=1
     sh = shd.batch_shardings(mesh, tree, rules)
@@ -80,7 +78,7 @@ def test_state_shardings_structure():
     from repro.optim import adamw
     from repro.runtime import steps as S
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    mesh = dist.make_mesh((1, 1), ("data", "model"))
     cfg = get_smoke_config("granite_moe_1b_a400m")
     sds, axes = S.abstract_train_state(cfg, adamw(1e-3))
     sh = S.state_shardings(mesh, sds, axes, shd.rules_for(cfg))

@@ -3,7 +3,7 @@ the diffusion iteration is a doubly-stochastic A)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import topology as topo
 

@@ -2,44 +2,49 @@
 production gossip schedules (exact / exact_fista / ring / ring_q8 /
 ring_async) on a forced multi-device host mesh.
 
-Reports, per mode: iterations to reach 40 dB, bytes-on-wire per iteration
-per device (analytic), and total wire bytes to 40 dB — the quantity the
-int8 error-feedback and FISTA modes exist to cut.
+Reports, per mode: iterations to reach the target SNR, bytes-on-wire per
+iteration per device (analytic), and total wire bytes to target — the
+quantity the int8 error-feedback and FISTA modes exist to cut.
+
+Reduced-size mode: set BENCH_SMOKE=1 (the CI benchmark smoke job does) for
+a smaller problem, shorter sweep, and a lower SNR target.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import subprocess
 import sys
-import json
-import pathlib
 
 from benchmarks.common import ROOT, emit, save_json
 
 SCRIPT = r"""
-import json
+import json, sys
 import jax, jax.numpy as jnp
 from repro.core.conjugates import make_task
 from repro.core.distributed import DistributedSparseCoder, DistConfig, make_debug_mesh
 from repro.core.inference import fista_infer, snr_db
 
+P = json.loads(sys.argv[1])
+
 res, reg = make_task("nmf", gamma=0.05, delta=0.1)
 mesh = make_debug_mesh(model=8, data=1)
-M, K, B = 64, 256, 16
+M, K, B = P["M"], P["K"], P["B"]
 W = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (M, K)))
 W = W / jnp.linalg.norm(W, axis=0)
 x = jax.random.normal(jax.random.PRNGKey(2), (B, M))
-nu_ref = fista_infer(res, reg, W, x, iters=2000)
+nu_ref = fista_infer(res, reg, W, x, iters=P["ref_iters"])
 
 out = {}
 for mode in ["exact", "exact_fista", "ring", "ring_q8", "ring_async"]:
-    # bisect-ish sweep of iteration counts to the 40 dB threshold
+    # bisect-ish sweep of iteration counts to the SNR threshold
     reached = None
-    for iters in [25, 50, 100, 200, 400, 800, 1600, 3200, 6400, 12800]:
+    for iters in P["sweep"]:
         coder = DistributedSparseCoder(mesh, res, reg, DistConfig(mode=mode, iters=iters))
         Ws, xs = coder.shard(W, x)
         nu, _ = coder.solve(Ws, xs)
-        if float(snr_db(nu_ref, nu)) >= 40.0:
+        if float(snr_db(nu_ref, nu)) >= P["target_db"]:
             reached = iters
             break
     # bytes on wire per iteration per device (B_loc x M messages)
@@ -51,32 +56,42 @@ for mode in ["exact", "exact_fista", "ring", "ring_q8", "ring_async"]:
     else:
         per_iter = 2 * b_loc * M * 4            # two ppermutes of fp32
     out[mode] = {
-        "iters_to_40db": reached,
+        "iters_to_target": reached,
         "wire_bytes_per_iter_per_dev": per_iter,
-        "wire_bytes_to_40db": (reached * per_iter) if reached else None,
+        "wire_bytes_to_target": (reached * per_iter) if reached else None,
     }
 print(json.dumps(out))
 """
 
 
-def run():
-    import os
+def run(smoke: bool | None = None):
+    if smoke is None:
+        smoke = os.environ.get("BENCH_SMOKE", "0").lower() not in ("", "0", "false")
+    params = (
+        {"M": 32, "K": 64, "B": 8, "ref_iters": 800, "target_db": 20.0,
+         "sweep": [25, 50, 100, 200, 400, 800, 1600, 3200]}
+        if smoke
+        else {"M": 64, "K": 256, "B": 16, "ref_iters": 2000, "target_db": 40.0,
+              "sweep": [25, 50, 100, 200, 400, 800, 1600, 3200, 6400, 12800]}
+    )
 
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = str(ROOT / "src")
-    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
-                          capture_output=True, text=True, timeout=1800)
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT, json.dumps(params)], env=env,
+        capture_output=True, text=True, timeout=1800)
     if proc.returncode != 0:
         emit("gossip/error", 1, proc.stderr[-300:].replace(",", ";"))
         return None
     out = json.loads(proc.stdout.strip().splitlines()[-1])
-    base = out["exact"]["wire_bytes_to_40db"]
+    base = out["exact"]["wire_bytes_to_target"]
     for mode, r in out.items():
-        emit(f"gossip/{mode}/iters_to_40db", r["iters_to_40db"])
-        if r["wire_bytes_to_40db"]:
-            emit(f"gossip/{mode}/wire_bytes_to_40db", r["wire_bytes_to_40db"],
-                 f"{base / r['wire_bytes_to_40db']:.1f}x fewer than exact" if base else "")
+        emit(f"gossip/{mode}/iters_to_{params['target_db']:.0f}db", r["iters_to_target"])
+        if r["wire_bytes_to_target"]:
+            emit(f"gossip/{mode}/wire_bytes_to_{params['target_db']:.0f}db",
+                 r["wire_bytes_to_target"],
+                 f"{base / r['wire_bytes_to_target']:.1f}x fewer than exact" if base else "")
     save_json("gossip_modes", out)
     return out
 

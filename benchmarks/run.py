@@ -13,7 +13,7 @@ import sys
 import time
 import traceback
 
-ALL = ["fig4", "fig5", "table3", "table4", "kernel", "gossip", "roofline"]
+ALL = ["fig4", "fig5", "table3", "table4", "kernel", "gossip", "serve", "roofline"]
 
 
 def main() -> None:
@@ -40,6 +40,8 @@ def main() -> None:
                 from benchmarks import kernel_fusion as b
             elif name == "gossip":
                 from benchmarks import gossip_modes as b
+            elif name == "serve":
+                from benchmarks import serve_throughput as b
             elif name == "roofline":
                 from benchmarks import roofline as b
             else:

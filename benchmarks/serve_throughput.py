@@ -1,0 +1,56 @@
+"""Streaming-service benchmark: samples/sec + latency percentiles of the
+online dictionary service (repro.runtime.service) on a forced host mesh,
+including one mid-stream elastic growth event.
+
+Runs `repro.launch.serve_dict --json` in a subprocess (the forced device
+count must be set before jax initializes) and re-emits the BENCH payload as
+CSV rows + experiments/bench/serve_throughput.json.
+
+Reduced-size mode: set BENCH_SMOKE=1 (the CI benchmark smoke job does) to
+cut samples/iterations so the perf path is exercised in seconds.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import ROOT, emit, save_json
+
+
+def run(smoke: bool | None = None):
+    if smoke is None:
+        smoke = os.environ.get("BENCH_SMOKE", "0").lower() not in ("", "0", "false")
+    samples, iters, grow_at = (160, 60, 80) if smoke else (600, 150, 300)
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(ROOT / "src")
+    cmd = [
+        sys.executable, "-m", "repro.launch.serve_dict",
+        "--samples", str(samples), "--iters", str(iters),
+        "--grow-at", str(grow_at), "--grow-model", "2",
+        "--mesh", "1x2", "--micro-batch", "16", "--json",
+    ]
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True, timeout=1800)
+    if proc.returncode != 0:
+        emit("serve/error", 1, proc.stderr[-300:].replace(",", ";"))
+        return None
+    bench_lines = [l for l in proc.stdout.splitlines() if l.startswith("BENCH ")]
+    out = json.loads(bench_lines[-1][len("BENCH "):])
+
+    emit("serve/samples_per_s", f"{out['samples_per_s']:.1f}")
+    for p in ("p50", "p95", "p99"):
+        if p in out.get("latency_ms", {}):
+            emit(f"serve/latency_{p}_ms", f"{out['latency_ms'][p]:.1f}")
+    emit("serve/fit_steps", out["fit_steps"])
+    emit("serve/grow_events", len(out["grow_events"]),
+         "mid-stream model-axis growth" if out["grow_events"] else "")
+    save_json("serve_throughput", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -11,19 +11,14 @@ import numpy as np
 
 from repro.core.inference import fista_infer, recover_y, snr_db
 from repro.core.learner import DictionaryLearner, LearnerConfig
+from repro.data.synthetic import sparse_stream
 
 
 def main():
-    # -- planted sparse data -------------------------------------------------
-    rng = np.random.default_rng(0)
+    # -- planted sparse data (the shared x = W0 y + noise model) -------------
     m, k_true, n = 24, 32, 2048
-    W0 = rng.normal(size=(m, k_true)).astype(np.float32)
-    W0 /= np.linalg.norm(W0, axis=0, keepdims=True)
-    Y = np.zeros((n, k_true), np.float32)
-    for i in range(n):
-        idx = rng.choice(k_true, 3, replace=False)
-        Y[i, idx] = rng.uniform(0.5, 1.5, 3) * rng.choice([-1, 1], 3)
-    X = jnp.asarray(Y @ W0.T + 0.01 * rng.normal(size=(n, m)).astype(np.float32))
+    X, W0 = sparse_stream(n, m=m, k_true=k_true, seed=0, return_dictionary=True)
+    X = jnp.asarray(X)
 
     # -- the paper's Algorithm 1: 16 agents, 3 atoms each -------------------
     cfg = LearnerConfig(

@@ -43,6 +43,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.conjugates import Regularizer, Residual
+from repro.core.dictionary import init_dictionary
+from repro.core.inference import power_sigma2
 from repro.runtime import dist
 from repro.runtime.dist import shard_map
 
@@ -61,7 +63,9 @@ class DistConfig:
     model_axis: str = "model"
     data_axes: Tuple[str, ...] = ("data",)
     use_kernel: bool = False  # fuse local hot loop with the Pallas kernel
-    kernel_interpret: bool = True  # interpret=True on CPU containers
+    # Pallas interpret mode: None -> auto-detect (interpret only where there
+    # is no Mosaic lowering, i.e. CPU); True/False force it explicitly.
+    kernel_interpret: Optional[bool] = None
 
 
 # ---------------------------------------------------------------------------
@@ -71,6 +75,15 @@ class DistConfig:
 
 _quantize_q8 = dist.quantize_q8
 _dequantize_q8 = dist.dequantize_q8
+
+
+def resolve_kernel_interpret(flag: Optional[bool]) -> bool:
+    """Resolve DistConfig.kernel_interpret: an explicit bool wins; None means
+    auto — Pallas interpret mode only on CPU backends (no Mosaic/Triton
+    lowering there), compiled kernels everywhere else."""
+    if flag is None:
+        return jax.default_backend() == "cpu"
+    return bool(flag)
 
 
 # ---------------------------------------------------------------------------
@@ -96,25 +109,26 @@ def _local_code_and_back(
             gamma=reg.gamma,
             delta=reg.delta,
             nonneg=reg.nonneg,
-            interpret=cfg.kernel_interpret,
+            interpret=resolve_kernel_interpret(cfg.kernel_interpret),
         )
     y = reg.ystar(nu @ W_loc)  # (B, K_loc)
     return y, y @ W_loc.T
 
 
-def _safe_mu_local(res: Residual, reg: Regularizer, W_loc: Array, n_model: Array) -> Array:
-    """Per-shard curvature bound -> globally-safe diffusion step (psum'd max)."""
+def _safe_mu_local(res: Residual, reg: Regularizer, W_loc: Array, axis: str) -> Array:
+    """Per-shard curvature bound -> globally-safe diffusion step (pmax'd).
+
+    Every agent bounds its own local Lipschitz constant L_k <= c_f/N +
+    sigma_max(W_k)^2/delta, then the max is reduced over the model axis so
+    ALL agents step with the one mu that is safe for the worst shard —
+    the distributed equivalent of `safe_diffusion_mu` in core/inference.py
+    (which maxes over blocks).  Without the reduction each device would use
+    a step safe only for its own shard and the gossip iterates can diverge.
+    """
     c_f = res.grad_fstar(jnp.ones((1,), W_loc.dtype))[0]
-    v = jnp.full((W_loc.shape[1],), 1.0 / jnp.sqrt(W_loc.shape[1]), W_loc.dtype)
-
-    def it(v, _):
-        u = W_loc @ v
-        v = W_loc.T @ u
-        nv = jnp.linalg.norm(v)
-        return v / (nv + 1e-30), nv
-
-    _, sigs = jax.lax.scan(it, v, None, length=20)
-    return 0.9 / (c_f / n_model + sigs[-1] / reg.delta)
+    n_model = jax.lax.psum(1, axis)
+    sig2_max = jax.lax.pmax(power_sigma2(W_loc), axis)
+    return 0.9 / (c_f / n_model + sig2_max / reg.delta)
 
 
 def _safe_mu_exact(res: Residual, reg: Regularizer, W_loc: Array, axis: str) -> Array:
@@ -122,16 +136,7 @@ def _safe_mu_exact(res: Residual, reg: Regularizer, W_loc: Array, axis: str) -> 
     sigma_max(W)^2 <= sum_k sigma_max(W_k)^2 (Frobenius-style, loose but safe
     and collective-cheap: one scalar psum)."""
     c_f = res.grad_fstar(jnp.ones((1,), W_loc.dtype))[0]
-    v = jnp.full((W_loc.shape[1],), 1.0 / jnp.sqrt(W_loc.shape[1]), W_loc.dtype)
-
-    def it(v, _):
-        u = W_loc @ v
-        v = W_loc.T @ u
-        nv = jnp.linalg.norm(v)
-        return v / (nv + 1e-30), nv
-
-    _, sigs = jax.lax.scan(it, v, None, length=20)
-    sig2_sum = jax.lax.psum(sigs[-1], axis)
+    sig2_sum = jax.lax.psum(power_sigma2(W_loc), axis)
     return 1.0 / (c_f + sig2_sum / reg.delta)
 
 
@@ -184,6 +189,28 @@ class DistributedSparseCoder:
                 check_vma=False,
             )
         )
+        # Diagnostic/parity hooks: per-agent stacked outputs (N leading axis,
+        # the reference engine's layout) and the per-rank adaptive step size.
+        self._solve_stacked = jax.jit(
+            shard_map(
+                lambda W_loc, x_loc: tuple(
+                    v[None] for v in self._solve_body(W_loc, x_loc)
+                ),
+                mesh=mesh,
+                in_specs=(self._w_spec, self._x_spec),
+                out_specs=(P(ax, *da, None), P(ax, *da, None)),
+                check_vma=False,
+            )
+        )
+        self._mu = jax.jit(
+            shard_map(
+                self._mu_body,
+                mesh=mesh,
+                in_specs=(self._w_spec,),
+                out_specs=P(ax),
+                check_vma=False,
+            )
+        )
 
     # -- solver body (runs per device) -------------------------------------
 
@@ -207,11 +234,7 @@ class DistributedSparseCoder:
         nu0 = jnp.zeros_like(x_loc)
 
         if cfg.mode in ("exact", "exact_fista"):
-            mu = (
-                _safe_mu_exact(res, reg, W_loc, ax)
-                if cfg.mu <= 0
-                else jnp.asarray(cfg.mu, x_loc.dtype)
-            )
+            mu = self._mu_for(W_loc)
 
             def total_grad(nu):
                 y, back = _local_code_and_back(res, reg, W_loc, nu, cfg)
@@ -239,11 +262,7 @@ class DistributedSparseCoder:
                 (nu, _), _ = jax.lax.scan(step, (nu0, nu0), None, length=cfg.iters)
 
         else:  # ring family: per-agent estimates + neighbor gossip
-            mu = (
-                _safe_mu_local(res, reg, W_loc, n_model)
-                if cfg.mu <= 0
-                else jnp.asarray(cfg.mu, x_loc.dtype)
-            )
+            mu = self._mu_for(W_loc)
             beta = jnp.asarray(cfg.beta, x_loc.dtype)
             # ring exchanges need the static axis size (perms can't trace).
             nm = dist.axis_sizes(self.mesh)[ax]
@@ -304,6 +323,22 @@ class DistributedSparseCoder:
         y, _ = _local_code_and_back(res, reg, W_loc, nu, cfg)
         return nu, y
 
+    def _mu_for(self, W_loc: Array) -> Array:
+        """THE step-size rule: shared by the solver bodies and the
+        adaptive_mu diagnostic so the two can never diverge."""
+        res, reg, cfg = self.res, self.reg, self.cfg
+        if cfg.mu > 0:
+            return jnp.asarray(cfg.mu, W_loc.dtype)
+        if cfg.mode in ("exact", "exact_fista"):
+            return _safe_mu_exact(res, reg, W_loc, cfg.model_axis)
+        return _safe_mu_local(res, reg, W_loc, cfg.model_axis)
+
+    def _mu_body(self, W_loc: Array) -> Array:
+        """The step size this rank's solve would use (shape (1,) per rank;
+        stacked to (N,) by the out_spec).  After the pmax fix all ranks must
+        report the identical value for the adaptive ring modes."""
+        return self._mu_for(W_loc)[None]
+
     # -- one dictionary-learning step (infer + local update) ---------------
 
     def _fit_body(self, W_loc: Array, x_loc: Array, mu_w: Array) -> Array:
@@ -347,11 +382,67 @@ class DistributedSparseCoder:
         """Novelty scores for test batch h (paper Eq. 63-66, exact path)."""
         return self._score(W, h)
 
+    def solve_per_agent(self, W: Array, x: Array) -> Tuple[Array, Array]:
+        """Dual inference with per-agent outputs stacked on a leading N axis:
+        nu (N, B, M) and y (N, B, Kb) — the reference engine's layout, used
+        by the ref<->dist parity tests and debugging."""
+        return self._solve_stacked(W, x)
+
+    def adaptive_mu(self, W: Array) -> Array:
+        """Per-rank step size the configured mode would use, gathered to
+        (N,).  All entries must agree (regression hook for the pmax fix)."""
+        return self._mu(W)
+
     def shard(self, W: Array, x: Array) -> Tuple[Array, Array]:
         """Place global arrays with the engine's shardings (for benchmarks)."""
         W = jax.device_put(W, NamedSharding(self.mesh, self._w_spec))
         x = jax.device_put(x, NamedSharding(self.mesh, self._x_spec))
         return W, x
+
+    # -- serving hooks: double-buffer snapshot + elastic model-axis growth --
+
+    def snapshot(self, W: Array) -> Array:
+        """Read-side copy of W placed with the coder's sharding.
+
+        `fit_batch` is functional (it returns a NEW buffer and leaves its
+        input untouched), so double-buffering for a serving path is just
+        reference management: readers keep coding against the last published
+        snapshot while the learner advances the live copy; publishing is an
+        atomic swap of the reference (see repro.runtime.service)."""
+        return jax.device_put(W, NamedSharding(self.mesh, self._w_spec))
+
+    def grown(
+        self, W: Array, extra_model: int, key: jax.Array
+    ) -> Tuple["DistributedSparseCoder", Array]:
+        """Elastic growth: the distributed counterpart of
+        `DictionaryLearner.expanded()` (paper Sec. IV-C — new atoms/agents
+        arrive mid-stream).
+
+        Returns (new_coder, W2): a coder on a mesh whose `model` axis is
+        larger by `extra_model` devices, and the dictionary re-sharded onto
+        it with the old atom shards preserved and `extra_model` fresh shards
+        (unit-norm, nonneg-projected when the task demands it) appended.
+        Re-sharding goes through the runtime/dist seam: the new mesh comes
+        from `dist.make_mesh` and placement from the new coder's sharding.
+        """
+        if extra_model <= 0:
+            raise ValueError(f"extra_model must be positive, got {extra_model}")
+        sizes = dist.axis_sizes(self.mesh)
+        n_old = sizes[self.cfg.model_axis]
+        n_new = n_old + int(extra_model)
+        names = tuple(self.mesh.axis_names)
+        shape = tuple(
+            n_new if nm == self.cfg.model_axis else sizes[nm] for nm in names
+        )
+        new_mesh = dist.make_mesh(shape, names)
+        new_coder = DistributedSparseCoder(new_mesh, self.res, self.reg, self.cfg)
+        m, k = W.shape
+        if k % n_old:
+            raise ValueError(f"K={k} not divisible by model={n_old}")
+        kb = k // n_old
+        fresh = init_dictionary(key, m, kb * int(extra_model), nonneg=self.reg.nonneg)
+        W2 = jnp.concatenate([jax.device_get(W), fresh], axis=1)
+        return new_coder, new_coder.snapshot(W2)
 
 
 # ---------------------------------------------------------------------------

@@ -150,6 +150,11 @@ def diffusion_infer(
             return nu, nu
 
         nu, traj = jax.lax.scan(outer, nu0, None, length=n_outer)
+        # When record_every does not divide cfg.iters, run the remainder
+        # (unrecorded) so the returned nu always reflects the full budget.
+        rem = cfg.iters - n_outer * record_every
+        if rem:
+            nu, _ = jax.lax.scan(step, nu, None, length=rem)
     else:
         nu, _ = jax.lax.scan(step, nu0, None, length=cfg.iters)
         traj = None
@@ -163,22 +168,30 @@ def diffusion_infer(
 # ---------------------------------------------------------------------------
 
 
-def estimate_dual_curvature(
-    res: Residual, reg: Regularizer, W: Array, power_iters: int = 20
-) -> Tuple[Array, Array]:
-    """(L, m) bounds for the dual cost: Hessian = c_f I + W D W^T / delta,
-    with D a 0/1 active-set diagonal => m >= c_f, L <= c_f + sigma_max(W)^2/delta.
-    sigma_max is estimated by power iteration (deterministic start)."""
-    c_f = res.grad_fstar(jnp.ones((1,), W.dtype))[0]  # 1 for l2, eta for huber
+def power_sigma2(W: Array, iters: int = 20) -> Array:
+    """sigma_max(W)^2 by power iteration (deterministic start).  THE shared
+    estimator behind every curvature bound — the reference safe step, the
+    distributed psum/pmax safe steps, and the FISTA L — so the parity tests'
+    asserted mu equality can never drift between copies."""
     v = jnp.full((W.shape[1],), 1.0 / jnp.sqrt(W.shape[1]), W.dtype)
 
     def it(v, _):
         u = W @ v
         v = W.T @ u
-        return v / (jnp.linalg.norm(v) + 1e-30), jnp.linalg.norm(v)
+        nv = jnp.linalg.norm(v)
+        return v / (nv + 1e-30), nv
 
-    v, sigmas = jax.lax.scan(it, v, None, length=power_iters)
-    sig2 = sigmas[-1]
+    _, sigs = jax.lax.scan(it, v, None, length=iters)
+    return sigs[-1]
+
+
+def estimate_dual_curvature(
+    res: Residual, reg: Regularizer, W: Array, power_iters: int = 20
+) -> Tuple[Array, Array]:
+    """(L, m) bounds for the dual cost: Hessian = c_f I + W D W^T / delta,
+    with D a 0/1 active-set diagonal => m >= c_f, L <= c_f + sigma_max(W)^2/delta."""
+    c_f = res.grad_fstar(jnp.ones((1,), W.dtype))[0]  # 1 for l2, eta for huber
+    sig2 = power_sigma2(W, power_iters)
     return c_f + sig2 / reg.delta, c_f
 
 
@@ -199,20 +212,7 @@ def safe_diffusion_mu(
     """
     c_f = res.grad_fstar(jnp.ones((1,), W_blocks.dtype))[0]
     n = W_blocks.shape[0]
-
-    def sig2_one(Wk):  # power iteration for sigma_max(W_k)^2
-        v = jnp.full((Wk.shape[1],), 1.0 / jnp.sqrt(Wk.shape[1]), Wk.dtype)
-
-        def it(v, _):
-            u = Wk @ v
-            v = Wk.T @ u
-            nv = jnp.linalg.norm(v)
-            return v / (nv + 1e-30), nv
-
-        _, sigs = jax.lax.scan(it, v, None, length=20)
-        return sigs[-1]
-
-    l_max = c_f / n + jnp.max(jax.vmap(sig2_one)(W_blocks)) / reg.delta
+    l_max = c_f / n + jnp.max(jax.vmap(power_sigma2)(W_blocks)) / reg.delta
     return safety / l_max
 
 

@@ -205,12 +205,18 @@ class DictionaryLearner:
         return self._fit(state, x)
 
     def fit(self, state: LearnerState, X: Array, batch_size: int = 4):
-        """Single-epoch streaming fit over rows of X (paper's online regime)."""
-        n = (X.shape[0] // batch_size) * batch_size
-        batches = X[:n].reshape(-1, batch_size, X.shape[1])
+        """Single-epoch streaming fit over rows of X (paper's online regime).
+
+        The final partial minibatch is processed as a smaller batch rather
+        than dropped — in the single-pass streaming regime every sample is
+        presented exactly once, so silently truncating the tail loses data.
+        """
+        n_full = (X.shape[0] // batch_size) * batch_size
         metrics = None
-        for xb in batches:
+        for xb in X[:n_full].reshape(-1, batch_size, X.shape[1]):
             state, metrics = self.fit_batch(state, xb)
+        if n_full < X.shape[0]:
+            state, metrics = self.fit_batch(state, X[n_full:])
         return state, metrics
 
     # -- dynamic network growth (novel-document experiment) ---------------

@@ -82,6 +82,47 @@ def patch_dataset(
 
 
 # ---------------------------------------------------------------------------
+# Planted sparse-code sample stream (streaming-service workload)
+# ---------------------------------------------------------------------------
+
+
+def sparse_stream(
+    n: int,
+    m: int = 32,
+    k_true: int = 48,
+    sparsity: int = 3,
+    noise: float = 0.01,
+    nonneg: bool = False,
+    seed: int = 0,
+    return_dictionary: bool = False,
+):
+    """(n, m) stream of samples x = W0 y + noise with y `sparsity`-sparse.
+
+    The canonical planted sparse-code model used by the quickstarts, the
+    learner tests, and the streaming-service/serve-throughput workloads
+    (deterministic, cheap, single-pass).  With `return_dictionary=True`
+    also returns the planted W0 (m, k_true) for recovery checks."""
+    rng = np.random.default_rng(seed)
+    W0 = rng.normal(size=(m, k_true)).astype(np.float32)
+    if nonneg:
+        W0 = np.abs(W0)
+    W0 /= np.linalg.norm(W0, axis=0, keepdims=True)
+    Y = np.zeros((n, k_true), np.float32)
+    for i in range(n):
+        idx = rng.choice(k_true, sparsity, replace=False)
+        sign = 1.0 if nonneg else rng.choice([-1.0, 1.0], sparsity)
+        Y[i, idx] = rng.uniform(0.5, 1.5, sparsity) * sign
+    X = (Y @ W0.T + noise * rng.standard_normal((n, m)).astype(np.float32)).astype(
+        np.float32
+    )
+    if nonneg:
+        X = np.abs(X)
+    if return_dictionary:
+        return X, W0
+    return X
+
+
+# ---------------------------------------------------------------------------
 # Topic documents (novel-document detection experiment)
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,150 @@
+"""Online streaming dictionary service launcher.
+
+Streams synthetic samples through the continuously-learning dictionary
+service (repro.runtime.service): micro-batched coding against a
+double-buffered snapshot, online `fit_batch` on the live copy, and one
+optional mid-stream elastic growth of the `model` axis.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  PYTHONPATH=src python -m repro.launch.serve_dict \\
+      --samples 600 --mesh 1x2 --grow-at 300 --grow-model 2
+
+Prints throughput (samples/s), per-sample latency percentiles, learner
+progress, and the growth event; `--json` additionally emits one
+machine-readable line (consumed by benchmarks/serve_throughput.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.conjugates import make_task
+from repro.core.dictionary import init_dictionary
+from repro.core.distributed import DistConfig, DistributedSparseCoder
+from repro.data.synthetic import sparse_stream
+from repro.runtime import dist
+from repro.runtime.service import DictionaryService, ServiceConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--task", type=str, default="sparse_svd")
+    ap.add_argument("--gamma", type=float, default=0.25)
+    ap.add_argument("--delta", type=float, default=0.05)
+    ap.add_argument("--mode", type=str, default="exact_fista",
+                    choices=["exact", "exact_fista", "ring", "ring_q8", "ring_async"])
+    ap.add_argument("--iters", type=int, default=150, help="dual iterations per solve")
+    ap.add_argument("--m", type=int, default=32, help="data dimension")
+    ap.add_argument("--atoms-per-agent", type=int, default=8)
+    ap.add_argument("--mesh", type=str, default="1x2", help="data x model")
+    ap.add_argument("--samples", type=int, default=600)
+    ap.add_argument("--micro-batch", type=int, default=16)
+    ap.add_argument("--max-wait-ms", type=float, default=20.0)
+    ap.add_argument("--mu-w", type=float, default=0.1)
+    ap.add_argument("--grow-at", type=int, default=300,
+                    help="sample index of the elastic growth event (0 = never)")
+    ap.add_argument("--grow-model", type=int, default=2,
+                    help="extra model-axis agents added at --grow-at")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="submit rate in samples/s (0 = as fast as possible)")
+    ap.add_argument("--no-learn", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", action="store_true",
+                    help="emit a single BENCH json line at the end")
+    args = ap.parse_args()
+
+    d, m_axis = (int(v) for v in args.mesh.split("x"))
+    if args.grow_at >= args.samples:
+        args.grow_at = 0  # growth point past the stream: never fires
+    need = d * (m_axis + (args.grow_model if args.grow_at else 0))
+    if jax.device_count() < need:
+        raise SystemExit(
+            f"need {need} devices for mesh {args.mesh} + growth; have "
+            f"{jax.device_count()} (set XLA_FLAGS=--xla_force_host_platform_device_count=N)"
+        )
+    mesh = dist.make_mesh((d, m_axis), (dist.DATA_AXIS, dist.MODEL_AXIS))
+    res, reg = make_task(args.task, gamma=args.gamma, delta=args.delta)
+    k0 = args.atoms_per_agent * m_axis
+    W0 = init_dictionary(jax.random.PRNGKey(args.seed), args.m, k0, nonneg=reg.nonneg)
+    coder = DistributedSparseCoder(
+        mesh, res, reg, DistConfig(mode=args.mode, iters=args.iters)
+    )
+    svc_cfg = ServiceConfig(
+        micro_batch=args.micro_batch,
+        max_wait_s=args.max_wait_ms / 1e3,
+        learn=not args.no_learn,
+        mu_w=args.mu_w,
+    )
+    X = sparse_stream(args.samples, m=args.m, k_true=k0, nonneg=reg.nonneg,
+                      seed=args.seed + 1)
+
+    print(f"serve_dict: task={args.task} mode={args.mode} mesh={args.mesh} "
+          f"M={args.m} K={k0} micro_batch={args.micro_batch} "
+          f"samples={args.samples} grow_at={args.grow_at or 'never'}")
+
+    futures = []
+    grow_fut = None
+    t0 = time.perf_counter()
+    with DictionaryService(coder, W0, svc_cfg) as svc:
+        for i in range(args.samples):
+            if args.grow_at and i == args.grow_at:
+                # let the pre-growth stream drain so the event lands truly
+                # mid-stream (coding continues against the old snapshot
+                # until the new coder/snapshot pair is published)
+                futures[-1].result(timeout=600)
+                grow_fut = svc.grow(args.grow_model, jax.random.PRNGKey(args.seed + 2))
+            if grow_fut is not None and i == args.samples - args.micro_batch:
+                # overlap growth with the stream, but make sure the final
+                # micro-batch is coded by the grown network
+                grow_fut.result(timeout=600)
+            futures.append(svc.submit(X[i]))
+            if args.rate > 0:
+                time.sleep(1.0 / args.rate)
+        results = [f.result(timeout=600) for f in futures]
+        if grow_fut is not None:
+            grow_info = grow_fut.result(timeout=600)
+            print(f"growth applied: {grow_info}")
+        stats = svc.stats()
+    wall_s = time.perf_counter() - t0
+
+    # Coding quality: for the l2-residual tasks nu* IS the fit residual
+    # (paper Eq. 53), so mean ||nu|| tracks how well the stream is coded.
+    pre = np.mean([np.linalg.norm(nu) for nu, _ in results[: args.micro_batch]])
+    post = np.mean([np.linalg.norm(nu) for nu, _ in results[-args.micro_batch:]])
+    k_dims = sorted({r[1].shape[0] for r in results})
+    assert len(results) == args.samples, "dropped samples!"
+
+    lat = stats.get("latency_ms", {})
+    print(f"coded {stats['coded']}/{args.samples} samples in {wall_s:.2f}s "
+          f"({stats['coded'] / wall_s:.1f} samples/s)")
+    print(f"latency ms: p50 {lat.get('p50', float('nan')):.1f}  "
+          f"p95 {lat.get('p95', float('nan')):.1f}  "
+          f"p99 {lat.get('p99', float('nan')):.1f}")
+    print(f"fit_steps {stats['fit_steps']}  published {stats['published']}  "
+          f"grow_events {len(stats['grow_events'])}  y dims seen {k_dims}")
+    print(f"mean ||nu||: first batch {pre:.4f} -> last batch {post:.4f}")
+
+    if args.json:
+        payload = {
+            "samples": args.samples,
+            "wall_s": wall_s,
+            "samples_per_s": stats["coded"] / wall_s,
+            "latency_ms": lat,
+            "fit_steps": stats["fit_steps"],
+            "published": stats["published"],
+            "grow_events": stats["grow_events"],
+            "y_dims": k_dims,
+            "residual_first": float(pre),
+            "residual_last": float(post),
+        }
+        print("BENCH " + json.dumps(payload))
+
+
+if __name__ == "__main__":
+    main()

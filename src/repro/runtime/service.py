@@ -1,0 +1,435 @@
+"""Online streaming dictionary service — the serving path of the engine.
+
+The paper's headline property is single-pass streaming: each sample is
+presented to the network once (Sec. I).  This module turns the multi-device
+dual solver (`core/distributed.DistributedSparseCoder`) into a service with
+exactly that contract:
+
+  * **micro-batching** — incoming per-sample requests are queued and flushed
+    as fixed-size micro-batches (padded, so every coder sees ONE compiled
+    shape); each sample is coded once and its `(nu, y)` resolved on a
+    per-request Future;
+  * **double-buffered dictionary** — readers code against a published
+    *snapshot* while `fit_batch` advances the *live* copy.  `fit_batch` is
+    functional (returns a new buffer), so the snapshot is immutable by
+    construction and publishing is an atomic reference swap: readers never
+    wait on a learning epoch or a dictionary swap and never observe a
+    half-written dictionary.  (On a shared device mesh the engine programs
+    themselves are serialized at micro-batch granularity — two multi-device
+    XLA programs must not interleave their collectives — so a coding batch
+    waits at most one fit step of compute.);
+  * **online learning** — every flushed micro-batch is also fed (once) to
+    the learner thread, which runs one distributed dictionary step on the
+    live copy and republishes every `publish_every` steps (if the learner
+    lags a sustained hot stream, batches beyond `learn_queue_cap` are
+    dropped and counted in stats(), so snapshot staleness and memory stay
+    bounded and coding never stalls on learning);
+  * **elastic growth** — `grow(extra_model, key)` re-shards the live
+    dictionary onto a mesh whose `model` axis is larger (the distributed
+    counterpart of `DictionaryLearner.expanded()`, paper Sec. IV-C: new
+    atoms/agents arrive mid-stream).  Growth is applied by the learner
+    thread at a step boundary; the batcher keeps coding against the old
+    (coder, snapshot) pair until the new pair is published.  One caveat on
+    jax 0.4.x: the new coder's programs can only be compiled via their
+    first execution, which must hold the exec lock (collectives from two
+    programs must not interleave on shared devices) — so an elastic-growth
+    swap pauses coding for one compile+warmup window.  Steady-state coding
+    and learning never recompile (fixed micro-batch shape).
+
+Consistency model: a sample's code reflects the newest snapshot published
+at the time its micro-batch is flushed — bounded staleness of at most
+`publish_every` fit steps plus one in-flight batch, never a torn read.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distributed import DistributedSparseCoder
+from repro.runtime import dist
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Knobs for the streaming service."""
+
+    micro_batch: int = 16  # samples per coding micro-batch (padded to this)
+    max_wait_s: float = 0.02  # flush a partial micro-batch after this long
+    learn: bool = True  # online dictionary learning on the live copy
+    mu_w: float = 0.05  # dictionary step size
+    warmup: bool = True  # compile solve/fit before serving (and before a
+    # growth swap), so cold-start and growth never stall the serving path
+    publish_every: int = 1  # fit steps between snapshot publishes
+    queue_capacity: int = 8192  # submit() blocks when this many are pending
+    learn_queue_cap: int = 64  # learn batches kept when the learner lags;
+    # beyond this, batches are dropped (counted in stats) so snapshot
+    # staleness and memory stay bounded and coding never stalls on learning
+    latency_window: int = 100_000  # per-sample latencies kept for stats
+
+
+class _Item:
+    __slots__ = ("x", "future", "t_submit")
+
+    def __init__(self, x: np.ndarray):
+        self.x = x
+        self.future: Future = Future()
+        self.t_submit = time.perf_counter()
+
+
+def _resolve(fut: Future, result=None, exc: Optional[BaseException] = None) -> None:
+    """Terminal-state a Future without ever raising: a client may have
+    cancelled it, and an InvalidStateError must not kill a worker thread."""
+    try:
+        if exc is not None:
+            fut.set_exception(exc)
+        else:
+            fut.set_result(result)
+    except Exception:
+        pass  # already cancelled/resolved by the client
+
+
+class DictionaryService:
+    """Continuously-learning dictionary server over a device mesh.
+
+    Usage:
+        coder = DistributedSparseCoder(mesh, res, reg, dist_cfg)
+        with DictionaryService(coder, W0, ServiceConfig()) as svc:
+            futs = [svc.submit(x_i) for x_i in stream]
+            svc.grow(extra_model=2, key=key)         # mid-stream, optional
+            results = [f.result() for f in futs]     # (nu_i, y_i) each
+    """
+
+    def __init__(
+        self,
+        coder: DistributedSparseCoder,
+        W0: Array,
+        cfg: ServiceConfig = ServiceConfig(),
+    ):
+        self.cfg = cfg
+        self._lock = threading.Lock()  # guards the (coder, snapshot, live) triple
+        # Multi-device XLA programs containing collectives deadlock if two of
+        # them interleave their rendezvous on the same device set (each
+        # device must see the programs in the same order).  All engine
+        # executions therefore serialize through this lock, at micro-batch
+        # granularity: a coding batch waits at most one fit step, never a
+        # full learning epoch or a dictionary swap.
+        self._exec_lock = threading.Lock()
+        # Makes the running-check + enqueue in submit()/grow() atomic w.r.t.
+        # stop()'s failure-drain, so a request racing shutdown is always
+        # either processed or failed — never stranded unresolved.
+        self._submit_lock = threading.Lock()
+        self._coder = coder
+        self._live = coder.snapshot(W0)
+        self._snap = self._live
+        self._m = int(W0.shape[0])
+        self._pad = self._pad_target(coder)
+        self._queue: "queue.Queue[_Item]" = queue.Queue(maxsize=cfg.queue_capacity)
+        self._learn_q: "queue.Queue[np.ndarray]" = queue.Queue(maxsize=cfg.learn_queue_cap)
+        self._grow_q: "queue.Queue[Tuple[int, jax.Array, Future]]" = queue.Queue()
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+        self._t_start: Optional[float] = None
+        # counters (learner-thread/ batcher-thread owned; read via stats())
+        self.submitted = 0
+        self.coded = 0
+        self.fit_steps = 0
+        self.fit_failures = 0
+        self.learn_dropped = 0
+        self.fit_first_error: Optional[str] = None
+        self.published = 0
+        self.grow_events: List[Dict] = []
+        self._latencies = collections.deque(maxlen=cfg.latency_window)
+
+    # -- helpers ----------------------------------------------------------
+
+    def _pad_target(self, coder: DistributedSparseCoder) -> int:
+        """Micro-batches are padded to a multiple of the data-axes extent so
+        the batch dim always shards evenly (x spec is P(data..., None))."""
+        sizes = dist.axis_sizes(coder.mesh)
+        d = 1
+        for nm in coder.cfg.data_axes:
+            d *= sizes[nm]
+        return max(self.cfg.micro_batch, d) + (-max(self.cfg.micro_batch, d)) % d
+
+    def _pad_rows(self, xb: np.ndarray) -> np.ndarray:
+        """Zero-pad a batch to the fixed micro-batch shape (one compiled
+        shape per coder; zero rows code to nu=0 and cost nothing)."""
+        b = xb.shape[0]
+        if b >= self._pad:
+            return xb
+        return np.concatenate(
+            [xb, np.zeros((self._pad - b, xb.shape[1]), xb.dtype)], axis=0
+        )
+
+    def _solve_padded(self, coder, snap, xb: np.ndarray):
+        """Code a real batch of b rows against `snap`."""
+        b = xb.shape[0]
+        with self._exec_lock:
+            nu, y = coder.solve(snap, jnp.asarray(self._pad_rows(xb)))
+            nu, y = np.asarray(nu), np.asarray(y)
+        return nu[:b], y[:b]
+
+    # -- lifecycle --------------------------------------------------------
+
+    def _warmup(self, coder: DistributedSparseCoder, W: Array) -> None:
+        """Trigger the jit compiles on a zero micro-batch so the first real
+        request (and the first post-growth request) pays no compile stall.
+        Results are discarded; with mu_w=0 the fit warmup is a no-op step."""
+        z = jnp.zeros((self._pad, self._m), jnp.float32)
+        jax.block_until_ready(coder.solve(W, z))
+        if self.cfg.learn:
+            jax.block_until_ready(coder.fit_batch(W, z, 0.0))
+
+    def start(self) -> "DictionaryService":
+        if self._threads:
+            raise RuntimeError("service already started")
+        if self._stop.is_set():
+            raise RuntimeError(
+                "service cannot be restarted after stop(); create a new "
+                "DictionaryService (counters and queues are single-run)"
+            )
+        if self.cfg.warmup:
+            self._warmup(self._coder, self._snap)
+        self._t_start = time.perf_counter()
+        self._threads = [
+            threading.Thread(target=self._batcher_loop, name="dict-batcher", daemon=True),
+            threading.Thread(target=self._learner_loop, name="dict-learner", daemon=True),
+        ]
+        for t in self._threads:
+            t.start()
+        return self
+
+    def stop(self) -> None:
+        """Drain the queues (every submitted sample is coded — single-pass
+        means no drops, including the tail), then join the workers.  Any
+        request that raced the shutdown is failed, never left hanging."""
+        self._stop.set()
+        for t in self._threads:
+            t.join()
+        err = RuntimeError("service stopped before this request was processed")
+        with self._submit_lock:  # no submit/grow can be mid-enqueue now
+            self._threads = []
+            while True:
+                try:
+                    _resolve(self._queue.get_nowait().future, exc=err)
+                except queue.Empty:
+                    break
+            while True:
+                try:
+                    _resolve(self._grow_q.get_nowait()[2], exc=err)
+                except queue.Empty:
+                    break
+
+    def __enter__(self) -> "DictionaryService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- client API -------------------------------------------------------
+
+    def submit(self, x: np.ndarray) -> Future:
+        """Enqueue one sample (M,); the Future resolves to (nu (M,), y (K,))."""
+        x = np.asarray(x, np.float32)
+        if x.shape != (self._m,):
+            raise ValueError(f"expected sample shape ({self._m},), got {x.shape}")
+        item = _Item(x)
+        with self._submit_lock:
+            if self._stop.is_set() or not self._threads:
+                raise RuntimeError(
+                    "service is not running (submit() before start() or after "
+                    "stop() would enqueue a sample no worker will ever code)"
+                )
+            self._queue.put(item)
+        with self._lock:
+            self.submitted += 1
+        return item.future
+
+    def submit_many(self, X: np.ndarray) -> List[Future]:
+        return [self.submit(x) for x in X]
+
+    def grow(self, extra_model: int, key: jax.Array) -> Future:
+        """Request elastic growth of the model axis by `extra_model` agents.
+        Applied by the learner thread at the next step boundary; the Future
+        resolves to an info dict once the new (coder, snapshot) is live."""
+        fut: Future = Future()
+        with self._submit_lock:
+            if self._stop.is_set() or not self._threads:
+                raise RuntimeError("service is not running; cannot grow")
+            self._grow_q.put((int(extra_model), key, fut))
+        return fut
+
+    def dictionary(self) -> np.ndarray:
+        """Host copy of the currently *published* dictionary snapshot."""
+        with self._lock:
+            snap = self._snap
+        return np.asarray(jax.device_get(snap))
+
+    def stats(self) -> Dict:
+        with self._lock:  # _latencies appends happen under the same lock
+            lat = np.asarray(self._latencies, np.float64)
+        elapsed = (time.perf_counter() - self._t_start) if self._t_start else 0.0
+        out = {
+            "submitted": self.submitted,
+            "coded": self.coded,
+            "fit_steps": self.fit_steps,
+            "fit_failures": self.fit_failures,
+            "fit_first_error": self.fit_first_error,
+            "learn_dropped": self.learn_dropped,
+            "published": self.published,
+            "grow_events": list(self.grow_events),
+            "elapsed_s": elapsed,
+            "samples_per_s": (self.coded / elapsed) if elapsed > 0 else 0.0,
+        }
+        if lat.size:
+            out["latency_ms"] = {
+                "p50": float(np.percentile(lat, 50) * 1e3),
+                "p95": float(np.percentile(lat, 95) * 1e3),
+                "p99": float(np.percentile(lat, 99) * 1e3),
+                "max": float(lat.max() * 1e3),
+            }
+        return out
+
+    # -- worker loops -----------------------------------------------------
+
+    def _collect(self) -> List[_Item]:
+        """Block for the first item, then fill up to micro_batch until the
+        max_wait deadline passes (classic size-or-deadline batcher)."""
+        items: List[_Item] = []
+        try:
+            items.append(self._queue.get(timeout=0.01))
+        except queue.Empty:
+            return items
+        deadline = time.perf_counter() + self.cfg.max_wait_s
+        while len(items) < self.cfg.micro_batch:
+            left = deadline - time.perf_counter()
+            if left <= 0:
+                break
+            try:
+                items.append(self._queue.get(timeout=left))
+            except queue.Empty:
+                break
+        return items
+
+    def _batcher_loop(self) -> None:
+        while True:
+            items = self._collect()
+            if not items:
+                if self._stop.is_set() and self._queue.empty():
+                    return
+                continue
+            xb = np.stack([it.x for it in items])
+            with self._lock:
+                coder, snap = self._coder, self._snap
+            try:
+                nu, y = self._solve_padded(coder, snap, xb)
+            except Exception as e:  # resolve futures so clients never hang
+                for it in items:
+                    _resolve(it.future, exc=e)
+                continue
+            # Account BEFORE resolving futures: a client woken by the last
+            # result may immediately read stats() and must see this batch
+            # counted (and must not observe _latencies mid-append).
+            t_done = time.perf_counter()
+            with self._lock:
+                for it in items:
+                    self._latencies.append(t_done - it.t_submit)
+                self.coded += len(items)
+            if self.cfg.learn:
+                try:
+                    self._learn_q.put_nowait(xb)
+                except queue.Full:
+                    # learner lagging: drop (and count) rather than stall
+                    # coding or let staleness/memory grow without bound
+                    self.learn_dropped += 1
+            for i, it in enumerate(items):
+                _resolve(it.future, (nu[i], y[i]))
+
+    def _learner_loop(self) -> None:
+        while True:
+            self._maybe_grow()
+            try:
+                xb = self._learn_q.get(timeout=0.02)
+            except queue.Empty:
+                # Exit only once the batcher has EXITED (not merely an empty
+                # queue — it may be mid-solve, about to enqueue the final
+                # learn batch) and everything it produced is consumed.
+                batcher = self._threads[0] if self._threads else None
+                if (
+                    self._stop.is_set()
+                    and (batcher is None or not batcher.is_alive())
+                    and self._learn_q.empty()
+                ):
+                    return
+                continue
+            with self._lock:
+                coder, live = self._coder, self._live
+            b = xb.shape[0]
+            xb = self._pad_rows(xb)
+            # Zero pad rows code to nu=0 so they add nothing to the gradient
+            # sum; rescale mu_w so the minibatch mean is over REAL samples.
+            mu_w_eff = self.cfg.mu_w * (xb.shape[0] / b)
+            try:
+                with self._exec_lock:
+                    live2 = coder.fit_batch(live, jnp.asarray(xb), mu_w_eff)
+                    jax.block_until_ready(live2)
+            except Exception as e:
+                # A failed fit step must never take down serving, but it
+                # must not be invisible either: count it and keep the first
+                # error for stats().
+                self.fit_failures += 1
+                if self.fit_first_error is None:
+                    self.fit_first_error = repr(e)
+                continue
+            self.fit_steps += 1
+            with self._lock:
+                # only publish if no growth swapped the coder underneath us
+                if self._coder is coder:
+                    self._live = live2
+                    if self.fit_steps % self.cfg.publish_every == 0:
+                        self._snap = live2
+                        self.published += 1
+
+    def _maybe_grow(self) -> None:
+        try:
+            extra, key, fut = self._grow_q.get_nowait()
+        except queue.Empty:
+            return
+        try:
+            with self._lock:
+                coder, live = self._coder, self._live
+            k_old = int(live.shape[1])
+            new_coder, W2 = coder.grown(live, extra, key)
+            if self.cfg.warmup:
+                # compile the new coder OFF the serving path: readers keep
+                # coding on the old (coder, snapshot) pair until the swap.
+                # The warmup executes on devices shared with in-flight
+                # old-coder programs, so it takes the exec lock too.
+                with self._exec_lock:
+                    self._warmup(new_coder, W2)
+            with self._lock:
+                self._coder, self._live, self._snap = new_coder, W2, W2
+            self.published += 1
+            info = {
+                "at_coded": self.coded,
+                "k_old": k_old,
+                "k_new": int(W2.shape[1]),
+                "model_old": dist.axis_sizes(coder.mesh)[coder.cfg.model_axis],
+                "model_new": dist.axis_sizes(new_coder.mesh)[new_coder.cfg.model_axis],
+            }
+            self.grow_events.append(info)
+            _resolve(fut, info)
+        except Exception as e:
+            _resolve(fut, exc=e)

@@ -126,6 +126,30 @@ def test_trajectory_recording():
     assert snrs[-1] >= snrs[0]
 
 
+def test_trajectory_recording_non_divisible_runs_full_budget():
+    """record_every not dividing iters must still run ALL iters: the
+    remainder is executed (unrecorded) after the recorded outer scans."""
+    res, reg, W, W_blocks, x = _problem()
+    n = W_blocks.shape[0]
+    A = jnp.asarray(topo.make_topology("full", n), jnp.float32)
+    informed = jnp.ones((n,), jnp.float32)
+    mu = safe_diffusion_mu(res, reg, W_blocks)
+    # 110 iters, record every 25 -> 4 snapshots + a 10-iteration remainder
+    nu_rec, _, traj = diffusion_infer(
+        res, reg, W_blocks, x, A, informed,
+        DiffusionConfig(iters=110), record_every=25, mu=mu,
+    )
+    assert traj.shape[0] == 4
+    nu_plain, _, _ = diffusion_infer(
+        res, reg, W_blocks, x, A, informed, DiffusionConfig(iters=110), mu=mu,
+    )
+    np.testing.assert_allclose(
+        np.asarray(nu_rec), np.asarray(nu_plain), rtol=1e-6, atol=1e-7
+    )
+    # and the final iterate is strictly past the last recorded snapshot
+    assert float(jnp.max(jnp.abs(nu_rec - traj[-1]))) > 0.0
+
+
 def test_safe_mu_is_stable_across_random_dictionaries():
     """The curvature-adaptive step never diverges (beyond-paper: the paper
     hand-tunes mu against CVX, Sec. IV-A)."""

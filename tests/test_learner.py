@@ -17,23 +17,16 @@ from repro.core.dictionary import (
     project_unit_cols,
 )
 from repro.core.learner import DictionaryLearner, LearnerConfig
+from repro.data.synthetic import sparse_stream
 
 
 def planted_data(m=16, k_true=24, n=512, sparsity=3, seed=0, nonneg=False):
-    """x = W0 y with y k-sparse — the recoverable regime."""
-    rng = np.random.default_rng(seed)
-    W0 = rng.normal(size=(m, k_true)).astype(np.float32)
-    if nonneg:
-        W0 = np.abs(W0)
-    W0 /= np.linalg.norm(W0, axis=0, keepdims=True)
-    Y = np.zeros((n, k_true), np.float32)
-    for i in range(n):
-        idx = rng.choice(k_true, sparsity, replace=False)
-        amp = rng.uniform(0.5, 1.5, sparsity)
-        if not nonneg:
-            amp *= rng.choice([-1, 1], sparsity)
-        Y[i, idx] = amp
-    X = Y @ W0.T + 0.01 * rng.normal(size=(n, m)).astype(np.float32)
+    """x = W0 y with y k-sparse — the recoverable regime (the shared
+    planted model from repro.data.synthetic)."""
+    X, W0 = sparse_stream(
+        n, m=m, k_true=k_true, sparsity=sparsity, nonneg=nonneg, seed=seed,
+        return_dictionary=True,
+    )
     return jnp.asarray(X), jnp.asarray(W0)
 
 
@@ -94,6 +87,35 @@ def test_recovers_planted_atoms():
     cos = np.abs(W0.T @ W)  # (k_true, k)
     hits = (cos.max(axis=1) > 0.9).mean()
     assert hits > 0.8, f"only {hits:.0%} of planted atoms recovered"
+
+
+def test_fit_processes_streaming_tail():
+    """fit() must not drop the final partial minibatch — in the paper's
+    single-pass streaming regime every sample is seen exactly once."""
+    X, _ = planted_data(n=10)
+    cfg = LearnerConfig(m=16, k=16, n_agents=2, engine="exact", inference_iters=20)
+    learner = DictionaryLearner(cfg)
+    state = learner.init_state()
+    # 10 samples / batch 4 -> two full batches + a tail of 2 = 3 steps
+    state, metrics = learner.fit(state, X, batch_size=4)
+    assert int(state.step) == 3
+    assert metrics is not None and np.isfinite(float(metrics.primal_obj))
+    # fewer samples than one batch: the whole input is the tail (1 step)
+    state2 = learner.init_state()
+    state2, metrics2 = learner.fit(state2, X[:3], batch_size=8)
+    assert int(state2.step) == 1
+    assert metrics2 is not None
+
+    # the tail is processed as a (smaller) batch: fit == manual batch loop
+    state_a = learner.init_state()
+    state_a, _ = learner.fit(state_a, X, batch_size=4)
+    state_b = learner.init_state()
+    for xb in (X[0:4], X[4:8], X[8:10]):
+        state_b, _ = learner.fit_batch(state_b, xb)
+    np.testing.assert_allclose(
+        np.asarray(learner.dictionary(state_a)),
+        np.asarray(learner.dictionary(state_b)), rtol=1e-5, atol=1e-6,
+    )
 
 
 def test_network_growth_preserves_atoms():

@@ -1,10 +1,13 @@
-"""Beyond-paper engineering table: convergence-vs-communication of the five
+"""Beyond-paper engineering table: convergence-vs-communication of the
 production gossip schedules (exact / exact_fista / ring / ring_q8 /
-ring_async) on a forced multi-device host mesh.
+ring_async plus graph-topology rows) on a forced multi-device host mesh.
 
-Reports, per mode: iterations to reach the target SNR, bytes-on-wire per
-iteration per device (analytic), and total wire bytes to target — the
-quantity the int8 error-feedback and FISTA modes exist to cut.
+Reports, per mode (and per graph topology): iterations to reach the target
+SNR, the combiner's mixing rate (second-largest singular value of A — the
+gossip contraction factor, so convergence-vs-lambda_2 is measurable across
+topologies), bytes-on-wire per iteration per device (analytic), and total
+wire bytes to target — the quantity the int8 error-feedback and FISTA modes
+exist to cut.
 
 Reduced-size mode: set BENCH_SMOKE=1 (the CI benchmark smoke job does) for
 a smaller problem, shorter sweep, and a lower SNR target.
@@ -20,8 +23,9 @@ import sys
 from benchmarks.common import ROOT, emit, save_json
 
 SCRIPT = r"""
-import json, sys
+import dataclasses, json, sys
 import jax, jax.numpy as jnp
+from repro.core import topology as topo
 from repro.core.conjugates import make_task
 from repro.core.distributed import DistributedSparseCoder, DistConfig, make_debug_mesh
 from repro.core.inference import fista_infer, snr_db
@@ -36,27 +40,41 @@ W = W / jnp.linalg.norm(W, axis=0)
 x = jax.random.normal(jax.random.PRNGKey(2), (B, M))
 nu_ref = fista_infer(res, reg, W, x, iters=P["ref_iters"])
 
+# Row name -> DistConfig.  graph:* rows sweep the paper's Sec.-IV-B regime
+# (arbitrary doubly-stochastic combiners) so convergence can be read against
+# the combiner's mixing rate.
+ROWS = {mode: DistConfig(mode=mode, iters=1) for mode in
+        ["exact", "exact_fista", "ring", "ring_q8", "ring_async"]}
+for t in ["ring_metropolis", "torus", "erdos"]:
+    ROWS[f"graph:{t}"] = DistConfig(mode="graph", iters=1, topology=t)
+
 out = {}
-for mode in ["exact", "exact_fista", "ring", "ring_q8", "ring_async"]:
-    # bisect-ish sweep of iteration counts to the SNR threshold
+for name, base_cfg in ROWS.items():
+    mix = None
     reached = None
+    per_iter = None
     for iters in P["sweep"]:
-        coder = DistributedSparseCoder(mesh, res, reg, DistConfig(mode=mode, iters=iters))
+        cfg = dataclasses.replace(base_cfg, iters=iters)
+        coder = DistributedSparseCoder(mesh, res, reg, cfg)
+        if mix is None:
+            mix = topo.mixing_rate(coder.combiner())
+            b_loc = B  # data=1 here
+            if cfg.mode in ("exact", "exact_fista"):
+                per_iter = 2 * b_loc * M * 4        # one psum (all-reduce) of (B, M) fp32
+            elif cfg.mode == "ring_q8":
+                per_iter = 2 * b_loc * (M * 1 + 4)  # two ppermutes of int8 + row scale
+            elif cfg.mode in ("ring", "ring_async"):
+                per_iter = 2 * b_loc * M * 4        # two ppermutes of fp32
+            else:  # graph family: one fp32 message per schedule round
+                per_iter = coder.gossip_schedule.messages_per_iter * b_loc * M * 4
         Ws, xs = coder.shard(W, x)
         nu, _ = coder.solve(Ws, xs)
         if float(snr_db(nu_ref, nu)) >= P["target_db"]:
             reached = iters
             break
-    # bytes on wire per iteration per device (B_loc x M messages)
-    b_loc = B  # data=1 here
-    if mode in ("exact", "exact_fista"):
-        per_iter = 2 * b_loc * M * 4            # one psum (all-reduce) of (B, M) fp32
-    elif mode == "ring_q8":
-        per_iter = 2 * b_loc * (M * 1 + 4)      # two ppermutes of int8 + row scale
-    else:
-        per_iter = 2 * b_loc * M * 4            # two ppermutes of fp32
-    out[mode] = {
+    out[name] = {
         "iters_to_target": reached,
+        "mixing_rate": mix,
         "wire_bytes_per_iter_per_dev": per_iter,
         "wire_bytes_to_target": (reached * per_iter) if reached else None,
     }
@@ -88,6 +106,7 @@ def run(smoke: bool | None = None):
     base = out["exact"]["wire_bytes_to_target"]
     for mode, r in out.items():
         emit(f"gossip/{mode}/iters_to_{params['target_db']:.0f}db", r["iters_to_target"])
+        emit(f"gossip/{mode}/mixing_rate", f"{r['mixing_rate']:.4f}")
         if r["wire_bytes_to_target"]:
             emit(f"gossip/{mode}/wire_bytes_to_{params['target_db']:.0f}db",
                  r["wire_bytes_to_target"],

@@ -1,0 +1,63 @@
+"""Graph-topology gossip quickstart: the paper's Sec.-IV-B regime on the
+production engine.
+
+The reference experiments run diffusion under Metropolis weights on
+connected random graphs.  `DistConfig(mode="graph", topology=...)` runs the
+SAME combiners on a real device mesh: the doubly-stochastic matrix from
+`core/topology.make_topology` is compiled once into a static ppermute
+schedule (one shift per distinct graph edge-offset; torus combiners get the
+4-link 2-D ICI schedule), and every agent steps with the pmax'd globally
+safe mu.
+
+Denser graphs have a smaller mixing rate (second-largest singular value of
+A) and need fewer gossip iterations to reach the same SNR — run this to see
+convergence line up with lambda_2 across topologies.
+
+  PYTHONPATH=src python examples/graph_gossip.py
+"""
+
+import os
+
+# The engine maps agents onto mesh devices; force a multi-device host view
+# BEFORE jax initializes so this demo runs on a plain CPU container.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conjugates import make_task
+from repro.core.distributed import DistConfig, DistributedSparseCoder
+from repro.core.inference import fista_infer, snr_db
+from repro.runtime import dist
+
+
+def main():
+    m, k, b = 32, 64, 8
+    res, reg = make_task("sparse_svd", gamma=0.1, delta=0.1)
+    mesh = dist.debug_mesh(model=8, data=1)
+    W = jax.random.normal(jax.random.PRNGKey(1), (m, k))
+    W = W / jnp.linalg.norm(W, axis=0)
+    x = jax.random.normal(jax.random.PRNGKey(2), (b, m))
+    nu_ref = fista_infer(res, reg, W, x, iters=1500)
+
+    print(f"{'topology':<16} {'mixing_rate':>11} {'msgs/iter':>9} "
+          f"{'snr@400':>8} {'snr@1600':>9}")
+    for topology in ("full", "erdos", "torus", "ring_metropolis"):
+        row = []
+        coder = None
+        for iters in (400, 1600):
+            coder = DistributedSparseCoder(
+                mesh, res, reg,
+                DistConfig(mode="graph", iters=iters, topology=topology),
+            )
+            Ws, xs = coder.shard(W, x)
+            nu, _ = coder.solve(Ws, xs)
+            row.append(float(snr_db(nu_ref, jnp.asarray(nu))))
+        info = coder.combiner_info()
+        print(f"{topology:<16} {info['mixing_rate']:>11.4f} "
+              f"{coder.gossip_schedule.messages_per_iter:>9d} "
+              f"{row[0]:>8.1f} {row[1]:>9.1f}")
+
+
+if __name__ == "__main__":
+    main()

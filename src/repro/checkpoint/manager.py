@@ -38,8 +38,24 @@ def _flatten(tree):
     return leaves, treedef
 
 
+def _fsync_path(p: pathlib.Path) -> None:
+    """fsync a file or directory by path (directory fsync commits the
+    entries — the file data AND the names must be durable before rename)."""
+    fd = os.open(p, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save_pytree(path: pathlib.Path, tree: Any) -> None:
-    """Atomic synchronous save of a pytree of arrays."""
+    """Atomic synchronous save of a pytree of arrays: write, fsync, rename.
+
+    Every leaf file (and the metadata/DONE markers) is fsync'd, then the tmp
+    directory, then the parent after the rename — os.replace alone only
+    orders the METADATA: a crash after an un-fsync'd rename can commit a
+    directory whose file contents never hit disk, i.e. a checkpoint with a
+    DONE marker but garbage leaves."""
     path = pathlib.Path(path)
     tmp = path.with_suffix(".tmp")
     if tmp.exists():
@@ -53,9 +69,24 @@ def save_pytree(path: pathlib.Path, tree: Any) -> None:
         meta["leaves"].append({"shape": list(arr.shape), "dtype": str(arr.dtype)})
     (tmp / "tree.json").write_text(json.dumps(meta))
     (tmp / DONE).write_text(str(time.time()))
+    for f in sorted(tmp.iterdir()):
+        _fsync_path(f)
+    _fsync_path(tmp)
     if path.exists():
-        shutil.rmtree(path)
-    os.replace(tmp, path)
+        # Never delete-then-rename: a crash between the two would lose BOTH
+        # checkpoints.  Rename the old one aside (atomic), commit the new
+        # one, then garbage-collect the old — at every instant one complete
+        # checkpoint exists under a discoverable or recoverable name.
+        old = path.with_name(path.name + ".old")
+        if old.exists():
+            shutil.rmtree(old)
+        os.replace(path, old)
+        os.replace(tmp, path)
+        _fsync_path(path.parent)  # make the renames durable
+        shutil.rmtree(old, ignore_errors=True)
+    else:
+        os.replace(tmp, path)
+        _fsync_path(path.parent)  # make the rename itself durable
 
 
 def load_pytree(path: pathlib.Path, like: Any, shardings: Optional[Any] = None) -> Any:
@@ -95,14 +126,36 @@ class CheckpointManager:
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        self._recover_interrupted_overwrites()
+
+    def _recover_interrupted_overwrites(self) -> None:
+        """A crash inside save_pytree's overwrite window can leave a step
+        only under step_*.old (renamed aside, new copy never committed).
+        Promote such orphans back so the committed data stays discoverable;
+        .old dirs whose base step exists are just garbage from after the
+        commit and are removed."""
+        for p in self.root.glob("step_*.old"):
+            base = p.with_name(p.name[: -len(".old")])
+            if not p.is_dir():
+                continue
+            if base.exists():
+                shutil.rmtree(p, ignore_errors=True)
+            elif (p / DONE).exists():
+                os.replace(p, base)
 
     # -- discovery ----------------------------------------------------------
 
     def steps(self):
         out = []
         for p in self.root.iterdir():
-            if p.is_dir() and (p / DONE).exists() and p.name.startswith("step_"):
-                out.append(int(p.name.split("_")[1]))
+            # Exact step_<digits> only: leftover step_*.tmp / step_*.old
+            # dirs from an interrupted save carry a DONE marker too but are
+            # not committed checkpoints.
+            if not (p.is_dir() and (p / DONE).exists()):
+                continue
+            prefix, _, suffix = p.name.partition("_")
+            if prefix == "step" and suffix.isdigit():
+                out.append(int(suffix))
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:

@@ -27,6 +27,17 @@ Modes (gossip schedules):
               iteration i uses psi_{i-1} from the neighbors, which lets the
               ppermute of psi_i overlap with computing psi_{i+1}
               (beyond-paper; straggler/latency hiding).
+  graph       faithful diffusion under ANY doubly-stochastic combiner from
+              core/topology.make_topology (DistConfig.topology picks the
+              kind: "ring_metropolis", "torus", "erdos", ... — the paper's
+              Sec. IV-B connected-random-graph regime).  The combiner is
+              compiled once into a static per-neighbor ppermute schedule
+              (runtime/dist.graph_schedule; torus combiners get the 4-link
+              2-D ICI schedule from torus_schedule).
+  graph_q8    graph with int8-quantized messages + error feedback over the
+              same wire format as ring_q8.
+  graph_async graph with one-step-stale neighbor messages (the received
+              per-round messages ride the scan carry).
 
 Every mode returns per-device (nu, y) with nu converged to the same global
 optimum the reference engine (core/inference.py) computes.
@@ -40,8 +51,10 @@ from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import topology as topo
 from repro.core.conjugates import Regularizer, Residual
 from repro.core.dictionary import init_dictionary
 from repro.core.inference import power_sigma2
@@ -50,15 +63,23 @@ from repro.runtime.dist import shard_map
 
 Array = jax.Array
 
+RING_MODES = ("ring", "ring_q8", "ring_async")
+GRAPH_MODES = ("graph", "graph_q8", "graph_async")
+MODES = ("exact", "exact_fista") + RING_MODES + GRAPH_MODES
+
 
 @dataclasses.dataclass(frozen=True)
 class DistConfig:
     """Configuration for the multi-device dual solver."""
 
-    mode: str = "exact_fista"  # exact | exact_fista | ring | ring_q8 | ring_async
+    mode: str = "exact_fista"  # see MODES
     iters: int = 100
     mu: float = -1.0  # <= 0 -> curvature-adaptive (safe) step
-    beta: float = 1.0 / 3.0  # ring combiner weight
+    beta: float = 1.0 / 3.0  # ring combiner weight, admissible range [0, 1/2]
+    # graph-mode combiner: any core/topology.make_topology kind.
+    topology: str = "ring_metropolis"  # ring_metropolis | torus | erdos | ...
+    topology_p: float = 0.5  # erdos edge probability
+    topology_seed: int = 0  # erdos graph seed
     informed: str = "all"  # "all" | "one" (only model-rank 0 sees x)
     model_axis: str = "model"
     data_axes: Tuple[str, ...] = ("data",)
@@ -150,14 +171,39 @@ class DistributedSparseCoder:
     """
 
     def __init__(self, mesh: Mesh, res: Residual, reg: Regularizer, cfg: DistConfig):
-        if cfg.mode not in ("exact", "exact_fista", "ring", "ring_q8", "ring_async"):
-            raise KeyError(f"unknown mode {cfg.mode!r}")
+        if cfg.mode not in MODES:
+            raise KeyError(f"unknown mode {cfg.mode!r}; options: {MODES}")
+        if not 0.0 <= cfg.beta <= 0.5:
+            # beta > 1/2 makes the self-weight 1-2*beta negative: A is no
+            # longer doubly stochastic and the gossip iterates can diverge.
+            raise ValueError(
+                f"DistConfig.beta={cfg.beta} outside the admissible range "
+                f"[0, 1/2]: the ring combiner [beta, 1-2*beta, beta] needs "
+                f"beta <= 1/2 to keep all weights nonnegative"
+            )
         self.mesh = mesh
         self.res = res
         self.reg = reg
         self.cfg = cfg
         ax = cfg.model_axis
         da = tuple(cfg.data_axes)
+        # Graph modes: build the doubly-stochastic combiner for this mesh's
+        # model-axis size and compile it to a static ppermute schedule.  A
+        # grown() coder re-runs this on the larger axis, so the topology is
+        # re-derived — not padded — after elastic growth.
+        self._A: Optional[np.ndarray] = None
+        self._gsched: Optional[dist.GraphSchedule] = None
+        if cfg.mode in GRAPH_MODES:
+            n_model = dist.axis_sizes(mesh)[ax]
+            self._A = topo.make_topology(
+                cfg.topology, n_model, p=cfg.topology_p, seed=cfg.topology_seed,
+                beta=cfg.beta,
+            )
+            if cfg.topology == "torus":
+                rows, cols = topo.torus_dims(n_model)
+                self._gsched = dist.torus_schedule(rows, cols, self._A)
+            else:
+                self._gsched = dist.graph_schedule(self._A)
         self._w_spec = P(None, ax)
         self._x_spec = P(da, None)
         # nu/y leave the solve un-replicated along `model` (each agent its own
@@ -261,19 +307,12 @@ class DistributedSparseCoder:
 
                 (nu, _), _ = jax.lax.scan(step, (nu0, nu0), None, length=cfg.iters)
 
-        else:  # ring family: per-agent estimates + neighbor gossip
+        elif cfg.mode in RING_MODES:  # per-agent estimates + neighbor gossip
             mu = self._mu_for(W_loc)
             beta = jnp.asarray(cfg.beta, x_loc.dtype)
             # ring exchanges need the static axis size (perms can't trace).
             nm = dist.axis_sizes(self.mesh)[ax]
-
-            def local_grad(nu):
-                y, back = _local_code_and_back(res, reg, W_loc, nu, cfg)
-                return (
-                    -(theta / n_inf) * x_loc
-                    + res.grad_fstar(nu) / n_model
-                    + back
-                )
+            local_grad = self._local_grad_fn(W_loc, x_loc, theta, n_inf, n_model)
 
             def combine(psi, psi_left, psi_right):
                 out = (1.0 - 2.0 * beta) * psi + beta * psi_left + beta * psi_right
@@ -320,8 +359,72 @@ class DistributedSparseCoder:
                     step, (nu0, nu0, nu0), None, length=cfg.iters
                 )
 
+        else:  # graph family: gossip under the compiled combiner schedule
+            mu = self._mu_for(W_loc)
+            sched = self._gsched
+            local_grad = self._local_grad_fn(W_loc, x_loc, theta, n_inf, n_model)
+
+            if cfg.mode == "graph":
+
+                def step(nu, _):
+                    psi = nu - mu * local_grad(nu)
+                    nu = res.project_dual(dist.graph_combine(psi, ax, sched))
+                    return nu, None
+
+                nu, _ = jax.lax.scan(step, nu0, None, length=cfg.iters)
+
+            elif cfg.mode == "graph_q8":
+
+                def step(carry, _):
+                    nu, err = carry
+                    psi = nu - mu * local_grad(nu)
+                    # same wire format and error feedback as ring_q8: only
+                    # the outgoing message is quantized, once per iteration.
+                    q, s = _quantize_q8(psi + err)
+                    err = (psi + err) - _dequantize_q8(q, s)
+                    nu = res.project_dual(
+                        dist.graph_combine_quantized(psi, q, s, ax, sched)
+                    )
+                    return (nu, err), None
+
+                (nu, _), _ = jax.lax.scan(
+                    step, (nu0, jnp.zeros_like(nu0)), None, length=cfg.iters
+                )
+
+            else:  # graph_async: combine with one-step-stale round messages
+
+                def step(carry, _):
+                    nu, recv_prev = carry
+                    psi = nu - mu * local_grad(nu)
+                    nu_next = res.project_dual(
+                        dist.graph_accumulate(psi, recv_prev, ax, sched)
+                    )
+                    # These sends overlap with the next local_grad compute.
+                    recv = dist.graph_shift(psi, ax, sched)
+                    return (nu_next, recv), None
+
+                recv0 = tuple(nu0 for _ in sched.steps)
+                (nu, _), _ = jax.lax.scan(
+                    step, (nu0, recv0), None, length=cfg.iters
+                )
+
         y, _ = _local_code_and_back(res, reg, W_loc, nu, cfg)
         return nu, y
+
+    def _local_grad_fn(self, W_loc, x_loc, theta, n_inf, n_model):
+        """Per-agent dual gradient grad J_k (shared by the ring and graph
+        families; mirrors core/inference.agent_grad exactly)."""
+        res, reg, cfg = self.res, self.reg, self.cfg
+
+        def local_grad(nu):
+            y, back = _local_code_and_back(res, reg, W_loc, nu, cfg)
+            return (
+                -(theta / n_inf) * x_loc
+                + res.grad_fstar(nu) / n_model
+                + back
+            )
+
+        return local_grad
 
     def _mu_for(self, W_loc: Array) -> Array:
         """THE step-size rule: shared by the solver bodies and the
@@ -392,6 +495,36 @@ class DistributedSparseCoder:
         """Per-rank step size the configured mode would use, gathered to
         (N,).  All entries must agree (regression hook for the pmax fix)."""
         return self._mu(W)
+
+    def combiner(self) -> np.ndarray:
+        """The doubly-stochastic combination matrix A this coder's mode
+        realizes, in the reference engine's layout (A[l, k] = a_{lk}): the
+        compiled graph combiner for the graph family, the constant-weight
+        ring matrix for the ring family, and 11^T/N for the exact modes.
+        Used by the ref<->dist parity tests, the gossip benchmarks
+        (mixing_rate column), and service stats."""
+        if self._A is not None:
+            return np.array(self._A)
+        n = dist.axis_sizes(self.mesh)[self.cfg.model_axis]
+        if self.cfg.mode in ("exact", "exact_fista"):
+            return topo.uniform_weights(n)
+        return topo.ring_weights(n, self.cfg.beta)
+
+    def combiner_info(self) -> dict:
+        """Topology label + mixing rate (second-largest singular value of A,
+        the gossip contraction factor) for stats/benchmark reporting."""
+        if self.cfg.mode in GRAPH_MODES:
+            label = self.cfg.topology
+        elif self.cfg.mode in RING_MODES:
+            label = "ring"
+        else:
+            label = "full"
+        return {"topology": label, "mixing_rate": topo.mixing_rate(self.combiner())}
+
+    @property
+    def gossip_schedule(self) -> Optional[dist.GraphSchedule]:
+        """The compiled ppermute schedule (graph modes only; None otherwise)."""
+        return self._gsched
 
     def shard(self, W: Array, x: Array) -> Tuple[Array, Array]:
         """Place global arrays with the engine's shardings (for benchmarks)."""

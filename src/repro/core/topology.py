@@ -108,6 +108,13 @@ def uniform_weights(n: int) -> np.ndarray:
 def ring_weights(n: int, beta: float = 1.0 / 3.0) -> np.ndarray:
     """Constant-weight ring combiner [beta, 1-2beta, beta]; doubly stochastic
     for beta <= 1/2.  This is the matrix the ppermute production path realizes."""
+    if not 0.0 <= beta <= 0.5:
+        # beta > 1/2 turns the self-weight 1-2*beta negative: the matrix is
+        # no longer doubly stochastic and diffusion under it can diverge.
+        raise ValueError(
+            f"ring combiner weight beta={beta} outside the admissible range "
+            f"[0, 1/2] (weights [beta, 1-2*beta, beta] must be nonnegative)"
+        )
     if n == 1:
         return np.ones((1, 1))
     a = np.zeros((n, n))
@@ -132,6 +139,16 @@ def mixing_rate(a: np.ndarray) -> float:
     return float(s[1]) if len(s) > 1 else 0.0
 
 
+def torus_dims(n: int) -> tuple:
+    """(rows, cols) of the most-square torus factorization of n — shared by
+    make_topology and the production torus ppermute schedule so the combiner
+    and its 2-D ICI data movement can never disagree about the grid."""
+    rows = int(np.floor(np.sqrt(n)))
+    while n % rows:
+        rows -= 1
+    return rows, n // rows
+
+
 def make_topology(kind: str, n: int, *, p: float = 0.5, seed: int = 0,
                   beta: float = 1.0 / 3.0) -> np.ndarray:
     """Build a doubly-stochastic combiner for `n` agents.
@@ -144,10 +161,7 @@ def make_topology(kind: str, n: int, *, p: float = 0.5, seed: int = 0,
     if kind == "ring_metropolis":
         return metropolis_weights(ring_adjacency(n))
     if kind == "torus":
-        rows = int(np.floor(np.sqrt(n)))
-        while n % rows:
-            rows -= 1
-        return metropolis_weights(torus_adjacency(rows, n // rows))
+        return metropolis_weights(torus_adjacency(*torus_dims(n)))
     if kind == "erdos":
         return metropolis_weights(erdos_renyi_adjacency(n, p=p, seed=seed))
     if kind == "full":

@@ -38,7 +38,15 @@ def main() -> None:
     ap.add_argument("--gamma", type=float, default=0.25)
     ap.add_argument("--delta", type=float, default=0.05)
     ap.add_argument("--mode", type=str, default="exact_fista",
-                    choices=["exact", "exact_fista", "ring", "ring_q8", "ring_async"])
+                    choices=["exact", "exact_fista", "ring", "ring_q8", "ring_async",
+                             "graph", "graph_q8", "graph_async"])
+    ap.add_argument("--topology", type=str, default="ring_metropolis",
+                    choices=["ring", "ring_metropolis", "torus", "erdos", "full"],
+                    help="graph-mode combiner kind (core/topology.make_topology)")
+    ap.add_argument("--topology-p", type=float, default=0.5,
+                    help="erdos edge probability")
+    ap.add_argument("--topology-seed", type=int, default=0,
+                    help="erdos graph seed")
     ap.add_argument("--iters", type=int, default=150, help="dual iterations per solve")
     ap.add_argument("--m", type=int, default=32, help="data dimension")
     ap.add_argument("--atoms-per-agent", type=int, default=8)
@@ -73,8 +81,12 @@ def main() -> None:
     k0 = args.atoms_per_agent * m_axis
     W0 = init_dictionary(jax.random.PRNGKey(args.seed), args.m, k0, nonneg=reg.nonneg)
     coder = DistributedSparseCoder(
-        mesh, res, reg, DistConfig(mode=args.mode, iters=args.iters)
+        mesh, res, reg, DistConfig(
+            mode=args.mode, iters=args.iters, topology=args.topology,
+            topology_p=args.topology_p, topology_seed=args.topology_seed,
+        )
     )
+    comb = coder.combiner_info()
     svc_cfg = ServiceConfig(
         micro_batch=args.micro_batch,
         max_wait_s=args.max_wait_ms / 1e3,
@@ -86,7 +98,8 @@ def main() -> None:
 
     print(f"serve_dict: task={args.task} mode={args.mode} mesh={args.mesh} "
           f"M={args.m} K={k0} micro_batch={args.micro_batch} "
-          f"samples={args.samples} grow_at={args.grow_at or 'never'}")
+          f"samples={args.samples} grow_at={args.grow_at or 'never'} "
+          f"topology={comb['topology']} mixing_rate={comb['mixing_rate']:.3f}")
 
     futures = []
     grow_fut = None
@@ -133,6 +146,8 @@ def main() -> None:
     if args.json:
         payload = {
             "samples": args.samples,
+            "topology": stats["topology"],
+            "mixing_rate": stats["mixing_rate"],
             "wall_s": wall_s,
             "samples_per_s": stats["coded"] / wall_s,
             "latency_ms": lat,

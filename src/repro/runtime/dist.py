@@ -16,6 +16,19 @@ Mode -> collective mapping (core/distributed.py consumes these):
                                           (constant-weight ring combiner)
   ring_q8              ring_shift over    int8 messages + per-row scales,
                        (quantize_q8 ..)   error feedback kept by the caller
+  graph, graph_async   graph_combine /    ANY doubly-stochastic combiner A
+                       graph_shift        (core/topology.make_topology)
+                                          compiled to a static ppermute
+                                          schedule: one shift per distinct
+                                          edge-offset of the graph, with a
+                                          per-rank weight table baked in
+  graph_q8             graph_combine_     same schedule over the int8 wire
+                       quantized          format (quantize_q8 scales ride
+                                          along each shift)
+
+A torus combiner additionally gets `torus_schedule`: exactly four neighbor
+permutations (row +/-1, column +/-1) that map onto 2-D ICI links instead of
+the up-to-(N-1) flat offsets the generic decomposition would use.
 
 Mesh factories:
 
@@ -31,10 +44,12 @@ Mesh factories:
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.runtime import compat
 from repro.runtime.compat import (  # re-exported: THE way to get these
@@ -61,6 +76,13 @@ __all__ = [
     "psum_scatter_tiled",
     "quantize_q8",
     "dequantize_q8",
+    "GraphSchedule",
+    "graph_schedule",
+    "torus_schedule",
+    "graph_shift",
+    "graph_accumulate",
+    "graph_combine",
+    "graph_combine_quantized",
 ]
 
 Array = jax.Array
@@ -136,6 +158,172 @@ def ring_shift(x, axis_name: str, n: int):
     left = jax.tree.map(lambda v: jax.lax.ppermute(v, axis_name, fwd), x)
     right = jax.tree.map(lambda v: jax.lax.ppermute(v, axis_name, bwd), x)
     return left, right
+
+
+# ---------------------------------------------------------------------------
+# Graph gossip: any doubly-stochastic combiner A compiled to a static
+# ppermute schedule (the production realization of core/topology combiners)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphSchedule:
+    """Static data-movement plan for nu_k = sum_l A[l, k] psi_l over a mesh
+    axis of size `n`.
+
+    `steps` holds one entry per collective round: a ppermute permutation
+    (src, dst) pairs covering every rank, and the per-DESTINATION weight
+    table w with w[dst] = A[src, dst] for that round's (src -> dst) edge.
+    `diag` is the self-weight A[k, k].  Everything is plain Python data,
+    fixed at trace time — permutations can never depend on traced values.
+    """
+
+    n: int
+    diag: Tuple[float, ...]
+    steps: Tuple[Tuple[Tuple[Tuple[int, int], ...], Tuple[float, ...]], ...]
+
+    def reconstruct(self) -> np.ndarray:
+        """Dense A this schedule realizes (host-side; tests/benchmarks)."""
+        a = np.diag(np.asarray(self.diag, np.float64))
+        for perm, w in self.steps:
+            for src, dst in perm:
+                a[src, dst] += w[dst]
+        return a
+
+    @property
+    def messages_per_iter(self) -> int:
+        """ppermute rounds per combine = per-device messages per iteration."""
+        return len(self.steps)
+
+
+def _check_combiner(A: np.ndarray) -> np.ndarray:
+    from repro.core.topology import is_doubly_stochastic  # numpy-only leaf
+
+    A = np.asarray(A, np.float64)
+    if A.ndim != 2 or A.shape[0] != A.shape[1]:
+        raise ValueError(f"combiner must be square, got shape {A.shape}")
+    if not is_doubly_stochastic(A):
+        raise ValueError(
+            "combiner A must be doubly stochastic (nonnegative, rows and "
+            "columns summing to 1) — see core/topology.make_topology"
+        )
+    return A
+
+
+def graph_schedule(A: np.ndarray, tol: float = 0.0) -> GraphSchedule:
+    """Compile a doubly-stochastic combiner into a ppermute schedule.
+
+    Decomposes A by flat edge-offset: round d (1 <= d < n) shifts psi by d
+    along the axis and each destination k scales the received value by
+    A[(k - d) % n, k].  Offsets with an all-zero weight table are dropped, so
+    a sparse graph costs exactly its number of distinct edge-offsets per
+    iteration (ring combiners reduce to the familiar two shifts).
+    """
+    A = _check_combiner(A)
+    n = A.shape[0]
+    steps = []
+    for d in range(1, n):
+        w = np.array([A[(k - d) % n, k] for k in range(n)])
+        if np.any(np.abs(w) > tol):
+            perm = tuple((i, (i + d) % n) for i in range(n))
+            steps.append((perm, tuple(float(v) for v in w)))
+    return GraphSchedule(
+        n=n, diag=tuple(float(A[k, k]) for k in range(n)), steps=tuple(steps)
+    )
+
+
+def torus_schedule(rows: int, cols: int, A: np.ndarray) -> GraphSchedule:
+    """Compile a torus combiner into four neighbor permutations.
+
+    The generic offset decomposition of a (rows x cols) torus costs up to
+    three flat offsets per axis; this schedule instead uses exactly one
+    permutation per grid direction (row +/-1, column +/-1), each of which is
+    a nearest-neighbor exchange on a 2-D ICI mesh.  Degenerate axes (rows or
+    cols <= 2, where the +1 and -1 neighbors coincide) are deduplicated so
+    each graph edge is shipped and weighted once.
+    """
+    A = _check_combiner(A)
+    n = rows * cols
+    if A.shape[0] != n:
+        raise ValueError(f"combiner is {A.shape[0]}x{A.shape[0]}, torus has {n} ranks")
+
+    def idx(r: int, c: int) -> int:
+        return (r % rows) * cols + (c % cols)
+
+    directions = (
+        lambda r, c: (r - 1, c),  # receive from the row above
+        lambda r, c: (r + 1, c),
+        lambda r, c: (r, c - 1),  # receive from the left column
+        lambda r, c: (r, c + 1),
+    )
+    steps = []
+    seen: set = set()  # (src, dst) edges already carried by an earlier round
+    for nbr in directions:
+        perm, w = [], [0.0] * n
+        for r in range(rows):
+            for c in range(cols):
+                dst = idx(r, c)
+                src = idx(*nbr(r, c))
+                perm.append((src, dst))
+                if src != dst and (src, dst) not in seen:
+                    seen.add((src, dst))
+                    w[dst] = float(A[src, dst])
+        if any(v != 0.0 for v in w):
+            steps.append((tuple(perm), tuple(w)))
+    return GraphSchedule(
+        n=n, diag=tuple(float(A[k, k]) for k in range(n)), steps=tuple(steps)
+    )
+
+
+def _rank_weight(weights: Tuple[float, ...], axis_name: str) -> Array:
+    """This rank's entry of a static per-rank weight table (replicated
+    constant indexed by axis_index — stays inside the shard_map body)."""
+    return jnp.asarray(weights)[jax.lax.axis_index(axis_name)]
+
+
+def graph_shift(x, axis_name: str, sched: GraphSchedule) -> Tuple:
+    """Data movement only: run every ppermute round of the schedule on `x`
+    (array or pytree); returns one received message per round.  Callers that
+    combine with STALE messages (graph_async) keep these as scan carry."""
+    return tuple(
+        jax.tree.map(lambda v: jax.lax.ppermute(v, axis_name, list(perm)), x)
+        for perm, _ in sched.steps
+    )
+
+
+def graph_accumulate(x_self, received: Sequence, axis_name: str, sched: GraphSchedule):
+    """Weighted combine diag[k] * x_self + sum_rounds w[k] * received[round]
+    — the arithmetic half of graph_combine, split out so the async mode can
+    feed it one-step-stale messages."""
+    d = _rank_weight(sched.diag, axis_name)
+    out = jax.tree.map(lambda v: d.astype(v.dtype) * v, x_self)
+    for (_, weights), r in zip(sched.steps, received):
+        w = _rank_weight(weights, axis_name)
+        out = jax.tree.map(lambda o, v: o + w.astype(v.dtype) * v, out, r)
+    return out
+
+
+def graph_combine(x, axis_name: str, sched: GraphSchedule):
+    """Synchronous graph gossip: nu_k = sum_l A[l, k] psi_l realized as
+    `len(sched.steps)` ppermutes + weighted accumulate."""
+    return graph_accumulate(x, graph_shift(x, axis_name, sched), axis_name, sched)
+
+
+def graph_combine_quantized(
+    x_self: Array, q: Array, s: Array, axis_name: str, sched: GraphSchedule
+) -> Array:
+    """graph_combine over the int8 wire format: the caller quantizes its
+    outgoing message ONCE (q, s) = quantize_q8(...); each schedule round
+    ships (int8 payload, scales) and dequantizes on receipt.  The self term
+    uses the full-precision x_self (error feedback stays with the caller,
+    exactly as in the ring_q8 mode)."""
+    out = _rank_weight(sched.diag, axis_name).astype(x_self.dtype) * x_self
+    for perm, weights in sched.steps:
+        ql = jax.lax.ppermute(q, axis_name, list(perm))
+        sl = jax.lax.ppermute(s, axis_name, list(perm))
+        w = _rank_weight(weights, axis_name)
+        out = out + w.astype(x_self.dtype) * dequantize_q8(ql, sl, x_self.dtype)
+    return out
 
 
 def all_to_all_tiled(x: Array, axis_name: str) -> Array:

@@ -27,9 +27,12 @@ exactly that contract:
   * **elastic growth** — `grow(extra_model, key)` re-shards the live
     dictionary onto a mesh whose `model` axis is larger (the distributed
     counterpart of `DictionaryLearner.expanded()`, paper Sec. IV-C: new
-    atoms/agents arrive mid-stream).  Growth is applied by the learner
-    thread at a step boundary; the batcher keeps coding against the old
-    (coder, snapshot) pair until the new pair is published.  One caveat on
+    atoms/agents arrive mid-stream).  Graph-mode coders re-derive their
+    doubly-stochastic combiner A (and its ppermute schedule) for the larger
+    axis; stats() and the growth event report the topology + mixing rate.
+    Growth is applied by the learner thread at a step boundary; the batcher
+    keeps coding against the old (coder, snapshot) pair until the new pair
+    is published.  One caveat on
     jax 0.4.x: the new coder's programs can only be compiled via their
     first execution, which must hold the exec lock (collectives from two
     programs must not interleave on shared devices) — so an elastic-growth
@@ -141,7 +144,14 @@ class DictionaryService:
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
         self._t_start: Optional[float] = None
-        # counters (learner-thread/ batcher-thread owned; read via stats())
+        # Gossip-topology identity of the current coder (label + mixing
+        # rate); re-derived on growth since the combiner is rebuilt for the
+        # larger model axis.
+        self._comb_info: Dict = coder.combiner_info()
+        # Counters: mutated by the batcher/learner threads, read by stats().
+        # EVERY mutation and the stats() read happen under self._lock so a
+        # caller always sees a consistent snapshot (e.g. never a published
+        # count ahead of its fit_steps).
         self.submitted = 0
         self.coded = 0
         self.fit_steps = 0
@@ -278,21 +288,23 @@ class DictionaryService:
         return np.asarray(jax.device_get(snap))
 
     def stats(self) -> Dict:
-        with self._lock:  # _latencies appends happen under the same lock
-            lat = np.asarray(self._latencies, np.float64)
         elapsed = (time.perf_counter() - self._t_start) if self._t_start else 0.0
-        out = {
-            "submitted": self.submitted,
-            "coded": self.coded,
-            "fit_steps": self.fit_steps,
-            "fit_failures": self.fit_failures,
-            "fit_first_error": self.fit_first_error,
-            "learn_dropped": self.learn_dropped,
-            "published": self.published,
-            "grow_events": list(self.grow_events),
-            "elapsed_s": elapsed,
-            "samples_per_s": (self.coded / elapsed) if elapsed > 0 else 0.0,
-        }
+        with self._lock:  # one consistent snapshot of every counter
+            lat = np.asarray(self._latencies, np.float64)
+            out = {
+                "submitted": self.submitted,
+                "coded": self.coded,
+                "fit_steps": self.fit_steps,
+                "fit_failures": self.fit_failures,
+                "fit_first_error": self.fit_first_error,
+                "learn_dropped": self.learn_dropped,
+                "published": self.published,
+                "grow_events": [dict(ev) for ev in self.grow_events],
+                "topology": self._comb_info["topology"],
+                "mixing_rate": self._comb_info["mixing_rate"],
+                "elapsed_s": elapsed,
+                "samples_per_s": (self.coded / elapsed) if elapsed > 0 else 0.0,
+            }
         if lat.size:
             out["latency_ms"] = {
                 "p50": float(np.percentile(lat, 50) * 1e3),
@@ -339,6 +351,14 @@ class DictionaryService:
                 for it in items:
                     _resolve(it.future, exc=e)
                 continue
+            dropped = False
+            if self.cfg.learn:
+                try:
+                    self._learn_q.put_nowait(xb)
+                except queue.Full:
+                    # learner lagging: drop (and count) rather than stall
+                    # coding or let staleness/memory grow without bound
+                    dropped = True
             # Account BEFORE resolving futures: a client woken by the last
             # result may immediately read stats() and must see this batch
             # counted (and must not observe _latencies mid-append).
@@ -347,12 +367,7 @@ class DictionaryService:
                 for it in items:
                     self._latencies.append(t_done - it.t_submit)
                 self.coded += len(items)
-            if self.cfg.learn:
-                try:
-                    self._learn_q.put_nowait(xb)
-                except queue.Full:
-                    # learner lagging: drop (and count) rather than stall
-                    # coding or let staleness/memory grow without bound
+                if dropped:
                     self.learn_dropped += 1
             for i, it in enumerate(items):
                 _resolve(it.future, (nu[i], y[i]))
@@ -389,12 +404,13 @@ class DictionaryService:
                 # A failed fit step must never take down serving, but it
                 # must not be invisible either: count it and keep the first
                 # error for stats().
-                self.fit_failures += 1
-                if self.fit_first_error is None:
-                    self.fit_first_error = repr(e)
+                with self._lock:
+                    self.fit_failures += 1
+                    if self.fit_first_error is None:
+                        self.fit_first_error = repr(e)
                 continue
-            self.fit_steps += 1
             with self._lock:
+                self.fit_steps += 1
                 # only publish if no growth swapped the coder underneath us
                 if self._coder is coder:
                     self._live = live2
@@ -419,17 +435,24 @@ class DictionaryService:
                 # old-coder programs, so it takes the exec lock too.
                 with self._exec_lock:
                     self._warmup(new_coder, W2)
+            # The grown coder re-derived its combiner for the larger model
+            # axis (DistributedSparseCoder.__init__ rebuilds A from the new
+            # mesh), so the topology identity changes with the swap.
+            new_info = new_coder.combiner_info()
             with self._lock:
                 self._coder, self._live, self._snap = new_coder, W2, W2
-            self.published += 1
-            info = {
-                "at_coded": self.coded,
-                "k_old": k_old,
-                "k_new": int(W2.shape[1]),
-                "model_old": dist.axis_sizes(coder.mesh)[coder.cfg.model_axis],
-                "model_new": dist.axis_sizes(new_coder.mesh)[new_coder.cfg.model_axis],
-            }
-            self.grow_events.append(info)
+                self._comb_info = new_info
+                self.published += 1
+                info = {
+                    "at_coded": self.coded,
+                    "k_old": k_old,
+                    "k_new": int(W2.shape[1]),
+                    "model_old": dist.axis_sizes(coder.mesh)[coder.cfg.model_axis],
+                    "model_new": dist.axis_sizes(new_coder.mesh)[new_coder.cfg.model_axis],
+                    "topology": new_info["topology"],
+                    "mixing_rate": new_info["mixing_rate"],
+                }
+                self.grow_events.append(info)
             _resolve(fut, info)
         except Exception as e:
             _resolve(fut, exc=e)

@@ -93,3 +93,107 @@ def test_restore_with_shardings(tmp_path):
     sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)
     t2 = load_pytree(tmp_path / "ck", t, shardings=sh)
     assert t2["a"].sharding == NamedSharding(mesh, P())
+
+
+def test_save_fsyncs_data_before_rename(tmp_path, monkeypatch):
+    """The atomicity contract is write, FSYNC, rename: every leaf file, the
+    tmp directory, and (after os.replace) the parent must be fsync'd —
+    os.replace alone only orders metadata, so a crash could otherwise commit
+    a DONE-marked checkpoint whose leaf data never hit disk."""
+    import os as _os
+    import pathlib as _pathlib
+
+    from repro.checkpoint import manager as mgr_mod
+
+    synced = []
+    real_fsync_path = mgr_mod._fsync_path
+
+    def spy_fsync_path(p):
+        synced.append(_pathlib.Path(p))
+        return real_fsync_path(p)
+
+    real_replace = _os.replace
+    replace_seen = {"n_synced_at_replace": None}
+
+    def spy_replace(src, dst):
+        if replace_seen["n_synced_at_replace"] is None:
+            replace_seen["n_synced_at_replace"] = len(synced)
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(mgr_mod, "_fsync_path", spy_fsync_path)
+    monkeypatch.setattr(mgr_mod.os, "replace", spy_replace)
+
+    t = _tree()
+    save_pytree(tmp_path / "ck", t)
+
+    n_leaves = len(jax.tree.leaves(t))
+    # before the first rename: every leaf + tree.json + DONE + the tmp dir
+    assert replace_seen["n_synced_at_replace"] >= n_leaves + 3
+    names = [p.name for p in synced]
+    for i in range(n_leaves):
+        assert f"{i}.npy" in names
+    assert "tree.json" in names and "DONE" in names
+    # after the rename: the parent directory commits the new name
+    assert synced[-1] == tmp_path
+    # and the checkpoint still round-trips
+    t2 = load_pytree(tmp_path / "ck", t)
+    np.testing.assert_array_equal(np.asarray(t["a"]), np.asarray(t2["a"]))
+
+
+def test_overwrite_never_deletes_before_commit(tmp_path, monkeypatch):
+    """Re-saving an existing checkpoint must not pass through a state where
+    neither the old nor the new data exists: the old dir is renamed aside
+    (atomic), never rmtree'd before the new one is committed."""
+    import shutil as _shutil
+
+    from repro.checkpoint import manager as mgr_mod
+
+    t1, t2 = _tree(1), _tree(2)
+    save_pytree(tmp_path / "ck", t1)
+
+    removed_before_commit = []
+    real_rmtree = _shutil.rmtree
+
+    def spy_rmtree(p, **kw):
+        if str(p) == str(tmp_path / "ck"):
+            removed_before_commit.append(str(p))
+        return real_rmtree(p, **kw)
+
+    monkeypatch.setattr(mgr_mod.shutil, "rmtree", spy_rmtree)
+    save_pytree(tmp_path / "ck", t2)
+    assert removed_before_commit == []  # the live path itself never rmtree'd
+    got = load_pytree(tmp_path / "ck", t2)
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.asarray(t2["a"]))
+    assert not (tmp_path / "ck.old").exists()  # aside-copy garbage-collected
+
+
+def test_leftover_tmp_and_old_dirs_are_invisible(tmp_path):
+    """Interrupted saves leave step_*.tmp / step_*.old dirs that DO contain
+    a DONE marker — discovery must skip them, not crash or resurrect them."""
+    t = _tree()
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(10, t)
+    for leftover in ("step_0000000020.tmp", "step_0000000015.old"):
+        d = tmp_path / leftover
+        d.mkdir()
+        (d / "DONE").write_text("1.0")
+    assert mgr.steps() == [10]
+    assert mgr.latest_step() == 10
+
+
+def test_interrupted_overwrite_recovers_from_old(tmp_path):
+    """Crash window inside an overwrite: the step exists only under
+    step_*.old (renamed aside, new copy never committed).  Constructing the
+    manager promotes it back so the committed data stays discoverable."""
+    import os as _os
+
+    t = _tree()
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(10, t)
+    # simulate: os.replace(path, old) happened, then the process died
+    p10 = mgr.path(10)
+    _os.replace(p10, p10.with_name(p10.name + ".old"))
+    assert CheckpointManager(tmp_path, keep=3).steps() == [10]
+    restored, step = CheckpointManager(tmp_path, keep=3).restore(t)
+    assert step == 10
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(t["a"]))

@@ -39,9 +39,10 @@ def test_all_gossip_modes_converge_to_centralized():
 
         # exact uses a conservative Frobenius-style 1/L (safe but slow) —
         # give it the iterations it needs; fista converges ~30x faster
-        expect = {"exact": 40, "exact_fista": 60, "ring": 25, "ring_q8": 20, "ring_async": 20}
+        expect = {"exact": 40, "exact_fista": 60, "ring": 25, "ring_q8": 20, "ring_async": 20,
+                  "graph": 25, "graph_q8": 20, "graph_async": 20}
         for mode, min_snr in expect.items():
-            iters = 3000 if mode.startswith("ring") else (5000 if mode == "exact" else 600)
+            iters = 600 if mode.startswith("exact_fista") else (5000 if mode == "exact" else 3000)
             coder = DistributedSparseCoder(mesh, res, reg, DistConfig(mode=mode, iters=iters))
             Ws, xs = coder.shard(W, x)
             nu, y = coder.solve(Ws, xs)
@@ -152,3 +153,34 @@ def test_kernel_inside_shard_map():
         print("OK")
     """, n_devices=4)
     assert "OK" in out
+
+
+def test_engine_rejects_inadmissible_config():
+    """Fast (single-device) construction-time validation: beta outside
+    [0, 1/2] and unknown modes/topologies raise instead of silently building
+    a divergent (non-doubly-stochastic) combiner."""
+    import jax
+
+    from repro.core.conjugates import make_task
+    from repro.core.distributed import DistConfig, DistributedSparseCoder
+    from repro.runtime import dist
+
+    res, reg = make_task("sparse_svd", gamma=0.1, delta=0.1)
+    mesh = dist.make_mesh((1, 1), ("data", "model"))
+    for bad_beta in (0.5001, 0.75, -0.01):
+        with pytest.raises(ValueError, match="admissible range"):
+            DistributedSparseCoder(mesh, res, reg, DistConfig(beta=bad_beta))
+        with pytest.raises(ValueError, match="admissible range"):
+            DistributedSparseCoder(
+                mesh, res, reg, DistConfig(mode="ring", beta=bad_beta))
+    with pytest.raises(KeyError):
+        DistributedSparseCoder(mesh, res, reg, DistConfig(mode="gossipnet"))
+    with pytest.raises(KeyError):
+        DistributedSparseCoder(
+            mesh, res, reg, DistConfig(mode="graph", topology="hypercube"))
+    # admissible boundary still constructs, and exposes its combiner
+    coder = DistributedSparseCoder(
+        mesh, res, reg, DistConfig(mode="ring", beta=0.5))
+    assert coder.combiner().shape == (1, 1)
+    info = coder.combiner_info()
+    assert info["topology"] == "ring" and info["mixing_rate"] == 0.0

@@ -93,6 +93,7 @@ def test_arch_loss_decreases(arch):
     assert losses[-1] < losses[0], f"{arch}: {losses}"
 
 
+@pytest.mark.slow  # token-by-token python-loop decode: 10-30s per arch on CPU
 @pytest.mark.parametrize("arch", ["qwen3_32b", "zamba2_1p2b", "xlstm_1p3b", "gemma_2b"])
 def test_prefill_decode_consistency(arch):
     """Teacher-forced decode reproduces the forward logits (the serving path
@@ -115,6 +116,7 @@ def test_prefill_decode_consistency(arch):
     )
 
 
+@pytest.mark.slow  # prefill + decode integration: ~6s per arch on CPU
 @pytest.mark.parametrize("arch", ["qwen3_32b", "zamba2_1p2b", "xlstm_1p3b"])
 def test_prefill_cache_continues_decode(arch):
     """prefill() at length s then decode must equal full forward at s+1."""

@@ -97,9 +97,63 @@ def test_ring_parity_and_identical_mu():
 
 
 @pytest.mark.slow
+def test_graph_mode_parity_with_reference_engine():
+    """mode="graph" under the erdos and ring_metropolis Metropolis combiners
+    (the paper's Sec.-IV-B regime) matches diffusion_infer run with the
+    IDENTICAL A to 1e-4 on the 1x4 debug mesh — the ppermute schedule
+    compiled from A computes the same iterates as the dense reference
+    combine."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.conjugates import make_task
+        from repro.core.distributed import DistributedSparseCoder, DistConfig, make_debug_mesh
+        from repro.core.dictionary import blocks_from_full
+        from repro.core.inference import DiffusionConfig, diffusion_infer, safe_diffusion_mu
+        from repro.core import topology as topo
+
+        res, reg = make_task("sparse_svd", gamma=0.05, delta=0.1)
+        N = 4
+        mesh = make_debug_mesh(model=N, data=1)
+        M, K, B = 16, 32, 4
+        W = jax.random.normal(jax.random.PRNGKey(1), (M, K))
+        W = W / jnp.linalg.norm(W, axis=0)
+        x = jax.random.normal(jax.random.PRNGKey(2), (B, M))
+        W_blocks = blocks_from_full(W, N)
+        mu_ref = float(safe_diffusion_mu(res, reg, W_blocks))
+
+        for topology in ["erdos", "ring_metropolis"]:
+            coder = DistributedSparseCoder(
+                mesh, res, reg, DistConfig(mode="graph", iters=300, mu=-1.0,
+                                           topology=topology, topology_seed=7))
+            A = coder.combiner()
+            assert topo.is_doubly_stochastic(A), topology
+            Ws, xs = coder.shard(W, x)
+
+            # graph mode uses the same pmax'd safe step as the ring family.
+            mus = np.asarray(coder.adaptive_mu(Ws))
+            assert float(np.ptp(mus)) == 0.0, (topology, mus)
+            assert abs(float(mus[0]) - mu_ref) < 1e-7 * mu_ref
+
+            nu_ref, y_ref, _ = diffusion_infer(
+                res, reg, W_blocks, x, jnp.asarray(A, jnp.float32),
+                jnp.ones((N,), jnp.float32), DiffusionConfig(iters=300),
+                mu=jnp.asarray(mu_ref, x.dtype))
+            nu_d, y_d = coder.solve_per_agent(Ws, xs)
+            nu_err = float(jnp.max(jnp.abs(jnp.asarray(nu_d) - nu_ref)))
+            y_err = float(jnp.max(jnp.abs(jnp.asarray(y_d) - y_ref)))
+            print(topology, "nu_err", nu_err, "y_err", y_err)
+            assert nu_err < 1e-4, (topology, nu_err)
+            assert y_err < 1e-4, (topology, y_err)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
 def test_adaptive_mu_identical_across_ranks_all_modes():
     """The mu regression across every adaptive mode: exact modes psum a
-    shared bound, ring modes pmax the per-shard bounds — all ranks agree."""
+    shared bound, ring/graph modes pmax the per-shard bounds — all ranks
+    agree."""
     out = _run("""
         import numpy as np, jax, jax.numpy as jnp
         from repro.core.conjugates import make_task
@@ -109,7 +163,8 @@ def test_adaptive_mu_identical_across_ranks_all_modes():
         mesh = make_debug_mesh(model=4, data=1)
         W = jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (24, 32)))
         W = W / jnp.linalg.norm(W, axis=0)
-        for mode in ["exact", "exact_fista", "ring", "ring_q8", "ring_async"]:
+        for mode in ["exact", "exact_fista", "ring", "ring_q8", "ring_async",
+                     "graph", "graph_q8", "graph_async"]:
             coder = DistributedSparseCoder(
                 mesh, res, reg, DistConfig(mode=mode, iters=10, mu=-1.0))
             Ws = jax.device_put(W, jax.sharding.NamedSharding(

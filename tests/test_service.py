@@ -37,8 +37,12 @@ def test_service_streams_learns_and_grows():
         mesh = dist.make_mesh((1, 2), (dist.DATA_AXIS, dist.MODEL_AXIS))
         M, K0 = 16, 12
         W0 = init_dictionary(jax.random.PRNGKey(0), M, K0)
+        # graph mode end to end: growth must RE-DERIVE the Metropolis
+        # combiner for the larger model axis (2 agents -> full exchange,
+        # mixing rate 0; 4 agents -> a true ring, mixing rate 1/3).
         coder = DistributedSparseCoder(
-            mesh, res, reg, DistConfig(mode="exact_fista", iters=60))
+            mesh, res, reg,
+            DistConfig(mode="graph", topology="ring_metropolis", iters=60))
         X = sparse_stream(70, m=M, k_true=K0, seed=3)
 
         svc = DictionaryService(coder, W0, ServiceConfig(micro_batch=8, mu_w=0.1))
@@ -65,6 +69,14 @@ def test_service_streams_learns_and_grows():
         assert stats["coded"] == 70 and stats["submitted"] == 70
         assert stats["fit_steps"] > 0 and stats["published"] > 0
         assert len(stats["grow_events"]) == 1
+        # topology identity rides stats + the growth event, and growth
+        # RE-DERIVED the combiner for the larger axis: the 2-agent
+        # Metropolis ring is full exchange (mixing rate 0), the grown
+        # 4-agent ring mixes at 1/3.
+        assert stats["topology"] == "ring_metropolis"
+        assert abs(stats["mixing_rate"] - 1.0 / 3.0) < 1e-6, stats["mixing_rate"]
+        assert info["topology"] == "ring_metropolis"
+        assert abs(info["mixing_rate"] - 1.0 / 3.0) < 1e-6, info["mixing_rate"]
         # published dictionary reflects the growth and stays unit-norm
         assert W_pub.shape == (M, 2 * K0)
         assert float(np.max(np.linalg.norm(W_pub, axis=0))) <= 1.0 + 1e-5

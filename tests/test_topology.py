@@ -53,3 +53,26 @@ def test_make_topology_kinds():
         assert topo.is_doubly_stochastic(a)
     with pytest.raises(KeyError):
         topo.make_topology("hypercube", 8)
+
+
+def test_ring_weights_rejects_inadmissible_beta():
+    """beta > 1/2 would make the self-weight negative (non-doubly-stochastic
+    combiner, divergent gossip) — must raise, not silently build the matrix."""
+    for bad in (0.5001, 0.75, 1.0, -0.1):
+        with pytest.raises(ValueError):
+            topo.ring_weights(8, bad)
+    # the boundary values are admissible
+    assert topo.is_doubly_stochastic(topo.ring_weights(8, 0.5))
+    assert topo.is_doubly_stochastic(topo.ring_weights(8, 0.0))
+
+
+def test_torus_dims_factorization():
+    """Most-square factorization shared by make_topology and the production
+    torus schedule."""
+    assert topo.torus_dims(16) == (4, 4)
+    assert topo.torus_dims(12) == (3, 4)
+    assert topo.torus_dims(8) == (2, 4)
+    assert topo.torus_dims(7) == (1, 7)  # primes degenerate to a ring
+    for n in (4, 6, 8, 9, 12, 16):
+        r, c = topo.torus_dims(n)
+        assert r * c == n and r <= c

@@ -1,13 +1,20 @@
 """Beyond-paper engineering table: convergence-vs-communication of the
 production gossip schedules (exact / exact_fista / ring / ring_q8 /
-ring_async plus graph-topology rows) on a forced multi-device host mesh.
+ring_async plus graph-topology and time-varying graph_tv rows) on a forced
+multi-device host mesh.
 
-Reports, per mode (and per graph topology): iterations to reach the target
-SNR, the combiner's mixing rate (second-largest singular value of A — the
-gossip contraction factor, so convergence-vs-lambda_2 is measurable across
-topologies), bytes-on-wire per iteration per device (analytic), and total
-wire bytes to target — the quantity the int8 error-feedback and FISTA modes
-exist to cut.
+Reports, per mode (and per graph topology / combiner schedule): iterations
+to reach the target SNR, the combiner's mixing rate (second-largest
+singular value of A — the gossip contraction factor, so
+convergence-vs-lambda_2 is measurable across topologies; time-varying rows
+report the WINDOWED rate sigma_2(window product)^(1/period)), bytes-on-wire
+per iteration per device (analytic; averaged over the period for
+time-varying schedules), and total wire bytes to target — the quantity the
+int8 error-feedback and FISTA modes exist to cut.  The static-vs-
+time-varying pairs (graph:ring_metropolis / graph:torus vs graph_tv:*) make
+the cost of a changing network directly readable.
+
+The output schema of the saved JSON is documented in docs/BENCHMARKS.md.
 
 Reduced-size mode: set BENCH_SMOKE=1 (the CI benchmark smoke job does) for
 a smaller problem, shorter sweep, and a lower SNR target.
@@ -25,7 +32,6 @@ from benchmarks.common import ROOT, emit, save_json
 SCRIPT = r"""
 import dataclasses, json, sys
 import jax, jax.numpy as jnp
-from repro.core import topology as topo
 from repro.core.conjugates import make_task
 from repro.core.distributed import DistributedSparseCoder, DistConfig, make_debug_mesh
 from repro.core.inference import fista_infer, snr_db
@@ -41,23 +47,36 @@ x = jax.random.normal(jax.random.PRNGKey(2), (B, M))
 nu_ref = fista_infer(res, reg, W, x, iters=P["ref_iters"])
 
 # Row name -> DistConfig.  graph:* rows sweep the paper's Sec.-IV-B regime
-# (arbitrary doubly-stochastic combiners) so convergence can be read against
-# the combiner's mixing rate.
+# (arbitrary doubly-stochastic combiners); graph_tv:* rows sweep the
+# time-varying regime of Daneshmand et al. (the combiner changes every
+# iteration) so static-vs-time-varying convergence can be read against the
+# (windowed) mixing rate.
 ROWS = {mode: DistConfig(mode=mode, iters=1) for mode in
         ["exact", "exact_fista", "ring", "ring_q8", "ring_async"]}
 for t in ["ring_metropolis", "torus", "erdos"]:
     ROWS[f"graph:{t}"] = DistConfig(mode="graph", iters=1, topology=t)
+ROWS["graph_tv:alternating"] = DistConfig(
+    mode="graph_tv", iters=1,
+    topology_schedule="alternating:ring_metropolis,torus")
+ROWS["graph_tv:erdos_resampled"] = DistConfig(
+    mode="graph_tv", iters=1, topology_schedule="erdos_resampled",
+    schedule_period=4)
 
 out = {}
 for name, base_cfg in ROWS.items():
     mix = None
     reached = None
     per_iter = None
+    period = 1
     for iters in P["sweep"]:
         cfg = dataclasses.replace(base_cfg, iters=iters)
         coder = DistributedSparseCoder(mesh, res, reg, cfg)
         if mix is None:
-            mix = topo.mixing_rate(coder.combiner())
+            # static rows: sigma_2(A); time-varying rows: the windowed rate
+            # sigma_2(window product)^(1/period)
+            info = coder.combiner_info()
+            mix = info["mixing_rate"]
+            period = info.get("schedule_period", 1)
             b_loc = B  # data=1 here
             if cfg.mode in ("exact", "exact_fista"):
                 per_iter = 2 * b_loc * M * 4        # one psum (all-reduce) of (B, M) fp32
@@ -65,8 +84,11 @@ for name, base_cfg in ROWS.items():
                 per_iter = 2 * b_loc * (M * 1 + 4)  # two ppermutes of int8 + row scale
             elif cfg.mode in ("ring", "ring_async"):
                 per_iter = 2 * b_loc * M * 4        # two ppermutes of fp32
-            else:  # graph family: one fp32 message per schedule round
-                per_iter = coder.gossip_schedule.messages_per_iter * b_loc * M * 4
+            else:  # graph families: one fp32 message per schedule round,
+                   # averaged over the period for time-varying sequences
+                scheds = coder.gossip_schedules
+                per_iter = (sum(s.messages_per_iter for s in scheds)
+                            / len(scheds)) * b_loc * M * 4
         Ws, xs = coder.shard(W, x)
         nu, _ = coder.solve(Ws, xs)
         if float(snr_db(nu_ref, nu)) >= P["target_db"]:
@@ -75,6 +97,7 @@ for name, base_cfg in ROWS.items():
     out[name] = {
         "iters_to_target": reached,
         "mixing_rate": mix,
+        "schedule_period": period,
         "wire_bytes_per_iter_per_dev": per_iter,
         "wire_bytes_to_target": (reached * per_iter) if reached else None,
     }

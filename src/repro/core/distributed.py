@@ -38,6 +38,18 @@ Modes (gossip schedules):
               same wire format as ring_q8.
   graph_async graph with one-step-stale neighbor messages (the received
               per-round messages ride the scan carry).
+  graph_tv    diffusion under a TIME-VARYING combiner sequence A_0, A_1, ...
+              (core/topology.TopologySchedule, selected by
+              DistConfig.topology_schedule) — the regime of Daneshmand et
+              al. (arXiv:1612.07335 / arXiv:1808.05933) where the network
+              changes every iteration.  Each A_t is pre-compiled to its own
+              ppermute schedule; inside the scanned gossip loop the active
+              schedule is picked by the traced iteration index via
+              lax.switch, so the whole time-varying run stays ONE compiled
+              program.  solve/fit accept a schedule offset t0 so a serving
+              stream can keep advancing the network across micro-batches.
+  graph_tv_q8 graph_tv over the int8 wire format (one quantization per
+              iteration + error feedback, same as ring_q8/graph_q8).
 
 Every mode returns per-device (nu, y) with nu converged to the same global
 optimum the reference engine (core/inference.py) computes.
@@ -65,12 +77,51 @@ Array = jax.Array
 
 RING_MODES = ("ring", "ring_q8", "ring_async")
 GRAPH_MODES = ("graph", "graph_q8", "graph_async")
-MODES = ("exact", "exact_fista") + RING_MODES + GRAPH_MODES
+TV_MODES = ("graph_tv", "graph_tv_q8")
+MODES = ("exact", "exact_fista") + RING_MODES + GRAPH_MODES + TV_MODES
 
 
 @dataclasses.dataclass(frozen=True)
 class DistConfig:
-    """Configuration for the multi-device dual solver."""
+    """Configuration for the multi-device dual solver.
+
+    Field reference (shapes are per the engine's layout: the dictionary W is
+    (M, K) atom-sharded over `model_axis`, the batch x is (B, M) sharded over
+    `data_axes`):
+
+      mode             gossip schedule, one of MODES (see the module
+                       docstring for the collective each maps to).
+      iters            dual diffusion/gradient iterations per solve
+                       (paper Eq. 31: more iterations = tighter consensus).
+      mu               dual step size; <= 0 selects the curvature-adaptive
+                       globally-safe step (pmax'd over the model axis, the
+                       distributed `safe_diffusion_mu`).
+      beta             ring combiner weight [beta, 1-2*beta, beta]
+                       (doubly stochastic iff beta in [0, 1/2]).
+      topology         static graph-mode combiner kind — any
+                       `core/topology.make_topology` kind
+                       ("ring_metropolis" | "torus" | "erdos" | ...).
+      topology_p       erdos edge probability (static and time-varying).
+      topology_seed    seed of every seeded topology draw: the static erdos
+                       graph, and the whole time-varying sequence (same seed
+                       => identical combiner sequence, also across grown()).
+      topology_schedule  time-varying modes only: the
+                       `core/topology.make_topology_schedule` spec —
+                       "fixed:<kind>", "alternating:<k1>,<k2>,...", or
+                       "erdos_resampled".  "" / "fixed" degenerate to the
+                       static `topology` kind wrapped in a period-1 schedule.
+      schedule_period  period of the "erdos_resampled" spec (number of
+                       distinct graphs before the sequence repeats).
+      informed         "all" (every agent sees x) or "one" (only model-rank
+                       0 is informed, the paper's |N_I| = 1 regime).
+      model_axis       mesh axis name the agents/atom shards live on.
+      data_axes        mesh axes the sample batch is sharded over.
+      use_kernel       fuse the local hot loop with the Pallas
+                       dict_dual_step kernel.
+      kernel_interpret Pallas interpret mode: None -> auto-detect (interpret
+                       only where there is no Mosaic lowering, i.e. CPU);
+                       True/False force it explicitly.
+    """
 
     mode: str = "exact_fista"  # see MODES
     iters: int = 100
@@ -79,7 +130,10 @@ class DistConfig:
     # graph-mode combiner: any core/topology.make_topology kind.
     topology: str = "ring_metropolis"  # ring_metropolis | torus | erdos | ...
     topology_p: float = 0.5  # erdos edge probability
-    topology_seed: int = 0  # erdos graph seed
+    topology_seed: int = 0  # erdos graph / schedule sequence seed
+    # time-varying modes: core/topology.make_topology_schedule spec + period.
+    topology_schedule: str = "alternating:ring_metropolis,torus"
+    schedule_period: int = 2  # erdos_resampled period
     informed: str = "all"  # "all" | "one" (only model-rank 0 sees x)
     model_axis: str = "model"
     data_axes: Tuple[str, ...] = ("data",)
@@ -170,7 +224,23 @@ class DistributedSparseCoder:
         W2    = coder.fit_batch(W, x, mu_w)  # one dictionary step
     """
 
-    def __init__(self, mesh: Mesh, res: Residual, reg: Regularizer, cfg: DistConfig):
+    def __init__(
+        self,
+        mesh: Mesh,
+        res: Residual,
+        reg: Regularizer,
+        cfg: DistConfig,
+        grown_from: Optional["DistributedSparseCoder"] = None,
+    ):
+        """Build the coder's combiner state and compile its mesh programs.
+
+        `grown_from` is the elastic-growth hook (`grown()` passes the old
+        coder): erdos-backed topologies — the static "erdos" kind and every
+        erdos step of a time-varying schedule — are then GROWN from the old
+        adjacency via `topology.erdos_renyi_grow` (existing agents keep
+        their neighborhoods; only new-agent edges are sampled) instead of
+        resampled wholesale.
+        """
         if cfg.mode not in MODES:
             raise KeyError(f"unknown mode {cfg.mode!r}; options: {MODES}")
         if not 0.0 <= cfg.beta <= 0.5:
@@ -187,32 +257,71 @@ class DistributedSparseCoder:
         self.cfg = cfg
         ax = cfg.model_axis
         da = tuple(cfg.data_axes)
-        # Graph modes: build the doubly-stochastic combiner for this mesh's
-        # model-axis size and compile it to a static ppermute schedule.  A
-        # grown() coder re-runs this on the larger axis, so the topology is
-        # re-derived — not padded — after elastic growth.
+        # Graph modes: build the doubly-stochastic combiner(s) for this
+        # mesh's model-axis size and compile each to a static ppermute
+        # schedule.  A grown() coder re-runs this on the larger axis, so the
+        # topology (or the whole time-varying sequence) is re-derived — not
+        # padded — after elastic growth, with erdos neighborhoods preserved.
         self._A: Optional[np.ndarray] = None
+        self._adj: Optional[np.ndarray] = None  # static erdos adjacency
         self._gsched: Optional[dist.GraphSchedule] = None
+        self._tsched: Optional[topo.TopologySchedule] = None
+        self._gscheds: Optional[Tuple[dist.GraphSchedule, ...]] = None
+        n_model = dist.axis_sizes(mesh)[ax]
         if cfg.mode in GRAPH_MODES:
-            n_model = dist.axis_sizes(mesh)[ax]
-            self._A = topo.make_topology(
-                cfg.topology, n_model, p=cfg.topology_p, seed=cfg.topology_seed,
-                beta=cfg.beta,
-            )
+            if cfg.topology == "erdos":
+                if grown_from is not None and grown_from._adj is not None:
+                    # seed stream (seed, step=0, n_new): IDENTICAL to the one
+                    # TopologySchedule.grown uses for its step 0, so a static
+                    # erdos coder and its "fixed:erdos" schedule wrapper stay
+                    # the same network through elastic growth too.
+                    self._adj = topo.erdos_renyi_grow(
+                        grown_from._adj, n_model, p=cfg.topology_p,
+                        seed=topo.derive_seed(cfg.topology_seed, 0, n_model),
+                    )
+                else:
+                    self._adj = topo.erdos_renyi_adjacency(
+                        n_model, p=cfg.topology_p, seed=cfg.topology_seed
+                    )
+                self._A = topo.metropolis_weights(self._adj)
+            else:
+                self._A = topo.make_topology(
+                    cfg.topology, n_model, p=cfg.topology_p,
+                    seed=cfg.topology_seed, beta=cfg.beta,
+                )
             if cfg.topology == "torus":
                 rows, cols = topo.torus_dims(n_model)
                 self._gsched = dist.torus_schedule(rows, cols, self._A)
             else:
                 self._gsched = dist.graph_schedule(self._A)
+        elif cfg.mode in TV_MODES:
+            if grown_from is not None and grown_from._tsched is not None:
+                self._tsched = grown_from._tsched.grown(n_model)
+            else:
+                spec = cfg.topology_schedule or "fixed"
+                if spec == "fixed":
+                    spec = f"fixed:{cfg.topology}"
+                self._tsched = topo.make_topology_schedule(
+                    spec, n_model, p=cfg.topology_p, seed=cfg.topology_seed,
+                    beta=cfg.beta, period=cfg.schedule_period,
+                )
+            self._gscheds = dist.graph_schedule_sequence(
+                self._tsched.combiners, self._tsched.kinds
+            )
         self._w_spec = P(None, ax)
         self._x_spec = P(da, None)
+        # Every entry takes the schedule offset t0 (a replicated int32
+        # scalar) as its last argument: the time-varying modes start their
+        # combiner sequence at iteration t0, everything else ignores it.
+        # t0 is traced, not static, so varying it never recompiles.
+        t_spec = P()
         # nu/y leave the solve un-replicated along `model` (each agent its own
         # estimate), hence check_rep=False on the shard_map.
         self._solve = jax.jit(
             shard_map(
                 self._solve_body,
                 mesh=mesh,
-                in_specs=(self._w_spec, self._x_spec),
+                in_specs=(self._w_spec, self._x_spec, t_spec),
                 out_specs=(P(da, None), P(da, ax)),
                 check_vma=False,
             )
@@ -221,7 +330,7 @@ class DistributedSparseCoder:
             shard_map(
                 self._fit_body,
                 mesh=mesh,
-                in_specs=(self._w_spec, self._x_spec, P()),
+                in_specs=(self._w_spec, self._x_spec, P(), t_spec),
                 out_specs=self._w_spec,
                 check_vma=False,
             )
@@ -230,7 +339,7 @@ class DistributedSparseCoder:
             shard_map(
                 self._score_body,
                 mesh=mesh,
-                in_specs=(self._w_spec, self._x_spec),
+                in_specs=(self._w_spec, self._x_spec, t_spec),
                 out_specs=P(da),
                 check_vma=False,
             )
@@ -239,11 +348,11 @@ class DistributedSparseCoder:
         # the reference engine's layout) and the per-rank adaptive step size.
         self._solve_stacked = jax.jit(
             shard_map(
-                lambda W_loc, x_loc: tuple(
-                    v[None] for v in self._solve_body(W_loc, x_loc)
+                lambda W_loc, x_loc, t0: tuple(
+                    v[None] for v in self._solve_body(W_loc, x_loc, t0)
                 ),
                 mesh=mesh,
-                in_specs=(self._w_spec, self._x_spec),
+                in_specs=(self._w_spec, self._x_spec, t_spec),
                 out_specs=(P(ax, *da, None), P(ax, *da, None)),
                 check_vma=False,
             )
@@ -261,6 +370,8 @@ class DistributedSparseCoder:
     # -- solver body (runs per device) -------------------------------------
 
     def _iter_setup(self, W_loc: Array, x_loc: Array):
+        """Shared per-rank constants: model-axis size, this rank's index,
+        and the informed-agent weighting (theta, |N_I|) of paper Eq. 29."""
         res, reg, cfg = self.res, self.reg, self.cfg
         ax = cfg.model_axis
         n_model = jax.lax.psum(1, ax)
@@ -273,7 +384,12 @@ class DistributedSparseCoder:
             n_inf = jnp.ones((), x_loc.dtype)
         return n_model, rank, theta, n_inf
 
-    def _solve_body(self, W_loc: Array, x_loc: Array) -> Tuple[Array, Array]:
+    def _solve_body(
+        self, W_loc: Array, x_loc: Array, t0: Array
+    ) -> Tuple[Array, Array]:
+        """Per-device dual solve: cfg.iters gossip iterations from nu = 0.
+        `t0` (replicated int32 scalar) is the combiner-schedule origin of
+        the time-varying modes; every other mode ignores it."""
         res, reg, cfg = self.res, self.reg, self.cfg
         ax = cfg.model_axis
         n_model, rank, theta, n_inf = self._iter_setup(W_loc, x_loc)
@@ -357,6 +473,49 @@ class DistributedSparseCoder:
 
                 (nu, _, _), _ = jax.lax.scan(
                     step, (nu0, nu0, nu0), None, length=cfg.iters
+                )
+
+        elif cfg.mode in TV_MODES:  # time-varying combiner sequence
+            mu = self._mu_for(W_loc)
+            scheds = self._gscheds
+            local_grad = self._local_grad_fn(W_loc, x_loc, theta, n_inf, n_model)
+            t_start = jnp.asarray(t0, jnp.int32)
+
+            if cfg.mode == "graph_tv":
+
+                def step(carry, _):
+                    nu, t = carry
+                    psi = nu - mu * local_grad(nu)
+                    # the traced iteration index picks A_{t mod P}'s compiled
+                    # ppermute schedule inside ONE program (lax.switch)
+                    nu = res.project_dual(
+                        dist.graph_combine_switch(psi, ax, scheds, t)
+                    )
+                    return (nu, t + 1), None
+
+                (nu, _), _ = jax.lax.scan(
+                    step, (nu0, t_start), None, length=cfg.iters
+                )
+
+            else:  # graph_tv_q8: same switch over the int8 wire format
+
+                def step(carry, _):
+                    nu, err, t = carry
+                    psi = nu - mu * local_grad(nu)
+                    # same wire format and error feedback as ring_q8: only
+                    # the outgoing message is quantized, once per iteration.
+                    q, s = _quantize_q8(psi + err)
+                    err = (psi + err) - _dequantize_q8(q, s)
+                    nu = res.project_dual(
+                        dist.graph_combine_quantized_switch(
+                            psi, q, s, ax, scheds, t
+                        )
+                    )
+                    return (nu, err, t + 1), None
+
+                (nu, _, _), _ = jax.lax.scan(
+                    step, (nu0, jnp.zeros_like(nu0), t_start), None,
+                    length=cfg.iters,
                 )
 
         else:  # graph family: gossip under the compiled combiner schedule
@@ -444,9 +603,14 @@ class DistributedSparseCoder:
 
     # -- one dictionary-learning step (infer + local update) ---------------
 
-    def _fit_body(self, W_loc: Array, x_loc: Array, mu_w: Array) -> Array:
+    def _fit_body(
+        self, W_loc: Array, x_loc: Array, mu_w: Array, t0: Array
+    ) -> Array:
+        """One dictionary step (paper Eq. 51): solve the duals at schedule
+        offset t0, then the locally-owned atom update with the minibatch-mean
+        gradient reduced over the data axes."""
         res, reg, cfg = self.res, self.reg, self.cfg
-        nu, y = self._solve_body(W_loc, x_loc)
+        nu, y = self._solve_body(W_loc, x_loc, t0)
         # Minibatch-mean gradient nu^T y; reduce over the data axes (DP sync).
         b_loc = jnp.asarray(x_loc.shape[0], x_loc.dtype)
         g = nu.T @ y  # (M, K_loc)
@@ -461,10 +625,12 @@ class DistributedSparseCoder:
 
     # -- novel-document scoring (exact aggregation = 1 psum) ---------------
 
-    def _score_body(self, W_loc: Array, h_loc: Array) -> Array:
+    def _score_body(self, W_loc: Array, h_loc: Array, t0: Array) -> Array:
+        """Per-device novelty scoring (paper Eq. 63-66): dual value of the
+        fit, aggregated exactly with one psum over the model axis."""
         res, reg, cfg = self.res, self.reg, self.cfg
         ax = cfg.model_axis
-        nu, _ = self._solve_body(W_loc, h_loc)
+        nu, _ = self._solve_body(W_loc, h_loc, t0)
         hstar = reg.hstar(nu @ W_loc)  # (B,)
         hstar_sum = jax.lax.psum(hstar, ax)
         val = res.fstar(nu) - jnp.sum(nu * h_loc, axis=-1) + hstar_sum
@@ -472,24 +638,32 @@ class DistributedSparseCoder:
 
     # -- public API ---------------------------------------------------------
 
-    def solve(self, W: Array, x: Array) -> Tuple[Array, Array]:
+    def solve(self, W: Array, x: Array, t0: int = 0) -> Tuple[Array, Array]:
         """Dual inference. W (M, K) atom-sharded; x (B, M) batch-sharded.
-        Returns (nu (B, M) — agent-local estimates, y (B, K))."""
-        return self._solve(W, x)
+        Returns (nu (B, M) — agent-local estimates, y (B, K)).  `t0` is the
+        combiner-schedule offset for the time-varying modes (the network at
+        iteration i of this solve is A_{t0+i}); it is traced, so varying it
+        never recompiles.  Static modes ignore it."""
+        return self._solve(W, x, jnp.asarray(t0, jnp.int32))
 
-    def fit_batch(self, W: Array, x: Array, mu_w: float) -> Array:
-        """One distributed dictionary-learning step (Alg. 1): returns new W."""
-        return self._fit(W, x, jnp.asarray(mu_w, jnp.float32))
+    def fit_batch(self, W: Array, x: Array, mu_w: float, t0: int = 0) -> Array:
+        """One distributed dictionary-learning step (Alg. 1): returns new W.
+        `t0` is the time-varying combiner-schedule offset (see solve)."""
+        return self._fit(
+            W, x, jnp.asarray(mu_w, jnp.float32), jnp.asarray(t0, jnp.int32)
+        )
 
-    def score(self, W: Array, h: Array) -> Array:
+    def score(self, W: Array, h: Array, t0: int = 0) -> Array:
         """Novelty scores for test batch h (paper Eq. 63-66, exact path)."""
-        return self._score(W, h)
+        return self._score(W, h, jnp.asarray(t0, jnp.int32))
 
-    def solve_per_agent(self, W: Array, x: Array) -> Tuple[Array, Array]:
+    def solve_per_agent(
+        self, W: Array, x: Array, t0: int = 0
+    ) -> Tuple[Array, Array]:
         """Dual inference with per-agent outputs stacked on a leading N axis:
         nu (N, B, M) and y (N, B, Kb) — the reference engine's layout, used
         by the ref<->dist parity tests and debugging."""
-        return self._solve_stacked(W, x)
+        return self._solve_stacked(W, x, jnp.asarray(t0, jnp.int32))
 
     def adaptive_mu(self, W: Array) -> Array:
         """Per-rank step size the configured mode would use, gathered to
@@ -501,8 +675,12 @@ class DistributedSparseCoder:
         realizes, in the reference engine's layout (A[l, k] = a_{lk}): the
         compiled graph combiner for the graph family, the constant-weight
         ring matrix for the ring family, and 11^T/N for the exact modes.
-        Used by the ref<->dist parity tests, the gossip benchmarks
-        (mixing_rate column), and service stats."""
+        For the time-varying modes this is the effective ONE-PERIOD window
+        product A_0 A_1 ... A_{P-1} (itself doubly stochastic) — the
+        per-step sequence is `combiner_sequence()`.  Used by the ref<->dist
+        parity tests, the gossip benchmarks, and service stats."""
+        if self._tsched is not None:
+            return self._tsched.window_combiner()
         if self._A is not None:
             return np.array(self._A)
         n = dist.axis_sizes(self.mesh)[self.cfg.model_axis]
@@ -510,21 +688,70 @@ class DistributedSparseCoder:
             return topo.uniform_weights(n)
         return topo.ring_weights(n, self.cfg.beta)
 
+    def combiner_sequence(self) -> Tuple[np.ndarray, ...]:
+        """The per-iteration combiner sequence A_0 .. A_{P-1} (period P = 1
+        for every static mode) — the determinism tests compare this across
+        engine constructions and grown() restarts."""
+        if self._tsched is not None:
+            return tuple(np.array(a) for a in self._tsched.combiners)
+        return (self.combiner(),)
+
     def combiner_info(self) -> dict:
-        """Topology label + mixing rate (second-largest singular value of A,
-        the gossip contraction factor) for stats/benchmark reporting."""
+        """Topology label + mixing rate for stats/benchmark reporting.
+
+        mixing_rate is the gossip contraction factor: the second-largest
+        singular value of A for static modes, and the per-step WINDOWED rate
+        sigma_2(window product)^(1/P) for the time-varying modes.  Also
+        carries `schedule` (the spec, None when static) and
+        `schedule_period` (1 when static)."""
+        if self.cfg.mode in TV_MODES:
+            return {
+                "topology": f"tv:{self._tsched.spec}",
+                "mixing_rate": self._tsched.windowed_mixing_rate(),
+                "schedule": self._tsched.spec,
+                "schedule_period": self._tsched.period,
+            }
         if self.cfg.mode in GRAPH_MODES:
             label = self.cfg.topology
         elif self.cfg.mode in RING_MODES:
             label = "ring"
         else:
             label = "full"
-        return {"topology": label, "mixing_rate": topo.mixing_rate(self.combiner())}
+        return {
+            "topology": label,
+            "mixing_rate": topo.mixing_rate(self.combiner()),
+            "schedule": None,
+            "schedule_period": 1,
+        }
 
     @property
     def gossip_schedule(self) -> Optional[dist.GraphSchedule]:
-        """The compiled ppermute schedule (graph modes only; None otherwise)."""
+        """The compiled ppermute schedule (static graph modes only; the
+        time-varying modes expose `gossip_schedules`; None otherwise)."""
         return self._gsched
+
+    @property
+    def gossip_schedules(self) -> Optional[Tuple[dist.GraphSchedule, ...]]:
+        """The compiled per-step ppermute schedules: a length-P tuple for
+        the time-varying modes, a 1-tuple for the static graph modes, None
+        for ring/exact (whose data movement is not schedule-compiled)."""
+        if self._gscheds is not None:
+            return self._gscheds
+        if self._gsched is not None:
+            return (self._gsched,)
+        return None
+
+    @property
+    def topology_schedule(self) -> Optional[topo.TopologySchedule]:
+        """The validated `TopologySchedule` driving a time-varying coder
+        (None for static modes)."""
+        return self._tsched
+
+    @property
+    def is_time_varying(self) -> bool:
+        """Whether this coder's combiner changes per iteration (the service
+        threads a persistent schedule offset t0 through solve/fit iff so)."""
+        return self.cfg.mode in TV_MODES
 
     def shard(self, W: Array, x: Array) -> Tuple[Array, Array]:
         """Place global arrays with the engine's shardings (for benchmarks)."""
@@ -557,6 +784,13 @@ class DistributedSparseCoder:
         (unit-norm, nonneg-projected when the task demands it) appended.
         Re-sharding goes through the runtime/dist seam: the new mesh comes
         from `dist.make_mesh` and placement from the new coder's sharding.
+
+        Growth is topology-aware: erdos combiners (static, and every erdos
+        step of a time-varying schedule) are grown from the current
+        adjacency with `topology.erdos_renyi_grow` — existing agents keep
+        their neighborhoods, only new-agent edges are sampled — while
+        structured kinds re-derive at the larger size.  Time-varying coders
+        re-derive the whole SEQUENCE (deterministically in topology_seed).
         """
         if extra_model <= 0:
             raise ValueError(f"extra_model must be positive, got {extra_model}")
@@ -568,7 +802,9 @@ class DistributedSparseCoder:
             n_new if nm == self.cfg.model_axis else sizes[nm] for nm in names
         )
         new_mesh = dist.make_mesh(shape, names)
-        new_coder = DistributedSparseCoder(new_mesh, self.res, self.reg, self.cfg)
+        new_coder = DistributedSparseCoder(
+            new_mesh, self.res, self.reg, self.cfg, grown_from=self
+        )
         m, k = W.shape
         if k % n_old:
             raise ValueError(f"K={k} not divisible by model={n_old}")

@@ -88,15 +88,12 @@ class DiffusionConfig:
     penalty_rho: float = 10.0
 
 
-@functools.partial(
-    jax.jit, static_argnames=("res", "reg", "cfg", "record_every")
-)
 def diffusion_infer(
     res: Residual,
     reg: Regularizer,
     W_blocks: Array,  # (N, M, Kb)
     x: Array,  # (..., M)
-    A: Array,  # (N, N) doubly stochastic, A[l, k] = a_{lk}
+    A,  # (N, N) doubly stochastic, A[l, k] = a_{lk}; or callable t -> (N, N)
     informed: Array,  # (N,) 0/1 mask of N_I
     cfg: DiffusionConfig = DiffusionConfig(),
     nu0: Optional[Array] = None,  # (N, ..., M)
@@ -106,11 +103,47 @@ def diffusion_infer(
     """Run ATC diffusion; returns (nu_agents (N,...,M), y_agents (N,...,Kb), traj).
 
     Every agent carries its own estimate nu_k; the combine step mixes the
-    intermediate psi_l over the neighborhood via A.  With `record_every > 0`
-    also returns the stacked nu trajectory every that-many iterations (used
-    by the Fig.-4 convergence benchmark).  `mu` may be passed as a traced
-    scalar (e.g. the curvature-adaptive step from `safe_diffusion_mu`).
+    intermediate psi_l over the neighborhood via A (paper Eq. 31/35/36).
+    `A` is either one (N, N) doubly-stochastic matrix (the paper's static
+    network) or a jax-traceable callable ``A_t(t) -> (N, N)`` giving the
+    combiner at iteration t — the time-varying regime of Daneshmand et al.
+    (`core.topology.TopologySchedule.as_callable()` builds one); this is the
+    single-host reference the `mode="graph_tv"` production engine is
+    parity-tested against.  With `record_every > 0` also returns the stacked
+    nu trajectory every that-many iterations (used by the Fig.-4 convergence
+    benchmark).  `mu` may be passed as a traced scalar (e.g. the
+    curvature-adaptive step from `safe_diffusion_mu`).
     """
+    if callable(A):
+        # A Python callable cannot cross a jit boundary as an argument; the
+        # scans inside the impl still compile, so the reference engine stays
+        # fast enough for tests/benchmarks without an outer jit cache.
+        return _diffusion_infer_impl(
+            res, reg, W_blocks, x, A, informed, cfg, nu0, record_every, mu
+        )
+    return _diffusion_infer_jit(
+        res, reg, W_blocks, x, A, informed, cfg, nu0, record_every, mu
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("res", "reg", "cfg", "record_every")
+)
+def _diffusion_infer_jit(
+    res, reg, W_blocks, x, A, informed, cfg, nu0, record_every, mu
+):
+    """Jitted static-A entry (the original `diffusion_infer` signature)."""
+    return _diffusion_infer_impl(
+        res, reg, W_blocks, x, lambda t: A, informed, cfg, nu0, record_every, mu
+    )
+
+
+def _diffusion_infer_impl(
+    res, reg, W_blocks, x, A_fn, informed, cfg, nu0, record_every, mu
+):
+    """Shared diffusion loop over a combiner callable `A_fn(t) -> (N, N)`;
+    threads the iteration index t through the scan carry so time-varying
+    sequences see the same t the distributed engine's scan counter uses."""
     n_agents = W_blocks.shape[0]
     n_informed = jnp.maximum(informed.sum(), 1.0).astype(x.dtype)
     if mu is None:
@@ -124,39 +157,41 @@ def diffusion_infer(
         )
     )
 
-    def combine(psi: Array) -> Array:
+    def combine(psi: Array, t) -> Array:
         # nu_k = sum_l a_{lk} psi_l  -> contract over the agent axis of psi.
-        return jnp.tensordot(A.T.astype(psi.dtype), psi, axes=1)
+        return jnp.tensordot(A_fn(t).T.astype(psi.dtype), psi, axes=1)
 
-    def step(nu, _):
+    def step(carry, _):
+        nu, t = carry
         g = grad_all(W_blocks, nu, informed.astype(x.dtype))
         if cfg.mode == "penalty" and res.bounded_dual:
             zeta = nu - mu * g
             pen_grad = cfg.penalty_rho * (zeta - res.project_dual(zeta))
             psi = zeta - mu * pen_grad
-            nu_next = combine(psi)
+            nu_next = combine(psi, t)
         else:
             psi = nu - mu * g
-            nu_next = combine(psi)
+            nu_next = combine(psi, t)
             if res.bounded_dual:
                 nu_next = res.project_dual(nu_next)
-        return nu_next, None
+        return (nu_next, t + 1), None
 
+    carry0 = (nu0, jnp.asarray(0, jnp.int32))
     if record_every and record_every > 0:
         n_outer = cfg.iters // record_every
 
-        def outer(nu, _):
-            nu, _ = jax.lax.scan(step, nu, None, length=record_every)
-            return nu, nu
+        def outer(carry, _):
+            carry, _ = jax.lax.scan(step, carry, None, length=record_every)
+            return carry, carry[0]
 
-        nu, traj = jax.lax.scan(outer, nu0, None, length=n_outer)
+        (nu, t), traj = jax.lax.scan(outer, carry0, None, length=n_outer)
         # When record_every does not divide cfg.iters, run the remainder
         # (unrecorded) so the returned nu always reflects the full budget.
         rem = cfg.iters - n_outer * record_every
         if rem:
-            nu, _ = jax.lax.scan(step, nu, None, length=rem)
+            (nu, t), _ = jax.lax.scan(step, (nu, t), None, length=rem)
     else:
-        nu, _ = jax.lax.scan(step, nu0, None, length=cfg.iters)
+        (nu, _), _ = jax.lax.scan(step, carry0, None, length=cfg.iters)
         traj = None
 
     y = jax.vmap(lambda W_k, nu_k: reg.ystar(nu_k @ W_k))(W_blocks, nu)

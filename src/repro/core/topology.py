@@ -4,11 +4,29 @@ The paper runs diffusion over a connected random graph with Metropolis
 weights (Sec. IV-B).  The production TPU engine uses ring/torus topologies
 that map onto ICI neighbors; the reference engine accepts any connected
 graph.  All weight matrices returned here are doubly stochastic, which is
-the condition for the diffusion iteration (31) to converge to an O(mu^2)
-neighborhood of the optimum.
+the condition for the diffusion iteration (Eq. 31) to converge to an
+O(mu^2) neighborhood of the optimum.
+
+Two regimes live here:
+
+* **static** combiners — one doubly-stochastic A applied every iteration
+  (`make_topology`);
+* **time-varying** combiner sequences — `TopologySchedule`, a seeded
+  periodic sequence A_0, A_1, ... with every A_t doubly stochastic.  This
+  is the regime of Daneshmand et al. (arXiv:1612.07335, arXiv:1808.05933):
+  the network changes every iteration, and convergence only needs each
+  A_t doubly stochastic plus joint connectivity over a window.
+
+Elastic growth is topology-aware: `erdos_renyi_grow` enlarges a random
+graph WITHOUT resampling the edges between existing agents, so growth
+never rewires the neighborhoods the old agents already use
+(`TopologySchedule.grown` applies it per schedule step).
 """
 
 from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -48,6 +66,7 @@ def torus_adjacency(rows: int, cols: int) -> np.ndarray:
 
 
 def fully_connected_adjacency(n: int) -> np.ndarray:
+    """Complete graph K_n (n, n) bool adjacency — every agent talks to all."""
     a = np.ones((n, n), dtype=bool)
     np.fill_diagonal(a, False)
     return a
@@ -66,6 +85,8 @@ def erdos_renyi_adjacency(n: int, p: float = 0.5, seed: int = 0) -> np.ndarray:
 
 
 def is_connected(adj: np.ndarray) -> bool:
+    """Whether the (n, n) bool adjacency is one connected component (the
+    precondition for diffusion to reach consensus, paper Sec. IV-B)."""
     n = adj.shape[0]
     if n == 1:
         return True
@@ -126,6 +147,8 @@ def ring_weights(n: int, beta: float = 1.0 / 3.0) -> np.ndarray:
 
 
 def is_doubly_stochastic(a: np.ndarray, tol: float = 1e-9) -> bool:
+    """Whether (n, n) A is nonnegative with rows AND columns summing to 1 —
+    the combiner condition for diffusion convergence (paper Eq. 31)."""
     return (
         bool(np.all(a >= -tol))
         and bool(np.allclose(a.sum(axis=0), 1.0, atol=1e-7))
@@ -151,7 +174,7 @@ def torus_dims(n: int) -> tuple:
 
 def make_topology(kind: str, n: int, *, p: float = 0.5, seed: int = 0,
                   beta: float = 1.0 / 3.0) -> np.ndarray:
-    """Build a doubly-stochastic combiner for `n` agents.
+    """Build a doubly-stochastic (n, n) combiner for `n` agents.
 
     kinds: "ring" (constant-weight), "ring_metropolis", "torus", "erdos",
     "full".
@@ -167,3 +190,330 @@ def make_topology(kind: str, n: int, *, p: float = 0.5, seed: int = 0,
     if kind == "full":
         return uniform_weights(n)
     raise KeyError(f"unknown topology kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Time-varying combiner schedules (Daneshmand et al., arXiv:1612.07335 /
+# arXiv:1808.05933: the combiner changes every iteration)
+# ---------------------------------------------------------------------------
+
+GRAPH_KINDS = ("ring", "ring_metropolis", "torus", "erdos", "full")
+
+
+def derive_seed(seed: int, *stream: int) -> int:
+    """Deterministic child seed for stream position `stream` under `seed`.
+
+    SeedSequence-based, so the erdos combiner at schedule step t (and the
+    grow-preserving resample at a given target size) is a pure function of
+    (topology_seed, position) — the determinism contract the schedule tests
+    assert across engine constructions and grown() restarts.
+    """
+    return int(np.random.SeedSequence((int(seed),) + tuple(int(s) for s in stream))
+               .generate_state(1)[0])
+
+
+def erdos_renyi_grow(
+    adj_old: np.ndarray, n_new: int, p: float = 0.5, seed: int = 0
+) -> np.ndarray:
+    """Grow a connected Erdos-Renyi graph WITHOUT rewiring existing agents.
+
+    Returns an (n_new, n_new) bool adjacency whose top-left block is exactly
+    `adj_old`: only edges with at least one endpoint among the new agents
+    are sampled (resampled until the grown graph is connected).  This is the
+    topology-aware elastic-growth sampler — a wholesale resample would hand
+    every existing agent a new neighborhood mid-stream.
+    """
+    adj_old = np.asarray(adj_old, dtype=bool)
+    n_old = adj_old.shape[0]
+    if n_new < n_old:
+        raise ValueError(f"cannot grow from {n_old} agents down to {n_new}")
+    if n_new == n_old:
+        return adj_old.copy()
+    rng = np.random.default_rng(seed)
+    for _ in range(1000):
+        a = np.zeros((n_new, n_new), dtype=bool)
+        a[:n_old, :n_old] = adj_old
+        cand = np.triu(rng.random((n_new, n_new)) < p, 1)
+        cand[:n_old, :n_old] = False  # never touch existing-agent edges
+        a |= cand | cand.T
+        if is_connected(a):
+            return a
+    raise RuntimeError(
+        f"could not grow a connected G({n_new},{p}) graph from {n_old} agents"
+    )
+
+
+def _window_product(combiners: Sequence[np.ndarray]) -> np.ndarray:
+    """A_0 A_1 ... A_{P-1} in float64 — THE one implementation of the window
+    product, shared by `windowed_mixing_rate` and
+    `TopologySchedule.window_combiner` so the two can never drift."""
+    prod = np.eye(np.asarray(combiners[0]).shape[0])
+    for a in combiners:
+        prod = prod @ np.asarray(a, np.float64)
+    return prod
+
+
+def windowed_mixing_rate(combiners: Sequence[np.ndarray]) -> float:
+    """Per-step contraction factor of a combiner window.
+
+    For a time-varying sequence the single-matrix `mixing_rate` is
+    meaningless; the relevant quantity is the contraction of the window
+    product A_0 A_1 ... A_{P-1} (the effective combiner one period applies
+    to the stacked agent estimates), normalized per step:
+    sigma_2(prod)^(1/P).  Degenerates to `mixing_rate(A)` for P = 1.
+    """
+    return float(mixing_rate(_window_product(combiners)) ** (1.0 / len(combiners)))
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class TopologySchedule:
+    """A periodic, seeded sequence of doubly-stochastic combiners A_t.
+
+    The combiner used at diffusion iteration t is ``at(t) = combiners[t %
+    period]`` — the time-varying-digraph regime of Daneshmand et al.
+    Every entry is validated doubly stochastic at construction, and the
+    whole object is a pure function of (spec, n, p, seed, beta, period), so
+    two engines built with the same `topology_seed` run the IDENTICAL
+    network sequence.
+
+    Fields:
+      spec        normalized spec string ("fixed:<kind>",
+                  "alternating:<k1>,<k2>,...", "erdos_resampled")
+      n           number of agents (mesh model-axis size)
+      kinds       per-step combiner kind, len == period
+      combiners   per-step (n, n) doubly-stochastic A_t, len == period
+      adjacencies per-step bool adjacency for graph-backed steps (None for
+                  "ring"/"full") — carried so `grown` can preserve existing
+                  neighborhoods instead of resampling them
+      p, seed, beta  the generator parameters (erdos edge probability,
+                  base seed, constant-weight ring beta)
+    """
+
+    spec: str
+    n: int
+    kinds: Tuple[str, ...]
+    combiners: Tuple[np.ndarray, ...]
+    adjacencies: Tuple[Optional[np.ndarray], ...]
+    p: float = 0.5
+    seed: int = 0
+    beta: float = 1.0 / 3.0
+
+    def __post_init__(self):
+        """Validate shape agreement and per-step double stochasticity."""
+        if not self.combiners:
+            raise ValueError("TopologySchedule needs at least one combiner")
+        if len(self.kinds) != len(self.combiners):
+            raise ValueError("kinds and combiners must have equal length")
+        for t, a in enumerate(self.combiners):
+            a = np.asarray(a)
+            if a.shape != (self.n, self.n):
+                raise ValueError(
+                    f"combiner {t} has shape {a.shape}, expected {(self.n, self.n)}"
+                )
+            if not is_doubly_stochastic(a):
+                raise ValueError(
+                    f"combiner {t} (kind {self.kinds[t]!r}) of schedule "
+                    f"{self.spec!r} is not doubly stochastic"
+                )
+
+    @property
+    def period(self) -> int:
+        """Number of distinct combiners before the sequence repeats."""
+        return len(self.combiners)
+
+    def at(self, t: int) -> np.ndarray:
+        """The (n, n) combiner applied at diffusion iteration t (periodic)."""
+        return self.combiners[int(t) % self.period]
+
+    def stacked(self):
+        """(period, n, n) float32 stack of the combiners — the dense form
+        `as_callable` indexes into (device-side, for the reference engine)."""
+        return np.stack([np.asarray(a, np.float32) for a in self.combiners])
+
+    def as_callable(self) -> Callable:
+        """A jax-traceable ``A_t(t) -> (n, n)`` closure over the stacked
+        combiners, suitable for `core.inference.diffusion_infer`'s callable-A
+        form (t may be a traced iteration index inside `lax.scan`)."""
+        import jax.numpy as jnp
+
+        stack = jnp.asarray(self.stacked())
+        period = self.period
+        return lambda t: stack[jnp.mod(t, period)]
+
+    def window_combiner(self) -> np.ndarray:
+        """The effective one-period combiner A_0 A_1 ... A_{P-1}.
+
+        Diffusion applies nu <- A_t^T psi each step, so over one period the
+        stacked estimates see (A_0 A_1 ... A_{P-1})^T; the product of doubly
+        stochastic matrices is doubly stochastic, so this is itself a valid
+        (dense) combiner — it is what `DistributedSparseCoder.combiner()`
+        reports for the time-varying modes."""
+        return _window_product(self.combiners)
+
+    def windowed_mixing_rate(self) -> float:
+        """Per-step contraction sigma_2(window product)^(1/period) — the
+        time-varying analogue of `mixing_rate(A)` (reported by stats and the
+        gossip benchmarks)."""
+        return windowed_mixing_rate(self.combiners)
+
+    def grown(self, n_new: int) -> "TopologySchedule":
+        """Re-derive the schedule for a larger agent count (elastic growth).
+
+        Deterministic in (seed, step, n_new).  Erdos-backed steps grow via
+        `erdos_renyi_grow` — existing agents keep their neighborhoods and
+        only new-agent edges are sampled; structured kinds (ring / torus /
+        full) are re-derived at the larger size, which is their natural
+        grow-preserving extension (a ring stays the ring through the new
+        agents, a torus re-factorizes)."""
+        kinds, combiners, adjs = [], [], []
+        for i, kind in enumerate(self.kinds):
+            if kind == "erdos" and self.adjacencies[i] is not None:
+                adj = erdos_renyi_grow(
+                    self.adjacencies[i], n_new, p=self.p,
+                    seed=derive_seed(self.seed, i, n_new),
+                )
+                combiners.append(metropolis_weights(adj))
+                adjs.append(adj)
+            elif kind in GRAPH_KINDS and kind != "erdos":
+                combiners.append(
+                    make_topology(kind, n_new, p=self.p, seed=self.seed,
+                                  beta=self.beta)
+                )
+                adjs.append(_adjacency_for(kind, n_new))
+            else:
+                # fixed_schedule(A) wraps an EXPLICIT matrix (kind
+                # "explicit", or an erdos step with no stored adjacency):
+                # there is no generator to re-derive at the larger size, so
+                # growth is a designed error, not a confusing KeyError.
+                raise ValueError(
+                    f"cannot grow schedule step {i} of kind {kind!r}: it "
+                    f"wraps an explicit combiner matrix with no generator; "
+                    f"build the schedule via make_topology_schedule("
+                    f"'fixed:<kind>', ...) so growth can re-derive it"
+                )
+            kinds.append(kind)
+        return TopologySchedule(
+            spec=self.spec, n=n_new, kinds=tuple(kinds),
+            combiners=tuple(combiners), adjacencies=tuple(adjs),
+            p=self.p, seed=self.seed, beta=self.beta,
+        )
+
+
+def _adjacency_for(kind: str, n: int) -> Optional[np.ndarray]:
+    """Adjacency of a structured kind (None where the combiner is not
+    backed by a sparse graph we would need to preserve through growth)."""
+    if kind in ("ring", "ring_metropolis"):
+        return ring_adjacency(n)
+    if kind == "torus":
+        return torus_adjacency(*torus_dims(n))
+    return None  # "full" (dense) — nothing to preserve
+
+
+def fixed_schedule(A: np.ndarray, kind: str = "fixed") -> TopologySchedule:
+    """Degenerate one-entry schedule around an explicit combiner `A` —
+    lets every time-varying code path also run a static matrix.
+
+    `kind` is a pure LABEL (it rides the spec for reporting); the schedule
+    step is recorded as "explicit" because an arbitrary matrix carries no
+    generator, so `grown()` on the result is a designed error — build via
+    `make_topology_schedule("fixed:<kind>", ...)` when growth must be able
+    to re-derive the combiner."""
+    A = np.asarray(A, np.float64)
+    return TopologySchedule(
+        spec=f"fixed:{kind}", n=A.shape[0], kinds=("explicit",),
+        combiners=(A,), adjacencies=(None,),
+    )
+
+
+def make_topology_schedule(
+    spec: str,
+    n: int,
+    *,
+    p: float = 0.5,
+    seed: int = 0,
+    beta: float = 1.0 / 3.0,
+    period: int = 2,
+) -> TopologySchedule:
+    """Build a `TopologySchedule` for `n` agents from a spec string.
+
+    Specs:
+      "fixed:<kind>"              degenerate period-1 schedule of any
+                                  `make_topology` kind
+      "alternating[:<k1>,<k2>,...]"  cycle through the listed kinds, one
+                                  iteration each (default ring_metropolis,
+                                  torus — the alternating ring/torus regime)
+      "erdos_resampled"           a FRESH connected G(n, p) every step,
+                                  `period` steps before repeating; step t's
+                                  graph is seeded `derive_seed(seed, t)`
+
+    Every generated A_t is validated doubly stochastic; the result is a
+    pure function of the arguments (same seed => identical sequence).
+    """
+    spec = (spec or "").strip()
+    head, _, tail = spec.partition(":")
+    if head == "fixed":
+        kind = tail or "ring_metropolis"
+        if kind not in GRAPH_KINDS:
+            raise KeyError(f"unknown topology kind {kind!r} in spec {spec!r}")
+        if kind == "erdos":
+            # The RAW seed, exactly as the static mode="graph" erdos path
+            # uses it: "fixed:erdos" must be the degenerate wrapper of the
+            # static run, sampling the IDENTICAL graph for the same
+            # topology_seed (only multi-step specs use derive_seed streams).
+            adj = erdos_renyi_adjacency(n, p=p, seed=seed)
+            return TopologySchedule(
+                spec=f"fixed:{kind}", n=n, kinds=("erdos",),
+                combiners=(metropolis_weights(adj),), adjacencies=(adj,),
+                p=p, seed=seed, beta=beta,
+            )
+        return TopologySchedule(
+            spec=f"fixed:{kind}", n=n, kinds=(kind,),
+            combiners=(make_topology(kind, n, p=p, seed=seed, beta=beta),),
+            adjacencies=(_adjacency_for(kind, n),), p=p, seed=seed, beta=beta,
+        )
+    if head == "alternating":
+        kinds = tuple(k.strip() for k in tail.split(",") if k.strip()) or (
+            "ring_metropolis", "torus",
+        )
+        combiners, adjs = [], []
+        for i, kind in enumerate(kinds):
+            if kind not in GRAPH_KINDS:
+                raise KeyError(f"unknown topology kind {kind!r} in spec {spec!r}")
+            if kind == "erdos":
+                adj = erdos_renyi_adjacency(n, p=p, seed=derive_seed(seed, i))
+                combiners.append(metropolis_weights(adj))
+                adjs.append(adj)
+            else:
+                combiners.append(make_topology(kind, n, p=p, seed=seed, beta=beta))
+                adjs.append(_adjacency_for(kind, n))
+        return TopologySchedule(
+            spec="alternating:" + ",".join(kinds), n=n, kinds=kinds,
+            combiners=tuple(combiners), adjacencies=tuple(adjs),
+            p=p, seed=seed, beta=beta,
+        )
+    if head == "erdos_resampled":
+        if tail:
+            # reject 'erdos_resampled:<x>' loudly — the period comes from
+            # the `period` argument (DistConfig.schedule_period), and
+            # silently dropping the tail would run a different sequence
+            # than the user asked for.
+            raise KeyError(
+                f"spec {spec!r} takes no ':' argument — the period of "
+                f"'erdos_resampled' is the `period` argument "
+                f"(DistConfig.schedule_period), not part of the spec"
+            )
+        if period < 1:
+            raise ValueError(f"schedule period must be >= 1, got {period}")
+        adjs = tuple(
+            erdos_renyi_adjacency(n, p=p, seed=derive_seed(seed, t))
+            for t in range(period)
+        )
+        return TopologySchedule(
+            spec="erdos_resampled", n=n, kinds=("erdos",) * period,
+            combiners=tuple(metropolis_weights(a) for a in adjs),
+            adjacencies=adjs, p=p, seed=seed, beta=beta,
+        )
+    raise KeyError(
+        f"unknown topology schedule spec {spec!r} (expected 'fixed:<kind>', "
+        f"'alternating:<k1>,<k2>,...', or 'erdos_resampled')"
+    )

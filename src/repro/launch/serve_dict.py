@@ -39,14 +39,22 @@ def main() -> None:
     ap.add_argument("--delta", type=float, default=0.05)
     ap.add_argument("--mode", type=str, default="exact_fista",
                     choices=["exact", "exact_fista", "ring", "ring_q8", "ring_async",
-                             "graph", "graph_q8", "graph_async"])
+                             "graph", "graph_q8", "graph_async",
+                             "graph_tv", "graph_tv_q8"])
     ap.add_argument("--topology", type=str, default="ring_metropolis",
                     choices=["ring", "ring_metropolis", "torus", "erdos", "full"],
                     help="graph-mode combiner kind (core/topology.make_topology)")
     ap.add_argument("--topology-p", type=float, default=0.5,
                     help="erdos edge probability")
     ap.add_argument("--topology-seed", type=int, default=0,
-                    help="erdos graph seed")
+                    help="erdos graph / time-varying sequence seed")
+    ap.add_argument("--topology-schedule", type=str,
+                    default="alternating:ring_metropolis,torus",
+                    help="graph_tv modes: core/topology.make_topology_schedule "
+                         "spec ('fixed:<kind>' | 'alternating:<k1>,<k2>,...' | "
+                         "'erdos_resampled')")
+    ap.add_argument("--schedule-period", type=int, default=2,
+                    help="period of the erdos_resampled schedule")
     ap.add_argument("--iters", type=int, default=150, help="dual iterations per solve")
     ap.add_argument("--m", type=int, default=32, help="data dimension")
     ap.add_argument("--atoms-per-agent", type=int, default=8)
@@ -84,6 +92,8 @@ def main() -> None:
         mesh, res, reg, DistConfig(
             mode=args.mode, iters=args.iters, topology=args.topology,
             topology_p=args.topology_p, topology_seed=args.topology_seed,
+            topology_schedule=args.topology_schedule,
+            schedule_period=args.schedule_period,
         )
     )
     comb = coder.combiner_info()
@@ -99,7 +109,8 @@ def main() -> None:
     print(f"serve_dict: task={args.task} mode={args.mode} mesh={args.mesh} "
           f"M={args.m} K={k0} micro_batch={args.micro_batch} "
           f"samples={args.samples} grow_at={args.grow_at or 'never'} "
-          f"topology={comb['topology']} mixing_rate={comb['mixing_rate']:.3f}")
+          f"topology={comb['topology']} mixing_rate={comb['mixing_rate']:.3f} "
+          f"schedule_period={comb.get('schedule_period', 1)}")
 
     futures = []
     grow_fut = None
@@ -148,6 +159,9 @@ def main() -> None:
             "samples": args.samples,
             "topology": stats["topology"],
             "mixing_rate": stats["mixing_rate"],
+            "schedule": stats.get("schedule"),
+            "schedule_period": stats.get("schedule_period", 1),
+            "active_schedule": stats.get("active_schedule", 0),
             "wall_s": wall_s,
             "samples_per_s": stats["coded"] / wall_s,
             "latency_ms": lat,

@@ -25,6 +25,16 @@ Mode -> collective mapping (core/distributed.py consumes these):
   graph_q8             graph_combine_     same schedule over the int8 wire
                        quantized          format (quantize_q8 scales ride
                                           along each shift)
+  graph_tv             graph_combine_     TIME-VARYING combiner sequence
+                       switch over        (core/topology.TopologySchedule):
+                       (graph_schedule_   every A_t pre-compiled to its own
+                       sequence ...)      ppermute schedule, the active one
+                                          selected per iteration by the
+                                          traced index via lax.switch — the
+                                          whole run stays ONE compiled
+                                          program
+  graph_tv_q8          graph_combine_     the same switch over the int8
+                       quantized_switch   wire format
 
 A torus combiner additionally gets `torus_schedule`: exactly four neighbor
 permutations (row +/-1, column +/-1) that map onto 2-D ICI links instead of
@@ -79,10 +89,13 @@ __all__ = [
     "GraphSchedule",
     "graph_schedule",
     "torus_schedule",
+    "graph_schedule_sequence",
     "graph_shift",
     "graph_accumulate",
     "graph_combine",
     "graph_combine_quantized",
+    "graph_combine_switch",
+    "graph_combine_quantized_switch",
 ]
 
 Array = jax.Array
@@ -309,6 +322,75 @@ def graph_combine(x, axis_name: str, sched: GraphSchedule):
     return graph_accumulate(x, graph_shift(x, axis_name, sched), axis_name, sched)
 
 
+def graph_schedule_sequence(
+    As: Sequence[np.ndarray], kinds: Optional[Sequence[str]] = None
+) -> Tuple[GraphSchedule, ...]:
+    """Compile a time-varying combiner sequence (one (n, n) doubly-stochastic
+    A per step, e.g. `core/topology.TopologySchedule.combiners`) into a tuple
+    of static ppermute schedules.
+
+    `kinds` (same length, entries from core/topology.GRAPH_KINDS) routes
+    torus steps through `torus_schedule` so an alternating ring/torus
+    sequence keeps the 4-link 2-D ICI data movement on its torus iterations;
+    everything else takes the generic edge-offset decomposition.
+    """
+    from repro.core.topology import torus_dims  # numpy-only leaf
+
+    out = []
+    for i, A in enumerate(As):
+        kind = kinds[i] if kinds is not None else None
+        if kind == "torus":
+            rows, cols = torus_dims(np.asarray(A).shape[0])
+            out.append(torus_schedule(rows, cols, A))
+        else:
+            out.append(graph_schedule(A))
+    return tuple(out)
+
+
+def graph_combine_switch(
+    x, axis_name: str, scheds: Sequence[GraphSchedule], t
+) -> Array:
+    """Time-varying synchronous gossip: apply combiner A_{t mod P} where
+    `scheds` holds the P pre-compiled schedules of one period and `t` is the
+    (traced) iteration index.
+
+    Every branch is traced once at compile time with its own static ppermute
+    permutations; `lax.switch` picks the active one at run time, so the whole
+    time-varying run is ONE compiled program.  `t` must be replicated across
+    the axis (it always is: it comes from the scan counter), otherwise ranks
+    would disagree about which collective to issue.
+    """
+    if len(scheds) == 1:
+        return graph_combine(x, axis_name, scheds[0])
+    branches = [
+        (lambda v, s=s: graph_combine(v, axis_name, s)) for s in scheds
+    ]
+    return jax.lax.switch(jnp.mod(t, len(scheds)), branches, x)
+
+
+def graph_combine_quantized_switch(
+    x_self: Array,
+    q: Array,
+    s: Array,
+    axis_name: str,
+    scheds: Sequence[GraphSchedule],
+    t,
+) -> Array:
+    """`graph_combine_switch` over the int8 wire format: the caller
+    quantizes its outgoing message once as (q, s) = quantize_q8(...), and the
+    active schedule (index t mod P, via lax.switch) ships (int8 payload,
+    scales) on each of its rounds.  Error feedback stays with the caller,
+    exactly as in graph_combine_quantized / ring_q8."""
+    if len(scheds) == 1:
+        return graph_combine_quantized(x_self, q, s, axis_name, scheds[0])
+    branches = [
+        (lambda op, sch=sch: graph_combine_quantized(
+            op[0], op[1], op[2], axis_name, sch))
+        for sch in scheds
+    ]
+    return jax.lax.switch(jnp.mod(t, len(scheds)), branches, (x_self, q, s))
+
+
 def graph_combine_quantized(
     x_self: Array, q: Array, s: Array, axis_name: str, sched: GraphSchedule
 ) -> Array:
@@ -360,5 +442,7 @@ def quantize_q8(
 
 
 def dequantize_q8(q: Array, scale: Array, dtype: Optional[jnp.dtype] = None) -> Array:
+    """Inverse of `quantize_q8`: q (int8) * scale, in `dtype` (defaults to
+    the scale's dtype) — applied on receipt of every q8 wire message."""
     out_dtype = dtype if dtype is not None else scale.dtype
     return q.astype(out_dtype) * scale.astype(out_dtype)

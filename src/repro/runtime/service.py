@@ -29,7 +29,10 @@ exactly that contract:
     counterpart of `DictionaryLearner.expanded()`, paper Sec. IV-C: new
     atoms/agents arrive mid-stream).  Graph-mode coders re-derive their
     doubly-stochastic combiner A (and its ppermute schedule) for the larger
-    axis; stats() and the growth event report the topology + mixing rate.
+    axis; time-varying coders re-derive the whole combiner SEQUENCE, with
+    erdos steps grown neighborhood-preservingly (topology.erdos_renyi_grow);
+    stats() and the growth event report the topology + mixing rate (windowed
+    for sequences) + schedule spec/period.
     Growth is applied by the learner thread at a step boundary; the batcher
     keeps coding against the old (coder, snapshot) pair until the new pair
     is published.  One caveat on
@@ -145,9 +148,16 @@ class DictionaryService:
         self._threads: List[threading.Thread] = []
         self._t_start: Optional[float] = None
         # Gossip-topology identity of the current coder (label + mixing
-        # rate); re-derived on growth since the combiner is rebuilt for the
-        # larger model axis.
+        # rate; for time-varying coders the schedule spec, period, and the
+        # WINDOWED mixing rate); re-derived on growth since the combiner —
+        # or the whole sequence — is rebuilt for the larger model axis.
         self._comb_info: Dict = coder.combiner_info()
+        # Time-varying schedule clock: the combiner-sequence offset the next
+        # engine execution starts from.  Each solve/fit consumes cfg.iters
+        # iterations of the network sequence, so the stream as a whole runs
+        # ONE continuous time-varying network rather than restarting the
+        # schedule at A_0 every micro-batch.  Static coders keep it at 0.
+        self._sched_t = 0
         # Counters: mutated by the batcher/learner threads, read by stats().
         # EVERY mutation and the stats() read happen under self._lock so a
         # caller always sees a consistent snapshot (e.g. never a published
@@ -183,11 +193,41 @@ class DictionaryService:
             [xb, np.zeros((self._pad - b, xb.shape[1]), xb.dtype)], axis=0
         )
 
+    def _advance_schedule(self, coder) -> int:
+        """Claim the next cfg.iters iterations of a time-varying coder's
+        combiner sequence; returns the schedule offset t0 this execution
+        starts from (always 0 for static coders).
+
+        MUST be called while holding `_exec_lock` (both callers do): claims
+        happen at the execution serialization point, so claim order equals
+        execution order and the stream really runs one continuous network.
+        The returned offset is reduced mod the schedule period — only
+        t0 mod P reaches the lax.switch — so the int passed to the engine
+        stays small no matter how long the unbounded Python-int clock runs
+        (an unreduced clock would eventually overflow the int32 cast)."""
+        if not getattr(coder, "is_time_varying", False):
+            return 0
+        with self._lock:
+            t0 = self._sched_t
+            self._sched_t += coder.cfg.iters
+        return t0 % coder.topology_schedule.period
+
+    def _rollback_schedule(self, coder) -> None:
+        """Return a claimed-but-never-executed window (a fit that raised
+        before running) so the clock reflects only executions that happened.
+        Safe because claims only occur under `_exec_lock`, which the caller
+        still holds — no concurrent claim can have built on top of ours."""
+        if not getattr(coder, "is_time_varying", False):
+            return
+        with self._lock:
+            self._sched_t -= coder.cfg.iters
+
     def _solve_padded(self, coder, snap, xb: np.ndarray):
         """Code a real batch of b rows against `snap`."""
         b = xb.shape[0]
         with self._exec_lock:
-            nu, y = coder.solve(snap, jnp.asarray(self._pad_rows(xb)))
+            t0 = self._advance_schedule(coder)
+            nu, y = coder.solve(snap, jnp.asarray(self._pad_rows(xb)), t0)
             nu, y = np.asarray(nu), np.asarray(y)
         return nu[:b], y[:b]
 
@@ -288,6 +328,11 @@ class DictionaryService:
         return np.asarray(jax.device_get(snap))
 
     def stats(self) -> Dict:
+        """One consistent snapshot of the service counters: throughput,
+        latency percentiles, learner progress, growth events, and the gossip
+        identity (topology label, mixing rate — windowed for time-varying
+        schedules — plus schedule spec/period and the active-schedule
+        index the next engine execution starts from)."""
         elapsed = (time.perf_counter() - self._t_start) if self._t_start else 0.0
         with self._lock:  # one consistent snapshot of every counter
             lat = np.asarray(self._latencies, np.float64)
@@ -302,6 +347,14 @@ class DictionaryService:
                 "grow_events": [dict(ev) for ev in self.grow_events],
                 "topology": self._comb_info["topology"],
                 "mixing_rate": self._comb_info["mixing_rate"],
+                # Time-varying schedule identity: the spec (None when
+                # static), its period, and the index of the combiner the
+                # NEXT engine execution starts from.
+                "schedule": self._comb_info.get("schedule"),
+                "schedule_period": self._comb_info.get("schedule_period", 1),
+                "active_schedule": (
+                    self._sched_t % self._comb_info.get("schedule_period", 1)
+                ),
                 "elapsed_s": elapsed,
                 "samples_per_s": (self.coded / elapsed) if elapsed > 0 else 0.0,
             }
@@ -398,8 +451,15 @@ class DictionaryService:
             mu_w_eff = self.cfg.mu_w * (xb.shape[0] / b)
             try:
                 with self._exec_lock:
-                    live2 = coder.fit_batch(live, jnp.asarray(xb), mu_w_eff)
-                    jax.block_until_ready(live2)
+                    t0 = self._advance_schedule(coder)
+                    try:
+                        live2 = coder.fit_batch(live, jnp.asarray(xb), mu_w_eff, t0)
+                        jax.block_until_ready(live2)
+                    except Exception:
+                        # the claimed window never ran: hand it back so the
+                        # schedule clock only counts real executions
+                        self._rollback_schedule(coder)
+                        raise
             except Exception as e:
                 # A failed fit step must never take down serving, but it
                 # must not be invisible either: count it and keep the first
@@ -451,6 +511,8 @@ class DictionaryService:
                     "model_new": dist.axis_sizes(new_coder.mesh)[new_coder.cfg.model_axis],
                     "topology": new_info["topology"],
                     "mixing_rate": new_info["mixing_rate"],
+                    "schedule": new_info.get("schedule"),
+                    "schedule_period": new_info.get("schedule_period", 1),
                 }
                 self.grow_events.append(info)
             _resolve(fut, info)

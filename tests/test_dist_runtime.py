@@ -161,6 +161,25 @@ def test_torus_schedule_reconstructs_and_uses_four_links():
         assert sched.messages_per_iter <= dist.graph_schedule(A).messages_per_iter
 
 
+def test_graph_schedule_sequence_compiles_each_step():
+    """The time-varying compiler: one GraphSchedule per combiner, each
+    reconstructing its A exactly, with torus steps routed through the
+    4-link torus_schedule."""
+    from repro.core import topology as topo
+
+    sched = topo.make_topology_schedule("alternating:ring_metropolis,torus", 8)
+    scheds = dist.graph_schedule_sequence(sched.combiners, sched.kinds)
+    assert len(scheds) == sched.period
+    for s, A in zip(scheds, sched.combiners):
+        np.testing.assert_allclose(s.reconstruct(), A, atol=1e-12)
+    # the torus step got the ICI schedule, not the flat-offset decomposition
+    assert scheds[1].messages_per_iter <= 4
+    # without kinds every step takes the generic decomposition (still exact)
+    generic = dist.graph_schedule_sequence(sched.combiners)
+    for s, A in zip(generic, sched.combiners):
+        np.testing.assert_allclose(s.reconstruct(), A, atol=1e-12)
+
+
 def test_graph_schedule_rejects_non_doubly_stochastic():
     bad = np.array([[0.9, 0.2], [0.1, 0.8]])
     with pytest.raises(ValueError):
@@ -213,6 +232,58 @@ def test_graph_combine_matches_dense_combiner_on_mesh():
         err = np.max(np.abs(outq - ref))
         print("q8 err", err)
         assert err < np.max(np.abs(x)) / 127.0 + 1e-6, err
+        print("OK")
+    """
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        env=subprocess_env(8), cwd=str(REPO),
+        capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-4000:]}"
+    assert "OK" in proc.stdout
+
+
+@pytest.mark.slow
+def test_graph_combine_switch_selects_At_on_mesh():
+    """graph_combine_switch under a traced index t must equal the dense
+    contraction A_{t mod P}.T @ psi for every t in one period and beyond
+    (the lax.switch selection the graph_tv scan relies on), including the
+    q8 wire variant."""
+    code = """
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.core import topology as topo
+        from repro.runtime import dist
+
+        mesh = dist.debug_mesh(model=8, data=1)
+        x = np.random.default_rng(0).standard_normal((8, 4, 16)).astype(np.float32)
+
+        tsched = topo.make_topology_schedule("erdos_resampled", 8, period=3, seed=4)
+        scheds = dist.graph_schedule_sequence(tsched.combiners, tsched.kinds)
+
+        f = jax.jit(dist.shard_map(
+            lambda v, t: dist.graph_combine_switch(v, "model", scheds, t),
+            mesh=mesh, in_specs=(P("model"), P()), out_specs=P("model"),
+            check_vma=False))
+        for t in range(5):  # past one period: wraps to A_{t mod 3}
+            out = np.asarray(f(jnp.asarray(x), jnp.asarray(t, jnp.int32)))
+            ref = np.tensordot(tsched.at(t).T.astype(np.float32), x, axes=1)
+            err = np.max(np.abs(out - ref))
+            print("t", t, "err", err)
+            assert err < 1e-6, (t, err)
+
+        def body(v, t):
+            q, s = dist.quantize_q8(v[0])
+            return dist.graph_combine_quantized_switch(
+                v[0], q, s, "model", scheds, t)[None]
+        fq = jax.jit(dist.shard_map(body, mesh=mesh, in_specs=(P("model"), P()),
+                                    out_specs=P("model"), check_vma=False))
+        for t in (0, 1, 2):
+            outq = np.asarray(fq(jnp.asarray(x), jnp.asarray(t, jnp.int32)))
+            ref = np.tensordot(tsched.at(t).T.astype(np.float32), x, axes=1)
+            err = np.max(np.abs(outq - ref))
+            print("q8 t", t, "err", err)
+            assert err < np.max(np.abs(x)) / 127.0 + 1e-6, (t, err)
         print("OK")
     """
     proc = subprocess.run(

@@ -86,6 +86,67 @@ def test_service_streams_learns_and_grows():
 
 
 @pytest.mark.slow
+def test_service_time_varying_schedule_clock_and_growth():
+    """A graph_tv coder behind the service: the schedule clock advances with
+    every engine execution (the stream runs ONE continuous time-varying
+    network, not a restart at A_0 per micro-batch), stats carry the schedule
+    spec / period / windowed mixing rate / active index, and growth
+    re-derives the SEQUENCE for the larger axis."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.conjugates import make_task
+        from repro.core.dictionary import init_dictionary
+        from repro.core.distributed import DistConfig, DistributedSparseCoder
+        from repro.data.synthetic import sparse_stream
+        from repro.runtime import dist
+        from repro.runtime.service import DictionaryService, ServiceConfig
+
+        res, reg = make_task("sparse_svd", gamma=0.25, delta=0.05)
+        mesh = dist.make_mesh((1, 2), (dist.DATA_AXIS, dist.MODEL_AXIS))
+        M, K0 = 16, 12
+        W0 = init_dictionary(jax.random.PRNGKey(0), M, K0)
+        ITERS = 25  # odd vs period 2: the active index actually alternates
+        coder = DistributedSparseCoder(
+            mesh, res, reg,
+            DistConfig(mode="graph_tv", iters=ITERS,
+                       topology_schedule="alternating:ring_metropolis,torus",
+                       topology_seed=5))
+        X = sparse_stream(40, m=M, k_true=K0, seed=3)
+
+        svc = DictionaryService(coder, W0, ServiceConfig(micro_batch=8, mu_w=0.1))
+        with svc:
+            pre = [f.result(timeout=300) for f in [svc.submit(x) for x in X[:24]]]
+            info = svc.grow(2, jax.random.PRNGKey(4)).result(timeout=300)
+            post = [f.result(timeout=300) for f in [svc.submit(x) for x in X[24:]]]
+        stats = svc.stats()  # after stop(): workers joined, counters final
+
+        assert len(pre) == 24 and len(post) == 16
+        assert all(np.isfinite(nu).all() for nu, _ in pre + post)
+        # schedule identity in stats: spec, period, windowed mixing rate
+        assert stats["topology"] == "tv:alternating:ring_metropolis,torus"
+        assert stats["schedule"] == "alternating:ring_metropolis,torus"
+        assert stats["schedule_period"] == 2
+        assert 0.0 < stats["mixing_rate"] < 1.0
+        # the schedule clock advanced in whole solves/fits: every EXECUTED
+        # engine program consumed exactly ITERS steps of the network
+        # sequence (>= 5 coding micro-batches happened, plus every
+        # successful fit; failed fits roll their claimed window back), and
+        # the reported active index is where the clock stands now.
+        assert svc._sched_t % ITERS == 0, svc._sched_t
+        assert svc._sched_t >= ITERS * (5 + stats["fit_steps"]), \
+            (svc._sched_t, stats["fit_steps"])
+        assert stats["active_schedule"] == svc._sched_t % 2
+        # growth re-derived the sequence at the larger axis
+        assert info["model_new"] == 4
+        assert info["schedule"] == "alternating:ring_metropolis,torus"
+        assert info["schedule_period"] == 2
+        assert 0.0 < info["mixing_rate"] < 1.0
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
 def test_snapshot_double_buffer_isolation():
     """fit_batch on the live copy must never mutate a published snapshot:
     readers coding against the snapshot see identical results before and

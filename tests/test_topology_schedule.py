@@ -1,0 +1,194 @@
+"""Time-varying combiner schedules (core/topology.TopologySchedule):
+per-step validation, seeded determinism (the contract the time-varying
+engine depends on: same topology_seed => identical network sequence, also
+across grown() restarts), and the grow-preserving erdos sampler."""
+
+import numpy as np
+import pytest
+
+from repro.core import topology as topo
+
+
+# ---------------------------------------------------------------------------
+# construction + per-step validation
+# ---------------------------------------------------------------------------
+
+
+def test_alternating_schedule_kinds_and_period():
+    s = topo.make_topology_schedule("alternating:ring_metropolis,torus", 8)
+    assert s.period == 2
+    assert s.kinds == ("ring_metropolis", "torus")
+    for a in s.combiners:
+        assert topo.is_doubly_stochastic(a)
+    # periodic indexing: at(t) = combiners[t % period]
+    np.testing.assert_array_equal(s.at(0), s.combiners[0])
+    np.testing.assert_array_equal(s.at(3), s.combiners[1])
+    np.testing.assert_array_equal(s.at(4), s.combiners[0])
+
+
+def test_alternating_default_kinds():
+    s = topo.make_topology_schedule("alternating", 6)
+    assert s.kinds == ("ring_metropolis", "torus")
+
+
+def test_erdos_resampled_every_step_doubly_stochastic_and_distinct():
+    s = topo.make_topology_schedule("erdos_resampled", 10, period=5, seed=3)
+    assert s.period == 5
+    for t, a in enumerate(s.combiners):
+        assert topo.is_doubly_stochastic(a), t
+        assert topo.is_connected(s.adjacencies[t])
+    # resampling actually produces different graphs across the period
+    assert len({a.tobytes() for a in s.adjacencies}) > 1
+
+
+def test_fixed_schedule_degenerates_to_static():
+    s = topo.make_topology_schedule("fixed:ring", 6, beta=0.25)
+    assert s.period == 1
+    np.testing.assert_allclose(s.combiners[0], topo.ring_weights(6, 0.25))
+    # windowed mixing rate of a period-1 schedule IS the static mixing rate
+    assert abs(s.windowed_mixing_rate() - topo.mixing_rate(s.combiners[0])) < 1e-12
+
+
+def test_fixed_erdos_matches_static_graph_path():
+    """'fixed:erdos' is the degenerate wrapper of the static mode='graph'
+    erdos combiner: for the same (n, p, seed) it must sample the IDENTICAL
+    graph (regression: a derived seed here silently changed the network)."""
+    s = topo.make_topology_schedule("fixed:erdos", 9, p=0.4, seed=7)
+    np.testing.assert_array_equal(
+        s.adjacencies[0], topo.erdos_renyi_adjacency(9, p=0.4, seed=7)
+    )
+    np.testing.assert_allclose(
+        s.combiners[0], topo.make_topology("erdos", 9, p=0.4, seed=7)
+    )
+
+
+def test_fixed_schedule_from_explicit_matrix():
+    A = topo.ring_weights(5)
+    s = topo.fixed_schedule(A)
+    assert s.period == 1 and s.n == 5
+    np.testing.assert_array_equal(s.at(7), A)
+    # an explicit matrix has no generator, so growth is ALWAYS a designed
+    # error — even with a kind label that happens to name a generator (the
+    # label cannot prove A came from it, e.g. a non-default beta ring);
+    # growable static schedules go through make_topology_schedule.
+    for sched in (s, topo.fixed_schedule(topo.ring_weights(5, 0.25), kind="ring"),
+                  topo.fixed_schedule(A, kind="erdos")):
+        with pytest.raises(ValueError, match="explicit combiner"):
+            sched.grown(8)
+    g = topo.make_topology_schedule("fixed:ring", 5, beta=0.25).grown(8)
+    np.testing.assert_allclose(g.combiners[0], topo.ring_weights(8, 0.25))
+
+
+def test_static_and_fixed_erdos_growth_share_seed_stream():
+    """The static mode='graph' erdos growth (distributed.py) and the
+    'fixed:erdos' schedule's grown() must draw from the SAME seed stream
+    (seed, step=0, n_new), so the degenerate-wrapper equivalence survives
+    elastic growth (regression: the two paths used different streams)."""
+    adj = topo.erdos_renyi_adjacency(6, p=0.5, seed=3)
+    g = topo.make_topology_schedule("fixed:erdos", 6, p=0.5, seed=3).grown(9)
+    np.testing.assert_array_equal(
+        g.adjacencies[0],
+        topo.erdos_renyi_grow(adj, 9, p=0.5, seed=topo.derive_seed(3, 0, 9)),
+    )
+
+
+def test_schedule_rejects_bad_spec_and_bad_combiner():
+    with pytest.raises(KeyError):
+        topo.make_topology_schedule("hypercube_sweep", 8)
+    with pytest.raises(KeyError):
+        topo.make_topology_schedule("alternating:ring,moebius", 8)
+    with pytest.raises(KeyError):
+        topo.make_topology_schedule("fixed:moebius", 8)
+    with pytest.raises(KeyError):
+        # the period is the `period` ARGUMENT, never spec syntax — silently
+        # dropping a ':8' tail would run a different sequence than asked
+        topo.make_topology_schedule("erdos_resampled:8", 8)
+    # construction validates EVERY step doubly stochastic
+    bad = np.array([[0.9, 0.2], [0.1, 0.8]])
+    with pytest.raises(ValueError):
+        topo.TopologySchedule(
+            spec="fixed:bad", n=2, kinds=("bad",), combiners=(bad,),
+            adjacencies=(None,),
+        )
+    with pytest.raises(ValueError):  # shape mismatch
+        topo.TopologySchedule(
+            spec="fixed:ring", n=3, kinds=("ring",),
+            combiners=(topo.ring_weights(4),), adjacencies=(None,),
+        )
+
+
+def test_windowed_mixing_rate_window_product_is_doubly_stochastic():
+    s = topo.make_topology_schedule("alternating:ring_metropolis,torus", 8)
+    w = s.window_combiner()
+    assert topo.is_doubly_stochastic(w)
+    # the window of two combiners contracts at least as fast per step as the
+    # slower of the two (submultiplicativity of sigma_2 for ds matrices)
+    slow = max(topo.mixing_rate(a) for a in s.combiners)
+    assert s.windowed_mixing_rate() <= slow + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# determinism: same seed => identical sequence (constructions AND restarts)
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_determinism_across_constructions():
+    a = topo.make_topology_schedule("erdos_resampled", 9, period=4, seed=11)
+    b = topo.make_topology_schedule("erdos_resampled", 9, period=4, seed=11)
+    for x, y in zip(a.combiners, b.combiners):
+        np.testing.assert_array_equal(x, y)
+    c = topo.make_topology_schedule("erdos_resampled", 9, period=4, seed=12)
+    assert any(
+        x.tobytes() != y.tobytes() for x, y in zip(a.adjacencies, c.adjacencies)
+    )
+
+
+def test_grown_schedule_determinism_across_restarts():
+    """grown() must be a pure function of (seed, step, n_new): re-deriving
+    the grown sequence from a fresh construction gives the identical result
+    (the elastic-restart determinism the engine tests rely on)."""
+    g1 = topo.make_topology_schedule("erdos_resampled", 8, period=3, seed=5).grown(11)
+    g2 = topo.make_topology_schedule("erdos_resampled", 8, period=3, seed=5).grown(11)
+    for x, y in zip(g1.combiners, g2.combiners):
+        np.testing.assert_array_equal(x, y)
+    for t, a in enumerate(g1.combiners):
+        assert topo.is_doubly_stochastic(a), t
+
+
+def test_derive_seed_is_stable_and_stream_separated():
+    assert topo.derive_seed(3, 1) == topo.derive_seed(3, 1)
+    assert topo.derive_seed(3, 1) != topo.derive_seed(3, 2)
+    assert topo.derive_seed(3, 1) != topo.derive_seed(4, 1)
+
+
+# ---------------------------------------------------------------------------
+# grow-preserving erdos sampler (topology-aware elastic growth)
+# ---------------------------------------------------------------------------
+
+
+def test_erdos_renyi_grow_preserves_existing_neighborhoods():
+    old = topo.erdos_renyi_adjacency(8, p=0.4, seed=2)
+    new = topo.erdos_renyi_grow(old, 12, p=0.4, seed=9)
+    # the old agents' subgraph is untouched — no rewiring mid-stream
+    np.testing.assert_array_equal(new[:8, :8], old)
+    assert topo.is_connected(new)
+    assert topo.is_doubly_stochastic(topo.metropolis_weights(new))
+    # degenerate no-growth case
+    np.testing.assert_array_equal(topo.erdos_renyi_grow(old, 8), old)
+    with pytest.raises(ValueError):
+        topo.erdos_renyi_grow(old, 4)
+
+
+def test_grown_schedule_preserves_erdos_neighborhoods_per_step():
+    s = topo.make_topology_schedule("erdos_resampled", 6, period=3, seed=7)
+    g = s.grown(9)
+    assert g.n == 9 and g.period == 3 and g.kinds == s.kinds
+    for old, new in zip(s.adjacencies, g.adjacencies):
+        np.testing.assert_array_equal(new[:6, :6], old)
+
+
+def test_grown_alternating_rederives_structured_kinds():
+    s = topo.make_topology_schedule("alternating:ring_metropolis,torus", 6)
+    g = s.grown(8)
+    np.testing.assert_allclose(g.combiners[0], topo.make_topology("ring_metropolis", 8))
+    np.testing.assert_allclose(g.combiners[1], topo.make_topology("torus", 8))

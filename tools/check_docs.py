@@ -1,0 +1,148 @@
+#!/usr/bin/env python
+"""Docs health check (the CI `docs-check` lane).
+
+Two gates, zero third-party dependencies (pure stdlib, AST-based — it never
+imports the package, so it runs without jax installed):
+
+1. **Link check** — every relative markdown link in `README.md` and
+   `docs/*.md` must resolve to a file or directory in the repo (http(s)/
+   mailto/pure-anchor links are skipped; `path#anchor` checks the path).
+2. **Docstring check** — every exported symbol of the public seam modules
+   (`runtime/dist.py`, `core/distributed.py`, `core/topology.py`) must have
+   a docstring: top-level functions/classes (per `__all__` when present,
+   else every public name defined in the module) and the public methods of
+   public classes.
+
+Exit code 0 = clean; 1 = problems (each printed as `file: problem`).
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+DOC_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+
+SEAM_MODULES = [
+    REPO / "src" / "repro" / "runtime" / "dist.py",
+    REPO / "src" / "repro" / "core" / "distributed.py",
+    REPO / "src" / "repro" / "core" / "topology.py",
+]
+
+# [text](target) — excluding images' leading ! is unnecessary (image paths
+# must resolve too); stop at the first unescaped closing paren.
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def check_links() -> list:
+    problems = []
+    for md in DOC_FILES:
+        if not md.exists():
+            problems.append(f"{md.relative_to(REPO)}: file missing")
+            continue
+        text = md.read_text()
+        # strip fenced code blocks: command examples aren't links
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for m in _LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                problems.append(
+                    f"{md.relative_to(REPO)}: broken relative link "
+                    f"'{target}' (-> {resolved})"
+                )
+    return problems
+
+
+def _exported_names(tree: ast.Module) -> list:
+    """Names in __all__ if the module defines one, else every public
+    top-level def/class name."""
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == "__all__":
+                    return [
+                        e.value
+                        for e in node.value.elts  # type: ignore[attr-defined]
+                        if isinstance(e, ast.Constant) and isinstance(e.value, str)
+                    ]
+    return [
+        n.name
+        for n in tree.body
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef))
+        and not n.name.startswith("_")
+    ]
+
+
+def check_docstrings() -> list:
+    problems = []
+    for mod in SEAM_MODULES:
+        rel = mod.relative_to(REPO)
+        tree = ast.parse(mod.read_text())
+        exported = set(_exported_names(tree))
+        defined = {
+            n.name: n
+            for n in tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef))
+        }
+        if not ast.get_docstring(tree):
+            problems.append(f"{rel}: module docstring missing")
+        # __all__ entries that are re-exports (imported names) have no local
+        # definition — their docstring lives in the defining module.
+        for name in sorted(exported & set(defined)):
+            node = defined[name]
+            if not ast.get_docstring(node):
+                problems.append(f"{rel}: exported symbol '{name}' has no docstring")
+        # public top-level defs/classes outside __all__ are still part of
+        # the seam surface for readers — hold them to the same bar.
+        for name, node in sorted(defined.items()):
+            if name.startswith("_") or name in exported:
+                continue
+            if not ast.get_docstring(node):
+                problems.append(f"{rel}: public symbol '{name}' has no docstring")
+        # public methods of public classes
+        for cname, cnode in sorted(defined.items()):
+            if not isinstance(cnode, ast.ClassDef) or cname.startswith("_"):
+                continue
+            for meth in cnode.body:
+                if not isinstance(meth, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                if meth.name.startswith("_") and meth.name != "__init__":
+                    continue
+                if meth.name == "__init__" and not meth.body:
+                    continue
+                if not ast.get_docstring(meth):
+                    # __init__ may legitimately be documented by the class
+                    if meth.name == "__init__" and ast.get_docstring(cnode):
+                        continue
+                    problems.append(
+                        f"{rel}: public method '{cname}.{meth.name}' has no docstring"
+                    )
+    return problems
+
+
+def main() -> int:
+    problems = check_links() + check_docstrings()
+    for p in problems:
+        print(f"DOCS-CHECK FAIL  {p}")
+    if problems:
+        print(f"\n{len(problems)} problem(s).")
+        return 1
+    n_links = len(DOC_FILES)
+    print(f"docs-check OK: {n_links} markdown files, "
+          f"{len(SEAM_MODULES)} seam modules clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

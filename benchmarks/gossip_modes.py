@@ -1,23 +1,28 @@
 """Beyond-paper engineering table: convergence-vs-communication of the
 production gossip schedules (exact / exact_fista / ring / ring_q8 /
-ring_async plus graph-topology and time-varying graph_tv rows) on a forced
-multi-device host mesh.
+ring_async plus graph-topology, time-varying graph_tv, and hierarchical
+two-pod hier rows) on a forced multi-device host mesh.
 
 Reports, per mode (and per graph topology / combiner schedule): iterations
 to reach the target SNR, the combiner's mixing rate (second-largest
 singular value of A — the gossip contraction factor, so
 convergence-vs-lambda_2 is measurable across topologies; time-varying rows
-report the WINDOWED rate sigma_2(window product)^(1/period)), bytes-on-wire
-per iteration per device (analytic; averaged over the period for
-time-varying schedules), and total wire bytes to target — the quantity the
-int8 error-feedback and FISTA modes exist to cut.  The static-vs-
-time-varying pairs (graph:ring_metropolis / graph:torus vs graph_tv:*) make
-the cost of a changing network directly readable.
+report the WINDOWED rate sigma_2(window product)^(1/period), hierarchical
+rows the EFFECTIVE two-level rate), bytes-on-wire per iteration per device
+(analytic; averaged over the period for time-varying schedules), and total
+wire bytes to target — the quantity the int8 error-feedback and FISTA modes
+exist to cut.  The static-vs-time-varying pairs (graph:ring_metropolis /
+graph:torus vs graph_tv:*) make the cost of a changing network directly
+readable; the hier rows additionally split the wire bytes PER AXIS (intra-
+pod model-axis vs inter-pod pod-axis), since the inter-pod hop is the
+bandwidth-constrained link the q8 format and pod_gossip_every stride exist
+to relieve.
 
 The output schema of the saved JSON is documented in docs/BENCHMARKS.md.
 
 Reduced-size mode: set BENCH_SMOKE=1 (the CI benchmark smoke job does) for
-a smaller problem, shorter sweep, and a lower SNR target.
+a smaller problem, shorter sweep, a lower SNR target, and a single
+hierarchical row on the (2, 1, 2) pod mesh.
 """
 
 from __future__ import annotations
@@ -40,6 +45,11 @@ P = json.loads(sys.argv[1])
 
 res, reg = make_task("nmf", gamma=0.05, delta=0.1)
 mesh = make_debug_mesh(model=8, data=1)
+# Hierarchical rows run on a multi-pod mesh: (pods, 1, model) with the same
+# total agent count as the flat rows in full mode, (2, 1, 2) in smoke mode
+# (the path the CI bench-smoke lane exercises).
+hier_pods, hier_model = P["hier_mesh"]
+hier_mesh = make_debug_mesh(model=hier_model, data=1, pods=hier_pods)
 M, K, B = P["M"], P["K"], P["B"]
 W = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (M, K)))
 W = W / jnp.linalg.norm(W, axis=0)
@@ -49,8 +59,10 @@ nu_ref = fista_infer(res, reg, W, x, iters=P["ref_iters"])
 # Row name -> DistConfig.  graph:* rows sweep the paper's Sec.-IV-B regime
 # (arbitrary doubly-stochastic combiners); graph_tv:* rows sweep the
 # time-varying regime of Daneshmand et al. (the combiner changes every
-# iteration) so static-vs-time-varying convergence can be read against the
-# (windowed) mixing rate.
+# iteration); hier* rows sweep the two-level (pod x model) Kronecker
+# composition — dense torus intra-pod, sparse ring inter-pod — so static,
+# time-varying, and hierarchical convergence can all be read against the
+# (windowed / effective) mixing rate.
 ROWS = {mode: DistConfig(mode=mode, iters=1) for mode in
         ["exact", "exact_fista", "ring", "ring_q8", "ring_async"]}
 for t in ["ring_metropolis", "torus", "erdos"]:
@@ -61,22 +73,38 @@ ROWS["graph_tv:alternating"] = DistConfig(
 ROWS["graph_tv:erdos_resampled"] = DistConfig(
     mode="graph_tv", iters=1, topology_schedule="erdos_resampled",
     schedule_period=4)
+# hier: the pure Kronecker composition (pod hop every iteration);
+# hier_q8: the full bandwidth-saving configuration — int8 wire format on
+# the inter-pod hop AND a pod_gossip_every=2 sparse stride.
+ROWS["hier:torus+ring_metropolis"] = DistConfig(
+    mode="hier", iters=1, topology="torus", pod_topology="ring_metropolis")
+if not P["smoke"]:
+    ROWS["hier_q8"] = DistConfig(
+        mode="hier_q8", iters=1, topology="torus",
+        pod_topology="ring_metropolis", pod_gossip_every=2)
 
 out = {}
 for name, base_cfg in ROWS.items():
+    hier = base_cfg.mode in ("hier", "hier_q8")
+    row_mesh = hier_mesh if hier else mesh
     mix = None
     reached = None
     per_iter = None
+    per_model = None
+    per_pod = None
     period = 1
+    pod_every = 1
     for iters in P["sweep"]:
         cfg = dataclasses.replace(base_cfg, iters=iters)
-        coder = DistributedSparseCoder(mesh, res, reg, cfg)
+        coder = DistributedSparseCoder(row_mesh, res, reg, cfg)
         if mix is None:
             # static rows: sigma_2(A); time-varying rows: the windowed rate
-            # sigma_2(window product)^(1/period)
+            # sigma_2(window product)^(1/period); hier rows: the effective
+            # two-level rate
             info = coder.combiner_info()
             mix = info["mixing_rate"]
             period = info.get("schedule_period", 1)
+            pod_every = info.get("pod_gossip_every", 1)
             b_loc = B  # data=1 here
             if cfg.mode in ("exact", "exact_fista"):
                 per_iter = 2 * b_loc * M * 4        # one psum (all-reduce) of (B, M) fp32
@@ -84,6 +112,18 @@ for name, base_cfg in ROWS.items():
                 per_iter = 2 * b_loc * (M * 1 + 4)  # two ppermutes of int8 + row scale
             elif cfg.mode in ("ring", "ring_async"):
                 per_iter = 2 * b_loc * M * 4        # two ppermutes of fp32
+            elif hier:
+                # per-axis split: fp32 intra-pod messages every iteration;
+                # inter-pod messages (fp32 for hier, int8+scales for
+                # hier_q8) only every pod_gossip_every-th iteration.
+                hs = coder.hier_gossip_schedule
+                per_model = hs.model_messages_per_iter * b_loc * M * 4
+                pod_payload = (
+                    b_loc * (M * 1 + 4) if cfg.mode == "hier_q8"
+                    else b_loc * M * 4
+                )
+                per_pod = hs.pod_messages_per_iter * pod_payload
+                per_iter = per_model + per_pod
             else:  # graph families: one fp32 message per schedule round,
                    # averaged over the period for time-varying sequences
                 scheds = coder.gossip_schedules
@@ -98,7 +138,10 @@ for name, base_cfg in ROWS.items():
         "iters_to_target": reached,
         "mixing_rate": mix,
         "schedule_period": period,
+        "pod_gossip_every": pod_every,
         "wire_bytes_per_iter_per_dev": per_iter,
+        "wire_bytes_per_iter_model_axis": per_model,
+        "wire_bytes_per_iter_pod_axis": per_pod,
         "wire_bytes_to_target": (reached * per_iter) if reached else None,
     }
 print(json.dumps(out))
@@ -110,10 +153,12 @@ def run(smoke: bool | None = None):
         smoke = os.environ.get("BENCH_SMOKE", "0").lower() not in ("", "0", "false")
     params = (
         {"M": 32, "K": 64, "B": 8, "ref_iters": 800, "target_db": 20.0,
-         "sweep": [25, 50, 100, 200, 400, 800, 1600, 3200]}
+         "sweep": [25, 50, 100, 200, 400, 800, 1600, 3200],
+         "hier_mesh": [2, 2], "smoke": True}
         if smoke
         else {"M": 64, "K": 256, "B": 16, "ref_iters": 2000, "target_db": 40.0,
-              "sweep": [25, 50, 100, 200, 400, 800, 1600, 3200, 6400, 12800]}
+              "sweep": [25, 50, 100, 200, 400, 800, 1600, 3200, 6400, 12800],
+              "hier_mesh": [2, 4], "smoke": False}
     )
 
     env = dict(os.environ)
@@ -130,6 +175,13 @@ def run(smoke: bool | None = None):
     for mode, r in out.items():
         emit(f"gossip/{mode}/iters_to_{params['target_db']:.0f}db", r["iters_to_target"])
         emit(f"gossip/{mode}/mixing_rate", f"{r['mixing_rate']:.4f}")
+        if r["wire_bytes_per_iter_pod_axis"] is not None:
+            # hierarchical rows: the per-axis split (the pod axis is the
+            # bandwidth-constrained inter-pod link)
+            emit(f"gossip/{mode}/wire_bytes_per_iter_model_axis",
+                 r["wire_bytes_per_iter_model_axis"])
+            emit(f"gossip/{mode}/wire_bytes_per_iter_pod_axis",
+                 r["wire_bytes_per_iter_pod_axis"])
         if r["wire_bytes_to_target"]:
             emit(f"gossip/{mode}/wire_bytes_to_{params['target_db']:.0f}db",
                  r["wire_bytes_to_target"],

@@ -50,6 +50,25 @@ Modes (gossip schedules):
               stream can keep advancing the network across micro-batches.
   graph_tv_q8 graph_tv over the int8 wire format (one quantization per
               iteration + error feedback, same as ring_q8/graph_q8).
+  hier        HIERARCHICAL (two-level, graph-of-graphs) diffusion for
+              multi-pod meshes: the network of agents is the (pod, model)
+              device grid and the combiner is the Kronecker composition
+              A_pod (x) A_model (core/topology.HierarchicalTopology —
+              DistConfig.topology picks the dense INTRA-POD kind over the
+              model axis, DistConfig.pod_topology the sparse INTER-POD
+              kind over the pod axis).  Each factor compiles to its own
+              ppermute schedule and the two run back-to-back inside one
+              shard_map body (runtime/dist.hier_combine); the dictionary
+              is atom-sharded over BOTH axes (pod-major) and the globally
+              safe adaptive mu is pmax'd over both.  With
+              DistConfig.pod_gossip_every = k > 1 the inter-pod hop fires
+              only every k-th iteration (gated on the traced index via
+              lax.cond — still one compiled program), the standard
+              sparse-communication trick for slow cross-pod links.
+  hier_q8     hier with the int8 wire format on the INTER-POD hop only
+              (the bandwidth-constrained link); intra-pod messages stay
+              full precision.  Error feedback as in ring_q8, updated only
+              on iterations where the pod hop fires.
 
 Every mode returns per-device (nu, y) with nu converged to the same global
 optimum the reference engine (core/inference.py) computes.
@@ -78,7 +97,8 @@ Array = jax.Array
 RING_MODES = ("ring", "ring_q8", "ring_async")
 GRAPH_MODES = ("graph", "graph_q8", "graph_async")
 TV_MODES = ("graph_tv", "graph_tv_q8")
-MODES = ("exact", "exact_fista") + RING_MODES + GRAPH_MODES + TV_MODES
+HIER_MODES = ("hier", "hier_q8")
+MODES = ("exact", "exact_fista") + RING_MODES + GRAPH_MODES + TV_MODES + HIER_MODES
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,12 +130,28 @@ class DistConfig:
                        "fixed:<kind>", "alternating:<k1>,<k2>,...", or
                        "erdos_resampled".  "" / "fixed" degenerate to the
                        static `topology` kind wrapped in a period-1 schedule.
+                       None with a time-varying mode is rejected at
+                       construction (there is no sequence to run).
       schedule_period  period of the "erdos_resampled" spec (number of
                        distinct graphs before the sequence repeats).
-      informed         "all" (every agent sees x) or "one" (only model-rank
-                       0 is informed, the paper's |N_I| = 1 regime).
+      pod_topology     hier modes only: the INTER-POD combiner kind over
+                       the pod axis (any `make_topology` kind; typically a
+                       sparse one — the pod links are the slow long-haul
+                       hop).  REQUIRED for the hier modes: "" is rejected
+                       at construction.  `topology` picks the dense
+                       intra-pod kind, so the two-level combiner is
+                       A_pod(pod_topology) (x) A_model(topology).
+      pod_gossip_every hier modes: fire the inter-pod hop only every k-th
+                       diffusion iteration (1 = every iteration).  The
+                       per-iteration combiner sequence has period k
+                       (A_pod (x) A_model alternating with I (x) A_model),
+                       which is how the reference parity models it.
+      informed         "all" (every agent sees x) or "one" (only agent 0 —
+                       global pod-major rank 0 in the hier modes — is
+                       informed, the paper's |N_I| = 1 regime).
       model_axis       mesh axis name the agents/atom shards live on.
       data_axes        mesh axes the sample batch is sharded over.
+      pod_axis         mesh axis name of the inter-pod hop (hier modes).
       use_kernel       fuse the local hot loop with the Pallas
                        dict_dual_step kernel.
       kernel_interpret Pallas interpret mode: None -> auto-detect (interpret
@@ -134,13 +170,47 @@ class DistConfig:
     # time-varying modes: core/topology.make_topology_schedule spec + period.
     topology_schedule: str = "alternating:ring_metropolis,torus"
     schedule_period: int = 2  # erdos_resampled period
+    # hier modes: inter-pod combiner kind (required) + sparse-gossip stride.
+    pod_topology: str = ""  # e.g. "ring_metropolis"; "" = not configured
+    pod_gossip_every: int = 1  # inter-pod hop every k iterations
     informed: str = "all"  # "all" | "one" (only model-rank 0 sees x)
     model_axis: str = "model"
     data_axes: Tuple[str, ...] = ("data",)
+    pod_axis: str = "pod"  # inter-pod gossip axis (hier modes)
     use_kernel: bool = False  # fuse local hot loop with the Pallas kernel
     # Pallas interpret mode: None -> auto-detect (interpret only where there
     # is no Mosaic lowering, i.e. CPU); True/False force it explicitly.
     kernel_interpret: Optional[bool] = None
+
+    def __post_init__(self):
+        """Construction-time validation of cross-field requirements.
+
+        Misconfigurations that would otherwise only surface deep inside
+        schedule compilation (or, worse, inside a traced shard_map body)
+        fail HERE with an actionable message: a time-varying mode needs a
+        schedule spec, a hierarchical mode needs an inter-pod combiner
+        kind, and the inter-pod gossip stride must be a positive count.
+        """
+        if self.mode in TV_MODES and self.topology_schedule is None:
+            raise ValueError(
+                f"mode={self.mode!r} needs a combiner sequence but "
+                f"topology_schedule is None; pass a "
+                f"make_topology_schedule spec ('fixed:<kind>', "
+                f"'alternating:<k1>,<k2>,...', or 'erdos_resampled') — or "
+                f"'' to degenerate to the static `topology` kind"
+            )
+        if self.mode in HIER_MODES and not self.pod_topology:
+            raise ValueError(
+                f"mode={self.mode!r} composes an inter-pod combiner with "
+                f"the intra-pod one but pod_topology is not set; pass a "
+                f"core/topology.make_topology kind (e.g. "
+                f"pod_topology='ring_metropolis') for the pod axis"
+            )
+        if self.pod_gossip_every < 1:
+            raise ValueError(
+                f"pod_gossip_every must be >= 1 (the inter-pod hop fires "
+                f"every k-th iteration), got {self.pod_gossip_every}"
+            )
 
 
 # ---------------------------------------------------------------------------
@@ -190,20 +260,24 @@ def _local_code_and_back(
     return y, y @ W_loc.T
 
 
-def _safe_mu_local(res: Residual, reg: Regularizer, W_loc: Array, axis: str) -> Array:
+def _safe_mu_local(res: Residual, reg: Regularizer, W_loc: Array, axis) -> Array:
     """Per-shard curvature bound -> globally-safe diffusion step (pmax'd).
 
     Every agent bounds its own local Lipschitz constant L_k <= c_f/N +
-    sigma_max(W_k)^2/delta, then the max is reduced over the model axis so
-    ALL agents step with the one mu that is safe for the worst shard —
-    the distributed equivalent of `safe_diffusion_mu` in core/inference.py
-    (which maxes over blocks).  Without the reduction each device would use
-    a step safe only for its own shard and the gossip iterates can diverge.
+    sigma_max(W_k)^2/delta, then the max is reduced over the gossip
+    axis/axes so ALL agents step with the one mu that is safe for the worst
+    shard — the distributed equivalent of `safe_diffusion_mu` in
+    core/inference.py (which maxes over blocks).  Without the reduction
+    each device would use a step safe only for its own shard and the gossip
+    iterates can diverge.  `axis` is the model axis name, or a (pod, model)
+    tuple for the hierarchical modes whose agents span BOTH axes — the max
+    (and the agent count N in the bound) then reduces over the whole
+    two-level network.
     """
     c_f = res.grad_fstar(jnp.ones((1,), W_loc.dtype))[0]
-    n_model = jax.lax.psum(1, axis)
+    n_agents = jax.lax.psum(1, axis)
     sig2_max = jax.lax.pmax(power_sigma2(W_loc), axis)
-    return 0.9 / (c_f / n_model + sig2_max / reg.delta)
+    return 0.9 / (c_f / n_agents + sig2_max / reg.delta)
 
 
 def _safe_mu_exact(res: Residual, reg: Regularizer, W_loc: Array, axis: str) -> Array:
@@ -235,11 +309,13 @@ class DistributedSparseCoder:
         """Build the coder's combiner state and compile its mesh programs.
 
         `grown_from` is the elastic-growth hook (`grown()` passes the old
-        coder): erdos-backed topologies — the static "erdos" kind and every
-        erdos step of a time-varying schedule — are then GROWN from the old
+        coder): erdos-backed topologies — the static "erdos" kind, every
+        erdos step of a time-varying schedule, and the erdos intra-pod
+        factor of a hierarchical coder — are then GROWN from the old
         adjacency via `topology.erdos_renyi_grow` (existing agents keep
         their neighborhoods; only new-agent edges are sampled) instead of
-        resampled wholesale.
+        resampled wholesale.  Hierarchical coders additionally carry their
+        inter-pod combiner verbatim (growth is model-axis only).
         """
         if cfg.mode not in MODES:
             raise KeyError(f"unknown mode {cfg.mode!r}; options: {MODES}")
@@ -267,6 +343,8 @@ class DistributedSparseCoder:
         self._gsched: Optional[dist.GraphSchedule] = None
         self._tsched: Optional[topo.TopologySchedule] = None
         self._gscheds: Optional[Tuple[dist.GraphSchedule, ...]] = None
+        self._htopo: Optional[topo.HierarchicalTopology] = None
+        self._hsched: Optional[dist.HierSchedule] = None
         n_model = dist.axis_sizes(mesh)[ax]
         if cfg.mode in GRAPH_MODES:
             if cfg.topology == "erdos":
@@ -308,7 +386,43 @@ class DistributedSparseCoder:
             self._gscheds = dist.graph_schedule_sequence(
                 self._tsched.combiners, self._tsched.kinds
             )
-        self._w_spec = P(None, ax)
+        elif cfg.mode in HIER_MODES:
+            sizes = dist.axis_sizes(mesh)
+            if cfg.pod_axis not in sizes:
+                raise ValueError(
+                    f"mode={cfg.mode!r} gossips over a {cfg.pod_axis!r} axis "
+                    f"the mesh does not have (axes: {tuple(mesh.axis_names)});"
+                    f" build a multi-pod mesh, e.g. dist.debug_mesh(model=N, "
+                    f"data=D, pods=P) or dist.production_mesh(multi_pod=True)"
+                )
+            n_pods = sizes[cfg.pod_axis]
+            if grown_from is not None and grown_from._htopo is not None:
+                # growth is model-axis only: the pod combiner is carried
+                # verbatim, the intra-pod one re-derived (erdos grown
+                # neighborhood-preservingly) at the larger size.
+                self._htopo = grown_from._htopo.grown(n_model)
+            else:
+                self._htopo = topo.make_hierarchical_topology(
+                    cfg.pod_topology, cfg.topology, n_pods, n_model,
+                    p=cfg.topology_p, seed=cfg.topology_seed, beta=cfg.beta,
+                    gossip_every=cfg.pod_gossip_every,
+                )
+            self._hsched = dist.hier_schedule(
+                self._htopo.A_pod, self._htopo.A_model,
+                pod_kind=cfg.pod_topology, model_kind=cfg.topology,
+                gossip_every=cfg.pod_gossip_every,
+            )
+        # The agent axes the dictionary (and the per-agent outputs) shard
+        # over: (pod, model) pod-major for the hierarchical modes — device
+        # (i, j) of the pod x model grid IS agent i*N + j of the Kronecker
+        # network — and just (model,) for every flat mode.
+        self._agent_axes: Tuple[str, ...] = (
+            (cfg.pod_axis, ax) if cfg.mode in HIER_MODES else (ax,)
+        )
+        agent_spec = (
+            self._agent_axes if len(self._agent_axes) > 1 else self._agent_axes[0]
+        )
+        self._w_spec = P(None, agent_spec)
         self._x_spec = P(da, None)
         # Every entry takes the schedule offset t0 (a replicated int32
         # scalar) as its last argument: the time-varying modes start their
@@ -322,7 +436,7 @@ class DistributedSparseCoder:
                 self._solve_body,
                 mesh=mesh,
                 in_specs=(self._w_spec, self._x_spec, t_spec),
-                out_specs=(P(da, None), P(da, ax)),
+                out_specs=(P(da, None), P(da, agent_spec)),
                 check_vma=False,
             )
         )
@@ -353,7 +467,7 @@ class DistributedSparseCoder:
                 ),
                 mesh=mesh,
                 in_specs=(self._w_spec, self._x_spec, t_spec),
-                out_specs=(P(ax, *da, None), P(ax, *da, None)),
+                out_specs=(P(agent_spec, *da, None), P(agent_spec, *da, None)),
                 check_vma=False,
             )
         )
@@ -362,7 +476,7 @@ class DistributedSparseCoder:
                 self._mu_body,
                 mesh=mesh,
                 in_specs=(self._w_spec,),
-                out_specs=P(ax),
+                out_specs=P(agent_spec),
                 check_vma=False,
             )
         )
@@ -370,12 +484,20 @@ class DistributedSparseCoder:
     # -- solver body (runs per device) -------------------------------------
 
     def _iter_setup(self, W_loc: Array, x_loc: Array):
-        """Shared per-rank constants: model-axis size, this rank's index,
-        and the informed-agent weighting (theta, |N_I|) of paper Eq. 29."""
+        """Shared per-rank constants: total agent count, this agent's flat
+        rank, and the informed-agent weighting (theta, |N_I|) of paper
+        Eq. 29.  For the hierarchical modes the network spans BOTH the pod
+        and model axes: the count reduces over both and the flat rank is
+        pod-major (pod_rank * N + model_rank), matching the Kronecker
+        combiner's agent ordering."""
         res, reg, cfg = self.res, self.reg, self.cfg
         ax = cfg.model_axis
-        n_model = jax.lax.psum(1, ax)
-        rank = jax.lax.axis_index(ax)
+        n_model = jax.lax.psum(1, self._agent_axes)
+        if cfg.mode in HIER_MODES:
+            nm = dist.axis_sizes(self.mesh)[ax]
+            rank = jax.lax.axis_index(cfg.pod_axis) * nm + jax.lax.axis_index(ax)
+        else:
+            rank = jax.lax.axis_index(ax)
         if cfg.informed == "all":
             theta = jnp.ones((), x_loc.dtype)
             n_inf = jnp.asarray(n_model, x_loc.dtype)
@@ -518,6 +640,47 @@ class DistributedSparseCoder:
                     length=cfg.iters,
                 )
 
+        elif cfg.mode in HIER_MODES:  # two-level (pod x model) gossip
+            mu = self._mu_for(W_loc)
+            hs = self._hsched
+            pod_ax = cfg.pod_axis
+            local_grad = self._local_grad_fn(W_loc, x_loc, theta, n_inf, n_model)
+            t_start = jnp.asarray(t0, jnp.int32)
+
+            if cfg.mode == "hier":
+
+                def step(carry, _):
+                    nu, t = carry
+                    psi = nu - mu * local_grad(nu)
+                    # intra-pod combine over `model`, then the inter-pod hop
+                    # over `pod` (gated on t when pod_gossip_every > 1) —
+                    # together one application of A_pod (x) A_model.
+                    nu = res.project_dual(
+                        dist.hier_combine(psi, ax, pod_ax, hs, t)
+                    )
+                    return (nu, t + 1), None
+
+                (nu, _), _ = jax.lax.scan(
+                    step, (nu0, t_start), None, length=cfg.iters
+                )
+
+            else:  # hier_q8: int8 wire format on the inter-pod hop only
+
+                def step(carry, _):
+                    nu, err, t = carry
+                    psi = nu - mu * local_grad(nu)
+                    # error feedback lives with the pod hop: err only
+                    # updates on iterations where that hop actually fires.
+                    comb, err = dist.hier_combine_quantized(
+                        psi, err, ax, pod_ax, hs, t
+                    )
+                    return (res.project_dual(comb), err, t + 1), None
+
+                (nu, _, _), _ = jax.lax.scan(
+                    step, (nu0, jnp.zeros_like(nu0), t_start), None,
+                    length=cfg.iters,
+                )
+
         else:  # graph family: gossip under the compiled combiner schedule
             mu = self._mu_for(W_loc)
             sched = self._gsched
@@ -593,7 +756,10 @@ class DistributedSparseCoder:
             return jnp.asarray(cfg.mu, W_loc.dtype)
         if cfg.mode in ("exact", "exact_fista"):
             return _safe_mu_exact(res, reg, W_loc, cfg.model_axis)
-        return _safe_mu_local(res, reg, W_loc, cfg.model_axis)
+        # gossip families: pmax over the agent axes — BOTH pod and model
+        # for the hierarchical modes, so every agent of the two-level
+        # network steps with the one globally-safe mu.
+        return _safe_mu_local(res, reg, W_loc, self._agent_axes)
 
     def _mu_body(self, W_loc: Array) -> Array:
         """The step size this rank's solve would use (shape (1,) per rank;
@@ -627,12 +793,12 @@ class DistributedSparseCoder:
 
     def _score_body(self, W_loc: Array, h_loc: Array, t0: Array) -> Array:
         """Per-device novelty scoring (paper Eq. 63-66): dual value of the
-        fit, aggregated exactly with one psum over the model axis."""
+        fit, aggregated exactly with one psum over the agent axes (model,
+        plus pod in the hierarchical modes — the atom blocks span both)."""
         res, reg, cfg = self.res, self.reg, self.cfg
-        ax = cfg.model_axis
         nu, _ = self._solve_body(W_loc, h_loc, t0)
         hstar = reg.hstar(nu @ W_loc)  # (B,)
-        hstar_sum = jax.lax.psum(hstar, ax)
+        hstar_sum = jax.lax.psum(hstar, self._agent_axes)
         val = res.fstar(nu) - jnp.sum(nu * h_loc, axis=-1) + hstar_sum
         return -val  # higher = more novel (dual value of the fit)
 
@@ -642,8 +808,10 @@ class DistributedSparseCoder:
         """Dual inference. W (M, K) atom-sharded; x (B, M) batch-sharded.
         Returns (nu (B, M) — agent-local estimates, y (B, K)).  `t0` is the
         combiner-schedule offset for the time-varying modes (the network at
-        iteration i of this solve is A_{t0+i}); it is traced, so varying it
-        never recompiles.  Static modes ignore it."""
+        iteration i of this solve is A_{t0+i}) and the inter-pod gossip
+        phase for hier modes with pod_gossip_every = k > 1 (the pod hop
+        fires at iterations i with (t0+i) % k == 0); it is traced, so
+        varying it never recompiles.  Static modes ignore it."""
         return self._solve(W, x, jnp.asarray(t0, jnp.int32))
 
     def fit_batch(self, W: Array, x: Array, mu_w: float, t0: int = 0) -> Array:
@@ -677,8 +845,13 @@ class DistributedSparseCoder:
         ring matrix for the ring family, and 11^T/N for the exact modes.
         For the time-varying modes this is the effective ONE-PERIOD window
         product A_0 A_1 ... A_{P-1} (itself doubly stochastic) — the
-        per-step sequence is `combiner_sequence()`.  Used by the ref<->dist
-        parity tests, the gossip benchmarks, and service stats."""
+        per-step sequence is `combiner_sequence()`.  For the hierarchical
+        modes it is the dense Kronecker composition A_pod (x) A_model on
+        the P*N-agent network (the window product over one pod_gossip_every
+        period when that is > 1).  Used by the ref<->dist parity tests, the
+        gossip benchmarks, and service stats."""
+        if self._htopo is not None:
+            return self._htopo.window_combiner()
         if self._tsched is not None:
             return self._tsched.window_combiner()
         if self._A is not None:
@@ -690,8 +863,12 @@ class DistributedSparseCoder:
 
     def combiner_sequence(self) -> Tuple[np.ndarray, ...]:
         """The per-iteration combiner sequence A_0 .. A_{P-1} (period P = 1
-        for every static mode) — the determinism tests compare this across
-        engine constructions and grown() restarts."""
+        for every static mode; P = pod_gossip_every for the hierarchical
+        modes, whose sequence alternates A_pod (x) A_model with
+        I (x) A_model) — the determinism tests compare this across engine
+        constructions and grown() restarts."""
+        if self._htopo is not None:
+            return tuple(np.array(a) for a in self._htopo.sequence())
         if self._tsched is not None:
             return tuple(np.array(a) for a in self._tsched.combiners)
         return (self.combiner(),)
@@ -700,16 +877,32 @@ class DistributedSparseCoder:
         """Topology label + mixing rate for stats/benchmark reporting.
 
         mixing_rate is the gossip contraction factor: the second-largest
-        singular value of A for static modes, and the per-step WINDOWED rate
-        sigma_2(window product)^(1/P) for the time-varying modes.  Also
-        carries `schedule` (the spec, None when static) and
-        `schedule_period` (1 when static)."""
+        singular value of A for static modes, the per-step WINDOWED rate
+        sigma_2(window product)^(1/P) for the time-varying modes, and the
+        EFFECTIVE two-level rate (sigma_2(A_pod (x) A_model), windowed over
+        the pod_gossip_every period when that is > 1) for the hierarchical
+        modes.  Also carries `schedule` (the spec, None when static),
+        `schedule_period` (1 when static; pod_gossip_every for hier), and
+        the hier identity `pod_topology` / `pod_gossip_every` (None / 1 for
+        every flat mode)."""
+        if self.cfg.mode in HIER_MODES:
+            return {
+                # label reads intra+inter: hier:<model kind>+<pod kind>
+                "topology": f"hier:{self.cfg.topology}+{self.cfg.pod_topology}",
+                "mixing_rate": self._htopo.effective_mixing_rate(),
+                "schedule": None,
+                "schedule_period": self._htopo.period,
+                "pod_topology": self.cfg.pod_topology,
+                "pod_gossip_every": self.cfg.pod_gossip_every,
+            }
         if self.cfg.mode in TV_MODES:
             return {
                 "topology": f"tv:{self._tsched.spec}",
                 "mixing_rate": self._tsched.windowed_mixing_rate(),
                 "schedule": self._tsched.spec,
                 "schedule_period": self._tsched.period,
+                "pod_topology": None,
+                "pod_gossip_every": 1,
             }
         if self.cfg.mode in GRAPH_MODES:
             label = self.cfg.topology
@@ -722,6 +915,8 @@ class DistributedSparseCoder:
             "mixing_rate": topo.mixing_rate(self.combiner()),
             "schedule": None,
             "schedule_period": 1,
+            "pod_topology": None,
+            "pod_gossip_every": 1,
         }
 
     @property
@@ -748,10 +943,40 @@ class DistributedSparseCoder:
         return self._tsched
 
     @property
+    def hier_topology(self) -> Optional[topo.HierarchicalTopology]:
+        """The validated two-level combiner driving a hierarchical coder
+        (None for every flat mode)."""
+        return self._htopo
+
+    @property
+    def hier_gossip_schedule(self) -> Optional[dist.HierSchedule]:
+        """The compiled two-level ppermute plan (hier modes only): the
+        intra-pod and inter-pod `GraphSchedule`s plus the gossip stride —
+        benchmarks read per-axis message counts off it."""
+        return self._hsched
+
+    @property
+    def schedule_period(self) -> int:
+        """Length of the per-iteration combiner sequence before it repeats:
+        the `TopologySchedule` period for the time-varying modes,
+        pod_gossip_every for the hierarchical modes, 1 for every static
+        mode.  The service's schedule clock reduces its offset modulo
+        this."""
+        if self._tsched is not None:
+            return self._tsched.period
+        if self._htopo is not None:
+            return self._htopo.period
+        return 1
+
+    @property
     def is_time_varying(self) -> bool:
         """Whether this coder's combiner changes per iteration (the service
-        threads a persistent schedule offset t0 through solve/fit iff so)."""
-        return self.cfg.mode in TV_MODES
+        threads a persistent schedule offset t0 through solve/fit iff so).
+        True for the graph_tv modes, and for the hier modes whenever
+        pod_gossip_every > 1 (the inter-pod hop phase then matters)."""
+        return self.cfg.mode in TV_MODES or (
+            self.cfg.mode in HIER_MODES and self.cfg.pod_gossip_every > 1
+        )
 
     def shard(self, W: Array, x: Array) -> Tuple[Array, Array]:
         """Place global arrays with the engine's shardings (for benchmarks)."""
@@ -785,12 +1010,20 @@ class DistributedSparseCoder:
         Re-sharding goes through the runtime/dist seam: the new mesh comes
         from `dist.make_mesh` and placement from the new coder's sharding.
 
-        Growth is topology-aware: erdos combiners (static, and every erdos
-        step of a time-varying schedule) are grown from the current
-        adjacency with `topology.erdos_renyi_grow` — existing agents keep
-        their neighborhoods, only new-agent edges are sampled — while
-        structured kinds re-derive at the larger size.  Time-varying coders
-        re-derive the whole SEQUENCE (deterministically in topology_seed).
+        Growth is topology-aware: erdos combiners (static, every erdos step
+        of a time-varying schedule, and the erdos intra-pod factor of a
+        hierarchical coder) are grown from the current adjacency with
+        `topology.erdos_renyi_grow` — existing agents keep their
+        neighborhoods, only new-agent edges are sampled — while structured
+        kinds re-derive at the larger size.  Time-varying coders re-derive
+        the whole SEQUENCE (deterministically in topology_seed).
+
+        Hierarchical coders grow on the MODEL axis only (the pod count is
+        fixed at mesh construction — inter-pod links are physical): every
+        pod gains `extra_model` fresh agents, the inter-pod combiner is
+        carried verbatim, and because the atom layout is pod-major the
+        fresh shards are interleaved per pod — each existing (pod, model)
+        agent keeps exactly the atom shard it already owned.
         """
         if extra_model <= 0:
             raise ValueError(f"extra_model must be positive, got {extra_model}")
@@ -806,11 +1039,35 @@ class DistributedSparseCoder:
             new_mesh, self.res, self.reg, self.cfg, grown_from=self
         )
         m, k = W.shape
-        if k % n_old:
-            raise ValueError(f"K={k} not divisible by model={n_old}")
-        kb = k // n_old
-        fresh = init_dictionary(key, m, kb * int(extra_model), nonneg=self.reg.nonneg)
-        W2 = jnp.concatenate([jax.device_get(W), fresh], axis=1)
+        if self.cfg.mode in HIER_MODES:
+            n_pods = sizes[self.cfg.pod_axis]
+            shards = n_pods * n_old
+            if k % shards:
+                raise ValueError(
+                    f"K={k} not divisible by pod*model={shards}"
+                )
+            kb = k // shards
+            # Pod-major atom layout: pod i owns columns [i*n_old*kb,
+            # (i+1)*n_old*kb).  Append each pod's fresh atoms NEXT TO its
+            # existing block so old shards stay with their owners.
+            W_host = np.asarray(jax.device_get(W)).reshape(m, n_pods, n_old * kb)
+            parts = []
+            for i, kp in enumerate(jax.random.split(key, n_pods)):
+                fresh = init_dictionary(
+                    kp, m, kb * int(extra_model), nonneg=self.reg.nonneg
+                )
+                parts.append(
+                    np.concatenate([W_host[:, i, :], np.asarray(fresh)], axis=1)
+                )
+            W2 = jnp.asarray(np.concatenate(parts, axis=1))
+        else:
+            if k % n_old:
+                raise ValueError(f"K={k} not divisible by model={n_old}")
+            kb = k // n_old
+            fresh = init_dictionary(
+                key, m, kb * int(extra_model), nonneg=self.reg.nonneg
+            )
+            W2 = jnp.concatenate([jax.device_get(W), fresh], axis=1)
         return new_coder, new_coder.snapshot(W2)
 
 

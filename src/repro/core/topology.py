@@ -7,7 +7,7 @@ graph.  All weight matrices returned here are doubly stochastic, which is
 the condition for the diffusion iteration (Eq. 31) to converge to an
 O(mu^2) neighborhood of the optimum.
 
-Two regimes live here:
+Three regimes live here:
 
 * **static** combiners — one doubly-stochastic A applied every iteration
   (`make_topology`);
@@ -15,7 +15,13 @@ Two regimes live here:
   periodic sequence A_0, A_1, ... with every A_t doubly stochastic.  This
   is the regime of Daneshmand et al. (arXiv:1612.07335, arXiv:1808.05933):
   the network changes every iteration, and convergence only needs each
-  A_t doubly stochastic plus joint connectivity over a window.
+  A_t doubly stochastic plus joint connectivity over a window;
+* **hierarchical** (two-level) combiners — `HierarchicalTopology`, the
+  Kronecker composition A_pod (x) A_model of a sparse inter-pod combiner
+  with a dense intra-pod one (graph-of-graphs: fast local neighborhoods
+  composed with slowly-mixing long-haul links, the multi-pod regime of
+  arXiv:1612.07335 / arXiv:1304.3568), optionally firing the inter-pod
+  hop only every k-th iteration.
 
 Elastic growth is topology-aware: `erdos_renyi_grow` enlarges a random
 graph WITHOUT resampling the edges between existing agents, so growth
@@ -407,6 +413,237 @@ def _adjacency_for(kind: str, n: int) -> Optional[np.ndarray]:
     if kind == "torus":
         return torus_adjacency(*torus_dims(n))
     return None  # "full" (dense) — nothing to preserve
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical (two-level) combiners: A = A_pod (x) A_model
+# (graph-of-graphs — Daneshmand et al. arXiv:1612.07335 and Chainais-Richard
+# arXiv:1304.3568 analyze exactly this sparse-long-haul + dense-local regime)
+# ---------------------------------------------------------------------------
+
+
+def kron_mixing_rate(A_pod: np.ndarray, A_model: np.ndarray) -> float:
+    """sigma_2(A_pod (x) A_model) from the FACTOR spectra.
+
+    The singular values of a Kronecker product are all pairwise products of
+    the factors' singular values, so the second-largest is computed from two
+    small SVDs instead of one (P*N, P*N) decomposition — the host-side tests
+    pin this against `numpy.linalg.svd` of the dense Kronecker product.
+    """
+    sp = np.linalg.svd(np.asarray(A_pod, np.float64), compute_uv=False)
+    sm = np.linalg.svd(np.asarray(A_model, np.float64), compute_uv=False)
+    prods = np.sort(np.outer(sp, sm).ravel())[::-1]
+    return float(prods[1]) if prods.size > 1 else 0.0
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class HierarchicalTopology:
+    """A two-level (graph-of-graphs) combiner A = A_pod (x) A_model.
+
+    The network of P*N agents is the Kronecker composition of a sparse
+    inter-pod combiner A_pod (P pods, the bandwidth-constrained long-haul
+    links) with a dense intra-pod combiner A_model (N agents per pod, fast
+    local ICI neighborhoods).  Agent (i, j) = pod i, model-rank j sits at
+    flat index i*N + j — pod-major, exactly the order a (pod, data, model)
+    mesh enumerates its (pod, model) device pairs — and
+    (A_pod (x) A_model)[iN+j, kN+l] = A_pod[i, k] * A_model[j, l].  The
+    Kronecker product of doubly-stochastic factors is doubly stochastic, so
+    the composition is a valid diffusion combiner; both factors are
+    validated at construction.
+
+    `gossip_every` = k > 1 is the standard sparse-communication trick for
+    slow inter-pod links: the pod hop fires only at iterations t with
+    t % k == 0, so the per-iteration combiner sequence (period k) is
+
+        A_pod (x) A_model,  I (x) A_model,  ...,  I (x) A_model
+
+    and every entry is still doubly stochastic.  `effective_mixing_rate()`
+    is the windowed per-step contraction of that sequence (degenerating to
+    sigma_2(A_pod (x) A_model) at k = 1).
+
+    The object is a pure function of (pod_kind, model_kind, n_pods, n_model,
+    p, seed, beta, gossip_every): the model combiner draws from the RAW
+    seed (an erdos intra-pod network matches the flat mode="graph" erdos
+    network for the same seed) and the pod combiner from the derived stream
+    `derive_seed(seed, 1)`, so the two levels never share a random graph.
+    """
+
+    pod_kind: str
+    model_kind: str
+    n_pods: int
+    n_model: int
+    A_pod: np.ndarray
+    A_model: np.ndarray
+    gossip_every: int = 1
+    p: float = 0.5
+    seed: int = 0
+    beta: float = 1.0 / 3.0
+    # bool adjacency backing an erdos intra-pod combiner — carried so
+    # grown() can preserve existing neighborhoods (None for structured kinds)
+    model_adjacency: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        """Validate factor shapes, double stochasticity, and gossip_every."""
+        for name, a, n in (("A_pod", self.A_pod, self.n_pods),
+                           ("A_model", self.A_model, self.n_model)):
+            a = np.asarray(a)
+            if a.shape != (n, n):
+                raise ValueError(
+                    f"{name} has shape {a.shape}, expected {(n, n)}"
+                )
+            if not is_doubly_stochastic(a):
+                raise ValueError(
+                    f"{name} of hierarchical topology "
+                    f"{self.model_kind!r}+{self.pod_kind!r} is not doubly "
+                    f"stochastic"
+                )
+        if self.gossip_every < 1:
+            raise ValueError(
+                f"gossip_every must be >= 1, got {self.gossip_every}"
+            )
+
+    @property
+    def n_agents(self) -> int:
+        """Total network size P*N (the flat agent count of the composition)."""
+        return self.n_pods * self.n_model
+
+    @property
+    def period(self) -> int:
+        """Length of the per-iteration combiner sequence before it repeats
+        (= gossip_every; 1 when the pod hop fires every iteration)."""
+        return self.gossip_every
+
+    def kron(self) -> np.ndarray:
+        """The dense (P*N, P*N) two-level combiner A_pod (x) A_model."""
+        return np.kron(np.asarray(self.A_pod, np.float64),
+                       np.asarray(self.A_model, np.float64))
+
+    def local_only(self) -> np.ndarray:
+        """The dense combiner of a pod-hop-free iteration: I (x) A_model."""
+        return np.kron(np.eye(self.n_pods),
+                       np.asarray(self.A_model, np.float64))
+
+    def at(self, t: int) -> np.ndarray:
+        """The dense (P*N, P*N) combiner applied at diffusion iteration t:
+        the full Kronecker composition when the pod hop fires
+        (t % gossip_every == 0), I (x) A_model otherwise."""
+        return self.kron() if int(t) % self.gossip_every == 0 else self.local_only()
+
+    def sequence(self) -> Tuple[np.ndarray, ...]:
+        """One period of the per-iteration combiner sequence,
+        (A_pod (x) A_model, I (x) A_model, ..., I (x) A_model)."""
+        return tuple(self.at(t) for t in range(self.gossip_every))
+
+    def window_combiner(self) -> np.ndarray:
+        """The effective one-period combiner (the window product of
+        `sequence()`; itself doubly stochastic) — what
+        `DistributedSparseCoder.combiner()` reports for the hier modes."""
+        return _window_product(self.sequence())
+
+    def mixing_rate(self) -> float:
+        """sigma_2(A_pod (x) A_model) of the full composition (computed
+        from the factor spectra, see `kron_mixing_rate`) — the contraction
+        when the pod hop fires every iteration."""
+        return kron_mixing_rate(self.A_pod, self.A_model)
+
+    def effective_mixing_rate(self) -> float:
+        """Per-step contraction of the gossip_every-period sequence:
+        sigma_2(window product)^(1/gossip_every).  Equals `mixing_rate()`
+        at gossip_every = 1; reported by stats and the gossip benchmarks."""
+        if self.gossip_every == 1:
+            return self.mixing_rate()
+        return windowed_mixing_rate(self.sequence())
+
+    def as_callable(self) -> Callable:
+        """A jax-traceable ``A_t(t) -> (P*N, P*N)`` closure over the dense
+        per-iteration sequence — the reference-engine form the hier parity
+        tests feed to `core.inference.diffusion_infer` (with
+        pod_gossip_every > 1 modeled as the alternating sequence)."""
+        import jax.numpy as jnp
+
+        stack = jnp.asarray(
+            np.stack([np.asarray(a, np.float32) for a in self.sequence()])
+        )
+        period = self.gossip_every
+        return lambda t: stack[jnp.mod(t, period)]
+
+    def grown(self, n_model_new: int) -> "HierarchicalTopology":
+        """Re-derive the hierarchy for a larger INTRA-POD agent count.
+
+        Elastic growth happens on the model axis only — the pod count is
+        fixed at mesh construction (long-haul links are physical), so
+        A_pod is carried verbatim.  An erdos intra-pod combiner grows via
+        `erdos_renyi_grow` (existing agents keep their neighborhoods, seed
+        stream (seed, 0, n_new) — the same stream the flat static-erdos
+        engine growth uses); structured kinds re-derive at the larger size.
+        Deterministic in (seed, n_model_new)."""
+        if n_model_new < self.n_model:
+            raise ValueError(
+                f"cannot grow intra-pod network from {self.n_model} agents "
+                f"down to {n_model_new}"
+            )
+        if self.model_kind == "erdos" and self.model_adjacency is not None:
+            adj = erdos_renyi_grow(
+                self.model_adjacency, n_model_new, p=self.p,
+                seed=derive_seed(self.seed, 0, n_model_new),
+            )
+            A_model, model_adj = metropolis_weights(adj), adj
+        else:
+            A_model = make_topology(
+                self.model_kind, n_model_new, p=self.p, seed=self.seed,
+                beta=self.beta,
+            )
+            model_adj = _adjacency_for(self.model_kind, n_model_new)
+        return HierarchicalTopology(
+            pod_kind=self.pod_kind, model_kind=self.model_kind,
+            n_pods=self.n_pods, n_model=n_model_new,
+            A_pod=self.A_pod, A_model=A_model,
+            gossip_every=self.gossip_every, p=self.p, seed=self.seed,
+            beta=self.beta, model_adjacency=model_adj,
+        )
+
+
+def make_hierarchical_topology(
+    pod_kind: str,
+    model_kind: str,
+    n_pods: int,
+    n_model: int,
+    *,
+    p: float = 0.5,
+    seed: int = 0,
+    beta: float = 1.0 / 3.0,
+    gossip_every: int = 1,
+) -> HierarchicalTopology:
+    """Build a validated two-level combiner A_pod (x) A_model.
+
+    `pod_kind` / `model_kind` are any `make_topology` kinds ("ring",
+    "ring_metropolis", "torus", "erdos", "full").  The intra-pod combiner
+    draws from the RAW `seed` (so an erdos intra-pod network matches the
+    flat mode="graph" network for the same seed); the inter-pod combiner
+    draws from the derived stream `derive_seed(seed, 1)`.  `gossip_every`
+    fires the inter-pod hop only every k-th iteration (the sparse-
+    communication trick for the bandwidth-constrained long-haul link).
+    """
+    for label, kind in (("pod_kind", pod_kind), ("model_kind", model_kind)):
+        if kind not in GRAPH_KINDS:
+            raise KeyError(
+                f"unknown topology kind {kind!r} for {label} "
+                f"(options: {GRAPH_KINDS})"
+            )
+    A_pod = make_topology(pod_kind, n_pods, p=p, seed=derive_seed(seed, 1),
+                          beta=beta)
+    if model_kind == "erdos":
+        adj = erdos_renyi_adjacency(n_model, p=p, seed=seed)
+        A_model, model_adj = metropolis_weights(adj), adj
+    else:
+        A_model = make_topology(model_kind, n_model, p=p, seed=seed, beta=beta)
+        model_adj = _adjacency_for(model_kind, n_model)
+    return HierarchicalTopology(
+        pod_kind=pod_kind, model_kind=model_kind,
+        n_pods=n_pods, n_model=n_model, A_pod=A_pod, A_model=A_model,
+        gossip_every=int(gossip_every), p=p, seed=seed, beta=beta,
+        model_adjacency=model_adj,
+    )
 
 
 def fixed_schedule(A: np.ndarray, kind: str = "fixed") -> TopologySchedule:

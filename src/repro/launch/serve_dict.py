@@ -9,6 +9,14 @@ optional mid-stream elastic growth of the `model` axis.
   PYTHONPATH=src python -m repro.launch.serve_dict \\
       --samples 600 --mesh 1x2 --grow-at 300 --grow-model 2
 
+Hierarchical (multi-pod) gossip takes a 3-D mesh 'PxDxM' plus the
+inter-pod combiner kind and optional sparse-gossip stride:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  PYTHONPATH=src python -m repro.launch.serve_dict \\
+      --mode hier --mesh 2x1x4 --topology torus \\
+      --pod-topology ring_metropolis --pod-gossip-every 2 --grow-at 0
+
 Prints throughput (samples/s), per-sample latency percentiles, learner
 progress, and the growth event; `--json` additionally emits one
 machine-readable line (consumed by benchmarks/serve_throughput.py).
@@ -40,10 +48,18 @@ def main() -> None:
     ap.add_argument("--mode", type=str, default="exact_fista",
                     choices=["exact", "exact_fista", "ring", "ring_q8", "ring_async",
                              "graph", "graph_q8", "graph_async",
-                             "graph_tv", "graph_tv_q8"])
+                             "graph_tv", "graph_tv_q8", "hier", "hier_q8"])
     ap.add_argument("--topology", type=str, default="ring_metropolis",
                     choices=["ring", "ring_metropolis", "torus", "erdos", "full"],
-                    help="graph-mode combiner kind (core/topology.make_topology)")
+                    help="graph-mode combiner kind (core/topology.make_topology); "
+                         "the INTRA-POD kind for the hier modes")
+    ap.add_argument("--pod-topology", type=str, default="",
+                    choices=["", "ring", "ring_metropolis", "torus", "erdos", "full"],
+                    help="hier modes: INTER-POD combiner kind over the pod axis "
+                         "(required for --mode hier/hier_q8)")
+    ap.add_argument("--pod-gossip-every", type=int, default=1,
+                    help="hier modes: fire the inter-pod hop every k-th "
+                         "iteration (1 = every iteration)")
     ap.add_argument("--topology-p", type=float, default=0.5,
                     help="erdos edge probability")
     ap.add_argument("--topology-seed", type=int, default=0,
@@ -58,7 +74,9 @@ def main() -> None:
     ap.add_argument("--iters", type=int, default=150, help="dual iterations per solve")
     ap.add_argument("--m", type=int, default=32, help="data dimension")
     ap.add_argument("--atoms-per-agent", type=int, default=8)
-    ap.add_argument("--mesh", type=str, default="1x2", help="data x model")
+    ap.add_argument("--mesh", type=str, default="1x2",
+                    help="'DxM' (data x model) or 'PxDxM' (pod x data x "
+                         "model — required for the hier modes)")
     ap.add_argument("--samples", type=int, default=600)
     ap.add_argument("--micro-batch", type=int, default=16)
     ap.add_argument("--max-wait-ms", type=float, default=20.0)
@@ -75,18 +93,35 @@ def main() -> None:
                     help="emit a single BENCH json line at the end")
     args = ap.parse_args()
 
-    d, m_axis = (int(v) for v in args.mesh.split("x"))
+    dims = [int(v) for v in args.mesh.split("x")]
+    if len(dims) == 2:
+        pods, (d, m_axis) = 0, dims
+    elif len(dims) == 3:
+        pods, d, m_axis = dims
+    else:
+        raise SystemExit(f"--mesh must be 'DxM' or 'PxDxM', got {args.mesh!r}")
+    if args.mode in ("hier", "hier_q8") and not pods:
+        raise SystemExit(
+            f"--mode {args.mode} gossips over a pod axis; pass a 3-D "
+            f"--mesh PxDxM (e.g. 2x1x4), not {args.mesh!r}"
+        )
     if args.grow_at >= args.samples:
         args.grow_at = 0  # growth point past the stream: never fires
-    need = d * (m_axis + (args.grow_model if args.grow_at else 0))
+    need = max(pods, 1) * d * (m_axis + (args.grow_model if args.grow_at else 0))
     if jax.device_count() < need:
         raise SystemExit(
             f"need {need} devices for mesh {args.mesh} + growth; have "
             f"{jax.device_count()} (set XLA_FLAGS=--xla_force_host_platform_device_count=N)"
         )
-    mesh = dist.make_mesh((d, m_axis), (dist.DATA_AXIS, dist.MODEL_AXIS))
+    if pods:
+        mesh = dist.make_mesh(
+            (pods, d, m_axis), (dist.POD_AXIS, dist.DATA_AXIS, dist.MODEL_AXIS)
+        )
+    else:
+        mesh = dist.make_mesh((d, m_axis), (dist.DATA_AXIS, dist.MODEL_AXIS))
     res, reg = make_task(args.task, gamma=args.gamma, delta=args.delta)
-    k0 = args.atoms_per_agent * m_axis
+    # one atom block per AGENT: the hier modes shard atoms over pod x model.
+    k0 = args.atoms_per_agent * m_axis * (pods if args.mode.startswith("hier") else 1)
     W0 = init_dictionary(jax.random.PRNGKey(args.seed), args.m, k0, nonneg=reg.nonneg)
     coder = DistributedSparseCoder(
         mesh, res, reg, DistConfig(
@@ -94,6 +129,8 @@ def main() -> None:
             topology_p=args.topology_p, topology_seed=args.topology_seed,
             topology_schedule=args.topology_schedule,
             schedule_period=args.schedule_period,
+            pod_topology=args.pod_topology,
+            pod_gossip_every=args.pod_gossip_every,
         )
     )
     comb = coder.combiner_info()
@@ -110,7 +147,8 @@ def main() -> None:
           f"M={args.m} K={k0} micro_batch={args.micro_batch} "
           f"samples={args.samples} grow_at={args.grow_at or 'never'} "
           f"topology={comb['topology']} mixing_rate={comb['mixing_rate']:.3f} "
-          f"schedule_period={comb.get('schedule_period', 1)}")
+          f"schedule_period={comb.get('schedule_period', 1)} "
+          f"pod_gossip_every={comb.get('pod_gossip_every', 1)}")
 
     futures = []
     grow_fut = None
@@ -162,6 +200,8 @@ def main() -> None:
             "schedule": stats.get("schedule"),
             "schedule_period": stats.get("schedule_period", 1),
             "active_schedule": stats.get("active_schedule", 0),
+            "pod_topology": stats.get("pod_topology"),
+            "pod_gossip_every": stats.get("pod_gossip_every", 1),
             "wall_s": wall_s,
             "samples_per_s": stats["coded"] / wall_s,
             "latency_ms": lat,

@@ -35,6 +35,23 @@ Mode -> collective mapping (core/distributed.py consumes these):
                                           program
   graph_tv_q8          graph_combine_     the same switch over the int8
                        quantized_switch   wire format
+  hier                 hier_combine over  HIERARCHICAL two-level gossip
+                       (hier_schedule     (core/topology.Hierarchical-
+                       A_pod, A_model)    Topology): the intra-pod schedule
+                                          runs over MODEL_AXIS and the
+                                          inter-pod schedule over POD_AXIS
+                                          back-to-back inside one shard_map
+                                          body, realizing the Kronecker
+                                          combiner A_pod (x) A_model; with
+                                          gossip_every > 1 the pod hop is
+                                          gated by the traced iteration
+                                          index (lax.cond — one compiled
+                                          program, like the tv switch)
+  hier_q8              hier_combine_      the same composition with the q8
+                       quantized          wire format on the INTER-POD hop
+                                          only (that is the bandwidth-
+                                          constrained link; the intra-pod
+                                          hop stays full precision)
 
 A torus combiner additionally gets `torus_schedule`: exactly four neighbor
 permutations (row +/-1, column +/-1) that map onto 2-D ICI links instead of
@@ -96,6 +113,10 @@ __all__ = [
     "graph_combine_quantized",
     "graph_combine_switch",
     "graph_combine_quantized_switch",
+    "HierSchedule",
+    "hier_schedule",
+    "hier_combine",
+    "hier_combine_quantized",
 ]
 
 Array = jax.Array
@@ -406,6 +427,128 @@ def graph_combine_quantized(
         w = _rank_weight(weights, axis_name)
         out = out + w.astype(x_self.dtype) * dequantize_q8(ql, sl, x_self.dtype)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical (two-level) gossip: the Kronecker combiner A_pod (x) A_model
+# realized as the intra-pod schedule over MODEL_AXIS composed with the
+# inter-pod schedule over POD_AXIS (core/topology.HierarchicalTopology)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HierSchedule:
+    """Static two-level data-movement plan for nu = (A_pod (x) A_model)^T psi.
+
+    `model` is the intra-pod ppermute schedule (over the model axis, within
+    each pod) and `pod` the inter-pod schedule (over the pod axis); because
+    the Kronecker combine factorizes — (A (x) B)^T psi = apply B^T over the
+    model axis, then A^T over the pod axis — running the two schedules
+    back-to-back inside one shard_map body realizes the full composition.
+    `gossip_every` = k fires the pod schedule only at iterations t with
+    t % k == 0 (the sparse-communication trick for slow inter-pod links).
+    """
+
+    model: GraphSchedule
+    pod: GraphSchedule
+    gossip_every: int = 1
+
+    def reconstruct(self) -> np.ndarray:
+        """Dense A_pod (x) A_model this schedule realizes on a pod-hop
+        iteration (host-side; tests/benchmarks)."""
+        return np.kron(self.pod.reconstruct(), self.model.reconstruct())
+
+    @property
+    def model_messages_per_iter(self) -> int:
+        """Intra-pod ppermute rounds per iteration (every iteration)."""
+        return self.model.messages_per_iter
+
+    @property
+    def pod_messages_per_iter(self) -> float:
+        """Inter-pod ppermute rounds per iteration, AVERAGED over the
+        gossip_every period (the hop only fires every k-th iteration)."""
+        return self.pod.messages_per_iter / self.gossip_every
+
+
+def hier_schedule(
+    A_pod: np.ndarray,
+    A_model: np.ndarray,
+    *,
+    pod_kind: Optional[str] = None,
+    model_kind: Optional[str] = None,
+    gossip_every: int = 1,
+) -> HierSchedule:
+    """Compile a two-level combiner pair into a `HierSchedule`.
+
+    Each factor is compiled independently (`graph_schedule`; a factor whose
+    kind is "torus" takes the 4-link 2-D ICI `torus_schedule` instead), so
+    an intra-pod torus keeps nearest-neighbor data movement while the
+    inter-pod factor pays only its own edge-offsets on the long-haul link.
+    """
+    from repro.core.topology import torus_dims  # numpy-only leaf
+
+    if gossip_every < 1:
+        raise ValueError(f"gossip_every must be >= 1, got {gossip_every}")
+
+    def compile_one(A: np.ndarray, kind: Optional[str]) -> GraphSchedule:
+        if kind == "torus":
+            rows, cols = torus_dims(np.asarray(A).shape[0])
+            return torus_schedule(rows, cols, A)
+        return graph_schedule(A)
+
+    return HierSchedule(
+        model=compile_one(A_model, model_kind),
+        pod=compile_one(A_pod, pod_kind),
+        gossip_every=int(gossip_every),
+    )
+
+
+def hier_combine(x, model_axis: str, pod_axis: str, hs: HierSchedule, t=0):
+    """Two-level synchronous gossip: nu = (A_pod (x) A_model)^T psi, as the
+    intra-pod combine over `model_axis` followed by the inter-pod combine
+    over `pod_axis` in the same program.
+
+    With gossip_every > 1 the pod hop is gated on the (traced) iteration
+    index `t` via lax.cond — both branches are traced once with their own
+    static ppermutes, so the whole gated run stays ONE compiled program
+    (`t` must be replicated across both axes; it comes from the scan
+    counter, so it always is)."""
+    v = graph_combine(x, model_axis, hs.model)
+    if hs.gossip_every == 1:
+        return graph_combine(v, pod_axis, hs.pod)
+    return jax.lax.cond(
+        jnp.equal(jnp.mod(t, hs.gossip_every), 0),
+        lambda u: graph_combine(u, pod_axis, hs.pod),
+        lambda u: u,
+        v,
+    )
+
+
+def hier_combine_quantized(
+    x: Array, err: Array, model_axis: str, pod_axis: str, hs: HierSchedule, t=0
+) -> Tuple[Array, Array]:
+    """`hier_combine` with the int8 wire format on the INTER-POD hop only.
+
+    The intra-pod combine ships full-precision messages (local ICI links
+    are cheap); the combined intra-pod value is then quantized ONCE with
+    error feedback `err` and shipped as (int8 payload, scales) on each
+    inter-pod round — that hop is the bandwidth-constrained link the q8
+    format exists for.  Returns (combined, new_err); on iterations where
+    the pod hop does not fire (t % gossip_every != 0) nothing is quantized
+    and `err` rides through unchanged."""
+    v = graph_combine(x, model_axis, hs.model)
+
+    def hop(op):
+        u, e = op
+        q, s = quantize_q8(u + e)
+        e_next = (u + e) - dequantize_q8(q, s)
+        return graph_combine_quantized(u, q, s, pod_axis, hs.pod), e_next
+
+    if hs.gossip_every == 1:
+        return hop((v, err))
+    return jax.lax.cond(
+        jnp.equal(jnp.mod(t, hs.gossip_every), 0), hop, lambda op: op, (v, err)
+    )
 
 
 def all_to_all_tiled(x: Array, axis_name: str) -> Array:

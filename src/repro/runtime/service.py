@@ -31,8 +31,13 @@ exactly that contract:
     doubly-stochastic combiner A (and its ppermute schedule) for the larger
     axis; time-varying coders re-derive the whole combiner SEQUENCE, with
     erdos steps grown neighborhood-preservingly (topology.erdos_renyi_grow);
+    hierarchical (hier/hier_q8) coders grow on the model axis ONLY — every
+    pod gains the new agents, the inter-pod combiner is carried verbatim
+    (the pod count is fixed at mesh construction) and each existing
+    (pod, model) agent keeps its atom shard;
     stats() and the growth event report the topology + mixing rate (windowed
-    for sequences) + schedule spec/period.
+    for sequences, effective two-level rate for hier) + schedule spec/period
+    + the hier pod_topology / pod_gossip_every identity.
     Growth is applied by the learner thread at a step boundary; the batcher
     keeps coding against the old (coder, snapshot) pair until the new pair
     is published.  One caveat on
@@ -201,16 +206,18 @@ class DictionaryService:
         MUST be called while holding `_exec_lock` (both callers do): claims
         happen at the execution serialization point, so claim order equals
         execution order and the stream really runs one continuous network.
-        The returned offset is reduced mod the schedule period — only
-        t0 mod P reaches the lax.switch — so the int passed to the engine
-        stays small no matter how long the unbounded Python-int clock runs
-        (an unreduced clock would eventually overflow the int32 cast)."""
+        The returned offset is reduced mod the coder's schedule period (a
+        `TopologySchedule` period, or pod_gossip_every for a hierarchical
+        coder — only t0 mod P reaches the compiled program) so the int
+        passed to the engine stays small no matter how long the unbounded
+        Python-int clock runs (an unreduced clock would eventually overflow
+        the int32 cast)."""
         if not getattr(coder, "is_time_varying", False):
             return 0
         with self._lock:
             t0 = self._sched_t
             self._sched_t += coder.cfg.iters
-        return t0 % coder.topology_schedule.period
+        return t0 % coder.schedule_period
 
     def _rollback_schedule(self, coder) -> None:
         """Return a claimed-but-never-executed window (a fit that raised
@@ -331,8 +338,10 @@ class DictionaryService:
         """One consistent snapshot of the service counters: throughput,
         latency percentiles, learner progress, growth events, and the gossip
         identity (topology label, mixing rate — windowed for time-varying
-        schedules — plus schedule spec/period and the active-schedule
-        index the next engine execution starts from)."""
+        schedules, the effective two-level rate for hierarchical coders —
+        plus schedule spec/period, the active-schedule index the next engine
+        execution starts from, and the hier pod_topology /
+        pod_gossip_every)."""
         elapsed = (time.perf_counter() - self._t_start) if self._t_start else 0.0
         with self._lock:  # one consistent snapshot of every counter
             lat = np.asarray(self._latencies, np.float64)
@@ -355,6 +364,11 @@ class DictionaryService:
                 "active_schedule": (
                     self._sched_t % self._comb_info.get("schedule_period", 1)
                 ),
+                # Hierarchical (two-level) gossip identity: the inter-pod
+                # combiner kind and its sparse-gossip stride (None / 1 for
+                # every flat mode).
+                "pod_topology": self._comb_info.get("pod_topology"),
+                "pod_gossip_every": self._comb_info.get("pod_gossip_every", 1),
                 "elapsed_s": elapsed,
                 "samples_per_s": (self.coded / elapsed) if elapsed > 0 else 0.0,
             }
@@ -513,6 +527,8 @@ class DictionaryService:
                     "mixing_rate": new_info["mixing_rate"],
                     "schedule": new_info.get("schedule"),
                     "schedule_period": new_info.get("schedule_period", 1),
+                    "pod_topology": new_info.get("pod_topology"),
+                    "pod_gossip_every": new_info.get("pod_gossip_every", 1),
                 }
                 self.grow_events.append(info)
             _resolve(fut, info)

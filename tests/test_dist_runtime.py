@@ -180,6 +180,30 @@ def test_graph_schedule_sequence_compiles_each_step():
         np.testing.assert_allclose(s.reconstruct(), A, atol=1e-12)
 
 
+def test_hier_schedule_compiles_both_levels():
+    """The two-level compiler: each factor gets its own exact GraphSchedule
+    (torus factors routed through the 4-link ICI schedule), the dense
+    reconstruction is the Kronecker product, and the per-axis message
+    counts average the pod hop over the gossip_every stride."""
+    from repro.core import topology as topo
+
+    ht = topo.make_hierarchical_topology("ring_metropolis", "torus", 2, 4,
+                                         gossip_every=2)
+    hs = dist.hier_schedule(ht.A_pod, ht.A_model,
+                            pod_kind="ring_metropolis", model_kind="torus",
+                            gossip_every=2)
+    np.testing.assert_allclose(hs.model.reconstruct(), ht.A_model, atol=1e-12)
+    np.testing.assert_allclose(hs.pod.reconstruct(), ht.A_pod, atol=1e-12)
+    np.testing.assert_allclose(hs.reconstruct(), ht.kron(), atol=1e-12)
+    assert hs.model.messages_per_iter <= 4  # torus factor kept the ICI plan
+    assert hs.model_messages_per_iter == hs.model.messages_per_iter
+    assert hs.pod_messages_per_iter == hs.pod.messages_per_iter / 2
+    with pytest.raises(ValueError):
+        dist.hier_schedule(ht.A_pod, ht.A_model, gossip_every=0)
+    with pytest.raises(ValueError):  # factors validated doubly stochastic
+        dist.hier_schedule(np.array([[0.9, 0.2], [0.1, 0.8]]), ht.A_model)
+
+
 def test_graph_schedule_rejects_non_doubly_stochastic():
     bad = np.array([[0.9, 0.2], [0.1, 0.8]])
     with pytest.raises(ValueError):
@@ -284,6 +308,85 @@ def test_graph_combine_switch_selects_At_on_mesh():
             err = np.max(np.abs(outq - ref))
             print("q8 t", t, "err", err)
             assert err < np.max(np.abs(x)) / 127.0 + 1e-6, (t, err)
+        print("OK")
+    """
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        env=subprocess_env(8), cwd=str(REPO),
+        capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-4000:]}"
+    assert "OK" in proc.stdout
+
+
+@pytest.mark.slow
+def test_hier_combine_matches_dense_kronecker_on_mesh():
+    """hier_combine over a (2, 1, 4) pod mesh equals the dense contraction
+    (A_pod (x) A_model).T @ psi on the pod-major flattened agent axis —
+    including the gossip_every gating on a traced t (pod hop fires iff
+    t % k == 0) and the q8-on-the-pod-hop-only wire variant."""
+    code = """
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.core import topology as topo
+        from repro.runtime import dist
+
+        mesh = dist.debug_mesh(model=4, data=1, pods=2)
+        # leading axis = 8 flat agents, sharded (pod, model) pod-major
+        x = np.random.default_rng(0).standard_normal((8, 4, 16)).astype(np.float32)
+
+        ht = topo.make_hierarchical_topology("ring_metropolis", "torus", 2, 4,
+                                             seed=3, gossip_every=2)
+        hs = dist.hier_schedule(ht.A_pod, ht.A_model,
+                                pod_kind="ring_metropolis", model_kind="torus",
+                                gossip_every=2)
+        f = jax.jit(dist.shard_map(
+            lambda v, t: dist.hier_combine(v, "model", "pod", hs, t),
+            mesh=mesh, in_specs=(P(("pod", "model")), P()),
+            out_specs=P(("pod", "model")), check_vma=False))
+        for t in range(4):
+            out = np.asarray(f(jnp.asarray(x), jnp.asarray(t, jnp.int32)))
+            # t % 2 == 0: full Kronecker combine; else intra-pod only
+            ref = np.tensordot(ht.at(t).T.astype(np.float32), x, axes=1)
+            err = np.max(np.abs(out - ref))
+            print("t", t, "err", err)
+            assert err < 1e-6, (t, err)
+
+        # gossip_every=1 (ungated) path
+        hs1 = dist.hier_schedule(ht.A_pod, ht.A_model, model_kind="torus")
+        f1 = jax.jit(dist.shard_map(
+            lambda v: dist.hier_combine(v, "model", "pod", hs1),
+            mesh=mesh, in_specs=P(("pod", "model")),
+            out_specs=P(("pod", "model")), check_vma=False))
+        out1 = np.asarray(f1(jnp.asarray(x)))
+        ref1 = np.tensordot(ht.kron().T.astype(np.float32), x, axes=1)
+        assert np.max(np.abs(out1 - ref1)) < 1e-6
+
+        # q8 wire variant: quantization only on the INTER-POD hop, so a
+        # pod-hop iteration is exact up to the int8 quantization step of
+        # the intra-pod-combined payload — and on a no-hop iteration (t=1)
+        # the result is EXACT (nothing quantized) and the error-feedback
+        # accumulator rides through untouched.
+        def body(v, e, t):
+            out, err = dist.hier_combine_quantized(
+                v[0], e[0], "model", "pod", hs, t)
+            return out[None], err[None]
+        fq = jax.jit(dist.shard_map(body, mesh=mesh,
+                                    in_specs=(P(("pod", "model")),) * 2 + (P(),),
+                                    out_specs=(P(("pod", "model")),) * 2,
+                                    check_vma=False))
+        zeros = jnp.zeros_like(jnp.asarray(x))
+        outq, errq = fq(jnp.asarray(x), zeros, jnp.asarray(0, jnp.int32))
+        ref0 = np.tensordot(ht.kron().T.astype(np.float32), x, axes=1)
+        qerr = np.max(np.abs(np.asarray(outq) - ref0))
+        print("q8 t=0 err", qerr)
+        assert qerr < np.max(np.abs(x)) / 127.0 + 1e-6, qerr
+        assert float(jnp.max(jnp.abs(errq))) > 0.0  # feedback captured the residue
+        sentinel = jnp.ones_like(jnp.asarray(x))
+        outq1, errq1 = fq(jnp.asarray(x), sentinel, jnp.asarray(1, jnp.int32))
+        ref_local = np.tensordot(ht.local_only().T.astype(np.float32), x, axes=1)
+        assert np.max(np.abs(np.asarray(outq1) - ref_local)) < 1e-6
+        np.testing.assert_array_equal(np.asarray(errq1), np.ones_like(x))
         print("OK")
     """
     proc = subprocess.run(

@@ -184,3 +184,45 @@ def test_engine_rejects_inadmissible_config():
     assert coder.combiner().shape == (1, 1)
     info = coder.combiner_info()
     assert info["topology"] == "ring" and info["mixing_rate"] == 0.0
+    # flat modes carry the (empty) hier identity so stats stay uniform
+    assert info["pod_topology"] is None and info["pod_gossip_every"] == 1
+
+
+def test_dist_config_rejects_inconsistent_cross_fields():
+    """DistConfig itself (not a traced shard_map body or deep schedule
+    compilation) rejects: a time-varying mode with topology_schedule=None,
+    a hier mode without pod_topology, and pod_gossip_every < 1 — each with
+    a message naming the missing/offending field."""
+    from repro.core.distributed import DistConfig
+
+    with pytest.raises(ValueError, match="topology_schedule"):
+        DistConfig(mode="graph_tv", topology_schedule=None)
+    with pytest.raises(ValueError, match="topology_schedule"):
+        DistConfig(mode="graph_tv_q8", topology_schedule=None)
+    with pytest.raises(ValueError, match="pod_topology"):
+        DistConfig(mode="hier")
+    with pytest.raises(ValueError, match="pod_topology"):
+        DistConfig(mode="hier_q8", pod_topology="")
+    with pytest.raises(ValueError, match="pod_gossip_every"):
+        DistConfig(mode="hier", pod_topology="ring_metropolis",
+                   pod_gossip_every=0)
+    # "" schedule is the documented degenerate-to-static escape hatch
+    assert DistConfig(mode="graph_tv", topology_schedule="").mode == "graph_tv"
+    # flat modes don't require hier fields
+    assert DistConfig(mode="graph").pod_topology == ""
+
+
+def test_hier_mode_rejects_podless_mesh():
+    """A hier coder on a mesh without the pod axis must fail at
+    construction with a message naming the missing axis, not inside a
+    traced collective."""
+    from repro.core.conjugates import make_task
+    from repro.core.distributed import DistConfig, DistributedSparseCoder
+    from repro.runtime import dist
+
+    res, reg = make_task("sparse_svd", gamma=0.1, delta=0.1)
+    mesh = dist.make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="pod"):
+        DistributedSparseCoder(
+            mesh, res, reg,
+            DistConfig(mode="hier", pod_topology="ring_metropolis"))

@@ -260,10 +260,128 @@ def test_graph_tv_parity_with_reference_engine():
 
 
 @pytest.mark.slow
+def test_hier_parity_with_reference_engine():
+    """mode="hier" on a (2, 1, 4) debug mesh — two pods of four agents —
+    matches diffusion_infer run under the dense Kronecker combiner
+    A_pod (x) A_model to 1e-4: the intra-pod + inter-pod ppermute schedules
+    composed inside one shard_map compute the same iterates as the dense
+    (8, 8) reference combine over the pod-major flattened agent axis.
+    Covers pod_gossip_every=2 (reference = the time-varying sequence
+    alternating A_pod (x) A_model with I (x) A_model) including a t0
+    phase offset, the pmax-over-BOTH-axes adaptive mu, hier growth
+    determinism, and hier_q8 staying in a quantization-sized neighborhood.
+    """
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.conjugates import make_task
+        from repro.core.distributed import DistributedSparseCoder, DistConfig, make_debug_mesh
+        from repro.core.dictionary import blocks_from_full
+        from repro.core.inference import DiffusionConfig, diffusion_infer, safe_diffusion_mu
+        from repro.core import topology as topo
+
+        res, reg = make_task("sparse_svd", gamma=0.05, delta=0.1)
+        PODS, N = 2, 4
+        mesh = make_debug_mesh(model=N, data=1, pods=PODS)  # the (2,1,4) mesh
+        M, K, B = 16, 32, 4
+        W = jax.random.normal(jax.random.PRNGKey(1), (M, K))
+        W = W / jnp.linalg.norm(W, axis=0)
+        x = jax.random.normal(jax.random.PRNGKey(2), (B, M))
+        # the flat reference network: PODS*N agents, pod-major atom blocks
+        W_blocks = blocks_from_full(W, PODS * N)
+        mu_ref = float(safe_diffusion_mu(res, reg, W_blocks))
+
+        # -- pod hop every iteration: static Kronecker combiner ------------
+        cfg = DistConfig(mode="hier", iters=300, mu=-1.0, topology="torus",
+                         pod_topology="ring_metropolis", topology_seed=7)
+        coder = DistributedSparseCoder(mesh, res, reg, cfg)
+        ht = coder.hier_topology
+        A = coder.combiner()
+        assert A.shape == (PODS * N, PODS * N)
+        np.testing.assert_allclose(A, np.kron(ht.A_pod, ht.A_model))
+        assert topo.is_doubly_stochastic(A)
+
+        Ws, xs = coder.shard(W, x)
+        # adaptive mu pmax'd over BOTH axes: all 8 agents identical, equal
+        # to the reference max-over-8-blocks bound.
+        mus = np.asarray(coder.adaptive_mu(Ws))
+        assert mus.shape == (PODS * N,)
+        assert float(np.ptp(mus)) == 0.0, mus
+        assert abs(float(mus[0]) - mu_ref) < 1e-7 * mu_ref, (mus[0], mu_ref)
+
+        nu_ref, y_ref, _ = diffusion_infer(
+            res, reg, W_blocks, x, jnp.asarray(A, jnp.float32),
+            jnp.ones((PODS * N,), jnp.float32), DiffusionConfig(iters=300),
+            mu=jnp.asarray(mu_ref, x.dtype))
+        nu_d, y_d = coder.solve_per_agent(Ws, xs)
+        nu_err = float(jnp.max(jnp.abs(jnp.asarray(nu_d) - nu_ref)))
+        y_err = float(jnp.max(jnp.abs(jnp.asarray(y_d) - y_ref)))
+        print("hier nu_err", nu_err, "y_err", y_err)
+        assert nu_err < 1e-4, nu_err
+        assert y_err < 1e-4, y_err
+
+        # -- pod_gossip_every=2: reference = alternating dense sequence ----
+        cfg2 = DistConfig(mode="hier", iters=300, mu=-1.0, topology="torus",
+                          pod_topology="ring_metropolis", topology_seed=7,
+                          pod_gossip_every=2)
+        coder2 = DistributedSparseCoder(mesh, res, reg, cfg2)
+        seq = coder2.combiner_sequence()
+        assert len(seq) == 2
+        np.testing.assert_allclose(seq[0], np.kron(ht.A_pod, ht.A_model))
+        np.testing.assert_allclose(seq[1], np.kron(np.eye(PODS), ht.A_model))
+        fn = coder2.hier_topology.as_callable()
+        nu_ref2, _, _ = diffusion_infer(
+            res, reg, W_blocks, x, fn,
+            jnp.ones((PODS * N,), jnp.float32), DiffusionConfig(iters=300),
+            mu=jnp.asarray(mu_ref, x.dtype))
+        nu_d2, _ = coder2.solve_per_agent(Ws, xs)
+        err2 = float(jnp.max(jnp.abs(jnp.asarray(nu_d2) - nu_ref2)))
+        print("hier k=2 nu_err", err2)
+        assert err2 < 1e-4, err2
+
+        # schedule-offset parity: t0=1 starts on a no-hop iteration
+        nu_ref3, _, _ = diffusion_infer(
+            res, reg, W_blocks, x, (lambda t: fn(t + 1)),
+            jnp.ones((PODS * N,), jnp.float32), DiffusionConfig(iters=300),
+            mu=jnp.asarray(mu_ref, x.dtype))
+        nu_d3, _ = coder2.solve_per_agent(Ws, xs, t0=1)
+        err3 = float(jnp.max(jnp.abs(jnp.asarray(nu_d3) - nu_ref3)))
+        print("hier k=2 t0=1 nu_err", err3)
+        assert err3 < 1e-4, err3
+
+        # -- hier_q8: int8 on the pod hop only — stays in a quantization-
+        #    sized neighborhood of the full-precision iterates
+        cfgq = DistConfig(mode="hier_q8", iters=300, mu=-1.0, topology="torus",
+                          pod_topology="ring_metropolis", topology_seed=7)
+        coderq = DistributedSparseCoder(mesh, res, reg, cfgq)
+        nu_q, _ = coderq.solve_per_agent(Ws, xs)
+        q_dev = float(jnp.max(jnp.abs(jnp.asarray(nu_q) - nu_ref)))
+        print("hier_q8 deviation", q_dev)
+        assert np.isfinite(np.asarray(nu_q)).all()
+        assert q_dev < 1e-2, q_dev
+
+        # -- growth: model axis only, deterministic, shard-preserving ------
+        g1, W2 = coder.grown(Ws, 1, jax.random.PRNGKey(0))
+        g2, _ = coder.grown(Ws, 1, jax.random.PRNGKey(9))  # key only seeds atoms
+        np.testing.assert_array_equal(g1.hier_topology.A_pod, ht.A_pod)
+        for a, b in zip(g1.combiner_sequence(), g2.combiner_sequence()):
+            np.testing.assert_array_equal(a, b)
+        # pod-major interleave keeps every old (pod, model) shard in place
+        kb = K // (PODS * N)
+        W2h = np.asarray(jax.device_get(W2))
+        Wh = np.asarray(W)
+        np.testing.assert_array_equal(W2h[:, :N * kb], Wh[:, :N * kb])
+        np.testing.assert_array_equal(
+            W2h[:, (N + 1) * kb:(2 * N + 1) * kb], Wh[:, N * kb:])
+        print("OK")
+    """, n_devices=12)
+    assert "OK" in out
+
+
+@pytest.mark.slow
 def test_adaptive_mu_identical_across_ranks_all_modes():
     """The mu regression across every adaptive mode: exact modes psum a
-    shared bound, ring/graph modes pmax the per-shard bounds — all ranks
-    agree."""
+    shared bound, ring/graph modes pmax the per-shard bounds, hier modes
+    pmax over BOTH the pod and model axes — all ranks agree."""
     out = _run("""
         import numpy as np, jax, jax.numpy as jnp
         from repro.core.conjugates import make_task
@@ -282,6 +400,21 @@ def test_adaptive_mu_identical_across_ranks_all_modes():
                 mesh, jax.sharding.PartitionSpec(None, "model")))
             mus = np.asarray(coder.adaptive_mu(Ws))
             print(mode, mus)
+            assert float(np.ptp(mus)) == 0.0, (mode, mus)
+
+        # hier modes: the same four agents arranged as 2 pods x 2, the mu
+        # pmax'd over both axes
+        hmesh = make_debug_mesh(model=2, data=1, pods=2)
+        for mode in ["hier", "hier_q8"]:
+            coder = DistributedSparseCoder(
+                hmesh, res, reg,
+                DistConfig(mode=mode, iters=10, mu=-1.0,
+                           pod_topology="ring_metropolis", pod_gossip_every=2))
+            Ws = jax.device_put(W, jax.sharding.NamedSharding(
+                hmesh, jax.sharding.PartitionSpec(None, ("pod", "model"))))
+            mus = np.asarray(coder.adaptive_mu(Ws))
+            print(mode, mus)
+            assert mus.shape == (4,)
             assert float(np.ptp(mus)) == 0.0, (mode, mus)
         print("OK")
     """)

@@ -147,6 +147,68 @@ def test_service_time_varying_schedule_clock_and_growth():
 
 
 @pytest.mark.slow
+def test_service_hier_schedule_clock_and_growth():
+    """A hier coder with pod_gossip_every=2 behind the service: the
+    schedule clock threads the pod-hop PHASE across micro-batches (the
+    coder is time-varying, so every execution claims its cfg.iters window),
+    stats carry the hier identity (pod_topology / pod_gossip_every /
+    effective mixing rate), and growth stays model-axis-only — the pod
+    count is fixed, the inter-pod combiner carried verbatim."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.conjugates import make_task
+        from repro.core.dictionary import init_dictionary
+        from repro.core.distributed import DistConfig, DistributedSparseCoder
+        from repro.data.synthetic import sparse_stream
+        from repro.runtime import dist
+        from repro.runtime.service import DictionaryService, ServiceConfig
+
+        res, reg = make_task("sparse_svd", gamma=0.25, delta=0.05)
+        mesh = dist.debug_mesh(model=2, data=1, pods=2)   # 4 agents, 2 pods
+        M, K0 = 16, 16  # 4 atoms per (pod, model) agent
+        W0 = init_dictionary(jax.random.PRNGKey(0), M, K0)
+        ITERS = 25  # odd vs period 2: the pod-hop phase actually alternates
+        coder = DistributedSparseCoder(
+            mesh, res, reg,
+            DistConfig(mode="hier", iters=ITERS, topology="ring_metropolis",
+                       pod_topology="ring_metropolis", pod_gossip_every=2,
+                       topology_seed=5))
+        assert coder.is_time_varying and coder.schedule_period == 2
+        X = sparse_stream(40, m=M, k_true=K0, seed=3)
+
+        svc = DictionaryService(coder, W0, ServiceConfig(micro_batch=8, mu_w=0.1))
+        with svc:
+            pre = [f.result(timeout=300) for f in [svc.submit(x) for x in X[:24]]]
+            info = svc.grow(1, jax.random.PRNGKey(4)).result(timeout=300)
+            post = [f.result(timeout=300) for f in [svc.submit(x) for x in X[24:]]]
+        stats = svc.stats()  # after stop(): workers joined, counters final
+
+        assert len(pre) == 24 and len(post) == 16
+        assert all(np.isfinite(nu).all() for nu, _ in pre + post)
+        # hier identity in stats
+        assert stats["topology"] == "hier:ring_metropolis+ring_metropolis"
+        assert stats["pod_topology"] == "ring_metropolis"
+        assert stats["pod_gossip_every"] == 2
+        assert stats["schedule"] is None and stats["schedule_period"] == 2
+        # the clock advanced in whole executed windows and the reported
+        # phase is where it stands now
+        assert svc._sched_t % ITERS == 0, svc._sched_t
+        assert svc._sched_t >= ITERS * (3 + stats["fit_steps"])
+        assert stats["active_schedule"] == svc._sched_t % 2
+        # growth: model axis only — pod count fixed, every pod gained one
+        # agent (K grows by pods * kb), combiner re-derived for 2x3
+        assert info["model_old"] == 2 and info["model_new"] == 3
+        assert info["k_old"] == K0 and info["k_new"] == K0 + 2 * 4
+        assert info["pod_topology"] == "ring_metropolis"
+        assert info["pod_gossip_every"] == 2
+        assert all(y.shape == (K0,) for _, y in pre)
+        assert all(y.shape == (K0 + 8,) for _, y in post)
+        print("OK")
+    """, n_devices=8)
+    assert "OK" in out
+
+
+@pytest.mark.slow
 def test_snapshot_double_buffer_isolation():
     """fit_batch on the live copy must never mutate a published snapshot:
     readers coding against the snapshot see identical results before and

@@ -66,6 +66,125 @@ def test_ring_weights_rejects_inadmissible_beta():
     assert topo.is_doubly_stochastic(topo.ring_weights(8, 0.0))
 
 
+# ---------------------------------------------------------------------------
+# hierarchical (two-level) combiners: A = A_pod (x) A_model
+# ---------------------------------------------------------------------------
+
+
+def test_hierarchical_kron_is_doubly_stochastic():
+    """The Kronecker composition of doubly-stochastic factors must be doubly
+    stochastic (the combiner condition for diffusion convergence), for every
+    factor-kind pairing."""
+    for pod_kind in ("ring_metropolis", "full", "erdos"):
+        for model_kind in ("torus", "ring", "erdos"):
+            ht = topo.make_hierarchical_topology(pod_kind, model_kind, 3, 4, seed=5)
+            assert topo.is_doubly_stochastic(ht.kron()), (pod_kind, model_kind)
+            assert topo.is_doubly_stochastic(ht.local_only())
+            assert ht.n_agents == 12
+    # pod-major indexing: A[i*N+j, k*N+l] = A_pod[i,k] * A_model[j,l]
+    ht = topo.make_hierarchical_topology("ring_metropolis", "torus", 3, 4)
+    K = ht.kron()
+    for i, k_ in [(0, 1), (2, 0)]:
+        for j, l_ in [(0, 3), (2, 1)]:
+            assert K[i * 4 + j, k_ * 4 + l_] == ht.A_pod[i, k_] * ht.A_model[j, l_]
+
+
+def test_hierarchical_mixing_rate_matches_dense_svd():
+    """`kron_mixing_rate` (computed from two factor SVDs) must equal
+    sigma_2 of the dense Kronecker product by `numpy.linalg.svd`, and the
+    gossip_every=1 effective rate degenerates to it."""
+    for pod_kind, model_kind, P_, N in [
+        ("ring_metropolis", "torus", 2, 4),
+        ("erdos", "erdos", 3, 5),
+        ("full", "ring", 4, 6),
+    ]:
+        ht = topo.make_hierarchical_topology(pod_kind, model_kind, P_, N, seed=9)
+        dense = np.linalg.svd(ht.kron(), compute_uv=False)[1]
+        assert abs(ht.mixing_rate() - dense) < 1e-10, (pod_kind, model_kind)
+        assert abs(ht.effective_mixing_rate() - dense) < 1e-10
+    # the composition can never mix faster than its slower level
+    ht = topo.make_hierarchical_topology("ring_metropolis", "torus", 4, 6)
+    assert abs(ht.mixing_rate()
+               - max(topo.mixing_rate(ht.A_pod), topo.mixing_rate(ht.A_model))) < 1e-12
+
+
+def test_hierarchical_gossip_every_sequence_and_windowed_rate():
+    """pod_gossip_every = k: the per-iteration sequence has period k, fires
+    the pod hop only at step 0 (then I (x) A_model), every entry stays
+    doubly stochastic, and the effective rate is the windowed contraction
+    of the sequence."""
+    ht = topo.make_hierarchical_topology("ring_metropolis", "torus", 2, 4,
+                                         gossip_every=3)
+    seq = ht.sequence()
+    assert ht.period == 3 and len(seq) == 3
+    np.testing.assert_allclose(seq[0], ht.kron())
+    for a in seq[1:]:
+        np.testing.assert_allclose(a, ht.local_only())
+    for t, a in enumerate(seq):
+        assert topo.is_doubly_stochastic(a), t
+    np.testing.assert_allclose(ht.at(3), seq[0])  # periodic indexing
+    assert topo.is_doubly_stochastic(ht.window_combiner())
+    assert abs(ht.effective_mixing_rate()
+               - topo.windowed_mixing_rate(seq)) < 1e-12
+
+
+def test_hierarchical_determinism_in_seed_and_level_separation():
+    """Pure function of the arguments: same seed => identical factors
+    (including erdos draws on both levels); the two levels draw from
+    SEPARATE seed streams, so an erdos pod graph and an erdos model graph
+    of the same size never coincide by construction."""
+    a = topo.make_hierarchical_topology("erdos", "erdos", 5, 5, seed=11)
+    b = topo.make_hierarchical_topology("erdos", "erdos", 5, 5, seed=11)
+    np.testing.assert_array_equal(a.A_pod, b.A_pod)
+    np.testing.assert_array_equal(a.A_model, b.A_model)
+    c = topo.make_hierarchical_topology("erdos", "erdos", 5, 5, seed=12)
+    assert a.A_pod.tobytes() != c.A_pod.tobytes() or \
+        a.A_model.tobytes() != c.A_model.tobytes()
+    # level separation at equal size
+    assert a.A_pod.tobytes() != a.A_model.tobytes()
+    # the model level draws from the RAW seed: it matches the flat static
+    # erdos network for the same (n, p, seed)
+    np.testing.assert_allclose(
+        a.A_model, topo.make_topology("erdos", 5, seed=11))
+
+
+def test_hierarchical_grown_is_model_axis_only_and_preserving():
+    """grown(): the pod combiner is carried verbatim (pod count fixed), the
+    erdos intra-pod adjacency keeps the old block, structured kinds
+    re-derive; deterministic across re-derivations."""
+    he = topo.make_hierarchical_topology("ring_metropolis", "erdos", 2, 6, seed=7)
+    g = he.grown(9)
+    assert (g.n_pods, g.n_model) == (2, 9)
+    np.testing.assert_array_equal(g.A_pod, he.A_pod)
+    np.testing.assert_array_equal(g.model_adjacency[:6, :6], he.model_adjacency)
+    g2 = he.grown(9)
+    np.testing.assert_array_equal(g.A_model, g2.A_model)
+    ht = topo.make_hierarchical_topology("ring_metropolis", "torus", 2, 6)
+    np.testing.assert_allclose(ht.grown(8).A_model, topo.make_topology("torus", 8))
+    with pytest.raises(ValueError):
+        he.grown(4)  # shrink is not growth
+
+
+def test_hierarchical_validation():
+    """Construction rejects unknown kinds, non-doubly-stochastic factors,
+    shape mismatches, and gossip_every < 1."""
+    with pytest.raises(KeyError):
+        topo.make_hierarchical_topology("hypercube", "torus", 2, 4)
+    with pytest.raises(KeyError):
+        topo.make_hierarchical_topology("ring", "moebius", 2, 4)
+    bad = np.array([[0.9, 0.2], [0.1, 0.8]])
+    with pytest.raises(ValueError):
+        topo.HierarchicalTopology(
+            pod_kind="bad", model_kind="ring", n_pods=2, n_model=2,
+            A_pod=bad, A_model=topo.ring_weights(2))
+    with pytest.raises(ValueError):
+        topo.HierarchicalTopology(
+            pod_kind="ring", model_kind="ring", n_pods=2, n_model=3,
+            A_pod=topo.ring_weights(2), A_model=topo.ring_weights(4))
+    with pytest.raises(ValueError):
+        topo.make_hierarchical_topology("ring", "ring", 2, 4, gossip_every=0)
+
+
 def test_torus_dims_factorization():
     """Most-square factorization shared by make_topology and the production
     torus schedule."""

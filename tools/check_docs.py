@@ -1,8 +1,8 @@
 #!/usr/bin/env python
 """Docs health check (the CI `docs-check` lane).
 
-Two gates, zero third-party dependencies (pure stdlib, AST-based — it never
-imports the package, so it runs without jax installed):
+Three gates, zero third-party dependencies (pure stdlib, AST-based — it
+never imports the package, so it runs without jax installed):
 
 1. **Link check** — every relative markdown link in `README.md` and
    `docs/*.md` must resolve to a file or directory in the repo (http(s)/
@@ -12,6 +12,12 @@ imports the package, so it runs without jax installed):
    a docstring: top-level functions/classes (per `__all__` when present,
    else every public name defined in the module) and the public methods of
    public classes.
+3. **CLI-flag check** — every `--flag` on a `serve_dict` command line
+   inside a fenced code block of `README.md` / `docs/*.md` must exist in
+   `launch/serve_dict.py`'s argparse (catches doc drift: a flag renamed or
+   removed in the CLI fails HERE, not in a reader's shell).  Only tokens
+   AFTER the `serve_dict` module name count — env prefixes like
+   `XLA_FLAGS=--xla_...` on the same command line are not CLI flags.
 
 Exit code 0 = clean; 1 = problems (each printed as `file: problem`).
 """
@@ -131,8 +137,64 @@ def check_docstrings() -> list:
     return problems
 
 
+SERVE_CLI = REPO / "src" / "repro" / "launch" / "serve_dict.py"
+
+_FENCE_RE = re.compile(r"```.*?\n(.*?)```", re.S)
+_FLAG_RE = re.compile(r"--[A-Za-z][A-Za-z0-9-]*")
+
+
+def serve_cli_flags() -> set:
+    """The `--flag` names `launch/serve_dict.py` actually accepts, read off
+    its `add_argument("--...")` calls by AST (never imported, so this runs
+    without jax installed)."""
+    tree = ast.parse(SERVE_CLI.read_text())
+    flags = set()
+    for node in ast.walk(tree):
+        if (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "add_argument"
+        ):
+            for arg in node.args:
+                if (
+                    isinstance(arg, ast.Constant)
+                    and isinstance(arg.value, str)
+                    and arg.value.startswith("--")
+                ):
+                    flags.add(arg.value)
+    return flags
+
+
+def check_serve_flags() -> list:
+    """Cross-check doc examples against the real CLI surface: every --flag
+    on a serve_dict command line in a fenced code block must be an argparse
+    flag of launch/serve_dict.py."""
+    known = serve_cli_flags()
+    problems = []
+    for md in DOC_FILES:
+        if not md.exists():
+            continue
+        for block in _FENCE_RE.findall(md.read_text()):
+            # join backslash-continued lines into one logical command, then
+            # look only at commands that invoke serve_dict
+            for line in block.replace("\\\n", " ").splitlines():
+                if "serve_dict" not in line:
+                    continue
+                # tokens BEFORE the module name (XLA_FLAGS=--... env
+                # prefixes, python -m) are not serve_dict flags
+                tail = line.split("serve_dict", 1)[1]
+                for m in _FLAG_RE.finditer(tail):
+                    if m.group(0) not in known:
+                        problems.append(
+                            f"{md.relative_to(REPO)}: fenced serve_dict "
+                            f"example uses {m.group(0)!r}, which is not an "
+                            f"argparse flag of launch/serve_dict.py"
+                        )
+    return problems
+
+
 def main() -> int:
-    problems = check_links() + check_docstrings()
+    problems = check_links() + check_docstrings() + check_serve_flags()
     for p in problems:
         print(f"DOCS-CHECK FAIL  {p}")
     if problems:
@@ -140,7 +202,8 @@ def main() -> int:
         return 1
     n_links = len(DOC_FILES)
     print(f"docs-check OK: {n_links} markdown files, "
-          f"{len(SEAM_MODULES)} seam modules clean")
+          f"{len(SEAM_MODULES)} seam modules clean, "
+          f"{len(serve_cli_flags())} serve_dict flags cross-checked")
     return 0
 
 

@@ -13,16 +13,21 @@ rows the EFFECTIVE two-level rate), bytes-on-wire per iteration per device
 wire bytes to target — the quantity the int8 error-feedback and FISTA modes
 exist to cut.  The static-vs-time-varying pairs (graph:ring_metropolis /
 graph:torus vs graph_tv:*) make the cost of a changing network directly
-readable; the hier rows additionally split the wire bytes PER AXIS (intra-
-pod model-axis vs inter-pod pod-axis), since the inter-pod hop is the
-bandwidth-constrained link the q8 format and pod_gossip_every stride exist
-to relieve.
+readable; the hierarchical rows (two-level hier and the 3-level chain row)
+additionally split the wire bytes PER LEVEL — `wire_bytes_per_iter_per_level`
+lists one entry per chain level, innermost (model) first — since the outer
+hops are the bandwidth-constrained links the q8 wire format and per-level
+gossip strides exist to relieve.  Two-level rows keep the legacy per-axis
+keys (model-axis / pod-axis) as aliases of levels 0 / 1.  The 3-level chain
+row (strides 1/2/4, q8 on both outer hops) runs on a (2, 2, 1, 2) debug
+mesh and is included in smoke mode so CI exercises the chain path.
 
 The output schema of the saved JSON is documented in docs/BENCHMARKS.md.
 
 Reduced-size mode: set BENCH_SMOKE=1 (the CI benchmark smoke job does) for
 a smaller problem, shorter sweep, a lower SNR target, and a single
-hierarchical row on the (2, 1, 2) pod mesh.
+two-level hierarchical row on the (2, 1, 2) pod mesh (plus the 3-level
+chain row).
 """
 
 from __future__ import annotations
@@ -50,6 +55,9 @@ mesh = make_debug_mesh(model=8, data=1)
 # (the path the CI bench-smoke lane exercises).
 hier_pods, hier_model = P["hier_mesh"]
 hier_mesh = make_debug_mesh(model=hier_model, data=1, pods=hier_pods)
+# The 3-level chain row runs on the (2, 2, 1, 2) debug mesh — axes
+# ("pod2", "pod", "data", "model"), 8 devices like the flat rows.
+chain_mesh = make_debug_mesh(model=2, data=1, pods=2, outer=(2,))
 M, K, B = P["M"], P["K"], P["B"]
 W = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (M, K)))
 W = W / jnp.linalg.norm(W, axis=0)
@@ -82,16 +90,24 @@ if not P["smoke"]:
     ROWS["hier_q8"] = DistConfig(
         mode="hier_q8", iters=1, topology="torus",
         pod_topology="ring_metropolis", pod_gossip_every=2)
+# chain: the 3-level (chip x pod x rack) Kronecker chain — fp32 model hop
+# every iteration, q8 pod hop every 2nd, q8 rack hop every 4th.  Included
+# in smoke mode so CI exercises the N-level path on every push.
+ROWS["chain:3level"] = DistConfig(
+    mode="chain", iters=1,
+    levels="ring_metropolis,ring_metropolis:2:q8,full:4:q8")
 
 out = {}
 for name, base_cfg in ROWS.items():
-    hier = base_cfg.mode in ("hier", "hier_q8")
-    row_mesh = hier_mesh if hier else mesh
+    hier = base_cfg.mode in ("hier", "hier_q8", "chain")
+    row_mesh = (chain_mesh if base_cfg.mode == "chain"
+                else hier_mesh if hier else mesh)
     mix = None
     reached = None
     per_iter = None
     per_model = None
     per_pod = None
+    per_level = None
     period = 1
     pod_every = 1
     for iters in P["sweep"]:
@@ -113,17 +129,22 @@ for name, base_cfg in ROWS.items():
             elif cfg.mode in ("ring", "ring_async"):
                 per_iter = 2 * b_loc * M * 4        # two ppermutes of fp32
             elif hier:
-                # per-axis split: fp32 intra-pod messages every iteration;
-                # inter-pod messages (fp32 for hier, int8+scales for
-                # hier_q8) only every pod_gossip_every-th iteration.
-                hs = coder.hier_gossip_schedule
-                per_model = hs.model_messages_per_iter * b_loc * M * 4
-                pod_payload = (
-                    b_loc * (M * 1 + 4) if cfg.mode == "hier_q8"
-                    else b_loc * M * 4
-                )
-                per_pod = hs.pod_messages_per_iter * pod_payload
-                per_iter = per_model + per_pod
+                # per-level split, innermost (model) level first: each
+                # level's messages are already averaged over its gossip
+                # stride by LevelPlan.messages_per_iter; q8 levels ship
+                # int8 payloads + one fp32 scale per row.
+                cs = coder.chain_gossip_schedule
+                per_level = [
+                    lvl.messages_per_iter * (
+                        b_loc * (M * 1 + 4) if lvl.quantized
+                        else b_loc * M * 4
+                    )
+                    for lvl in cs.levels
+                ]
+                per_iter = sum(per_level)
+                if len(per_level) == 2:
+                    # legacy per-axis aliases for the two-level rows
+                    per_model, per_pod = per_level
             else:  # graph families: one fp32 message per schedule round,
                    # averaged over the period for time-varying sequences
                 scheds = coder.gossip_schedules
@@ -142,6 +163,7 @@ for name, base_cfg in ROWS.items():
         "wire_bytes_per_iter_per_dev": per_iter,
         "wire_bytes_per_iter_model_axis": per_model,
         "wire_bytes_per_iter_pod_axis": per_pod,
+        "wire_bytes_per_iter_per_level": per_level,
         "wire_bytes_to_target": (reached * per_iter) if reached else None,
     }
 print(json.dumps(out))
@@ -176,12 +198,17 @@ def run(smoke: bool | None = None):
         emit(f"gossip/{mode}/iters_to_{params['target_db']:.0f}db", r["iters_to_target"])
         emit(f"gossip/{mode}/mixing_rate", f"{r['mixing_rate']:.4f}")
         if r["wire_bytes_per_iter_pod_axis"] is not None:
-            # hierarchical rows: the per-axis split (the pod axis is the
-            # bandwidth-constrained inter-pod link)
+            # two-level hierarchical rows: the legacy per-axis split (the
+            # pod axis is the bandwidth-constrained inter-pod link)
             emit(f"gossip/{mode}/wire_bytes_per_iter_model_axis",
                  r["wire_bytes_per_iter_model_axis"])
             emit(f"gossip/{mode}/wire_bytes_per_iter_pod_axis",
                  r["wire_bytes_per_iter_pod_axis"])
+        if r.get("wire_bytes_per_iter_per_level"):
+            # hierarchical family: one entry per chain level, innermost
+            # (model) level first
+            for i, v in enumerate(r["wire_bytes_per_iter_per_level"]):
+                emit(f"gossip/{mode}/wire_bytes_per_iter_level{i}", v)
         if r["wire_bytes_to_target"]:
             emit(f"gossip/{mode}/wire_bytes_to_{params['target_db']:.0f}db",
                  r["wire_bytes_to_target"],

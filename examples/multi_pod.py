@@ -22,6 +22,12 @@ Convergence tracks the EFFECTIVE mixing rate of the two-level composition
 (sigma_2(A_pod (x) A_model), windowed over the pod_gossip_every period) —
 run this to see SNR line up with it while the inter-pod byte count drops.
 
+The third table generalizes both knobs to an N-level Kronecker CHAIN
+(`mode="chain"` + `DistConfig.levels`): a 3-level chip (x) pod (x) rack
+network on a (2, 2, 1, 2) mesh, each level carrying its own combiner kind,
+gossip stride, and wire format — fp32 chip hop every iteration, q8 pod hop
+every 2nd, q8 rack hop every 4th.
+
   PYTHONPATH=src python examples/multi_pod.py
 """
 
@@ -102,6 +108,32 @@ def main():
         pod_bytes = hs.pod_messages_per_iter * payload
         print(f"{label:<30} {info['mixing_rate']:>8.4f} {pod_bytes:>10.0f} "
               f"{snrs[0]:>8.1f} {snrs[1]:>9.1f}")
+
+    # -- N-level chains: levels as data -------------------------------------
+    # Same 8 agents, now three levels deep: 2 chips/pod x 2 pods/rack x
+    # 2 racks on the (2, 2, 1, 2) mesh.  Each level of the spec string
+    # carries kind[:stride][:wire] innermost (chip/model) level first.
+    print()
+    chain_mesh = dist.debug_mesh(model=2, data=1, pods=2, outer=(2,))
+    print(f"{'3-level chain':<42} {'eff_mix':>8} {'snr@1600':>9}")
+    specs = [
+        ("ring_metropolis,ring_metropolis,full", "all hops every iter, fp32"),
+        ("ring_metropolis,ring_metropolis:2:q8,full:4:q8",
+         "q8 outer hops, strides 1/2/4"),
+    ]
+    for spec, label in specs:
+        coder = DistributedSparseCoder(
+            chain_mesh, res, reg,
+            DistConfig(mode="chain", iters=1600, levels=spec),
+        )
+        Ws, xs = coder.shard(W, x)
+        nu, _ = coder.solve(Ws, xs)
+        snr = float(snr_db(nu_ref, jnp.asarray(nu)))
+        info = coder.combiner_info()
+        print(f"{label:<42} {info['mixing_rate']:>8.4f} {snr:>9.1f}")
+        for lv in info["levels"]:
+            print(f"  level {lv['axis']:<6} kind={lv['kind']:<16} "
+                  f"n={lv['n']} stride={lv['gossip_every']} wire={lv['wire']}")
 
 
 if __name__ == "__main__":

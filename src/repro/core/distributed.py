@@ -50,28 +50,40 @@ Modes (gossip schedules):
               stream can keep advancing the network across micro-batches.
   graph_tv_q8 graph_tv over the int8 wire format (one quantization per
               iteration + error feedback, same as ring_q8/graph_q8).
-  hier        HIERARCHICAL (two-level, graph-of-graphs) diffusion for
-              multi-pod meshes: the network of agents is the (pod, model)
-              device grid and the combiner is the Kronecker composition
-              A_pod (x) A_model (core/topology.HierarchicalTopology —
-              DistConfig.topology picks the dense INTRA-POD kind over the
-              model axis, DistConfig.pod_topology the sparse INTER-POD
-              kind over the pod axis).  Each factor compiles to its own
-              ppermute schedule and the two run back-to-back inside one
-              shard_map body (runtime/dist.hier_combine); the dictionary
-              is atom-sharded over BOTH axes (pod-major) and the globally
-              safe adaptive mu is pmax'd over both.  With
-              DistConfig.pod_gossip_every = k > 1 the inter-pod hop fires
-              only every k-th iteration (gated on the traced index via
-              lax.cond — still one compiled program), the standard
-              sparse-communication trick for slow cross-pod links.
+  chain       HIERARCHICAL (N-level, graph-of-graphs) diffusion for
+              multi-hop meshes: the network of agents is the device grid
+              of every level axis (outermost-major) and the combiner is
+              the Kronecker chain A_{L-1} (x) ... (x) A_0 described by
+              DistConfig.levels — a list of `core/topology.LevelSpec`s,
+              INNERMOST (model) level first, each carrying its own
+              combiner kind, gossip stride, wire format (fp32 / q8 with
+              error feedback), and optionally one-step staleness on the
+              OUTERMOST hop (graph_async style, hiding long-haul
+              latency).  Every level compiles to its own ppermute
+              schedule and they run back-to-back inside one shard_map
+              body (runtime/dist.chain_combine), each hop gated on its
+              own stride by the traced iteration index (lax.cond — one
+              compiled program); the dictionary is atom-sharded over ALL
+              level axes (outermost-major) and the globally safe adaptive
+              mu is pmax'd over all of them.
+  hier        the two-level special case of `chain`, kept as the stable
+              multi-pod surface: DistConfig.topology picks the dense
+              INTRA-POD kind over the model axis, DistConfig.pod_topology
+              the sparse INTER-POD kind over the pod axis, and
+              DistConfig.pod_gossip_every > 1 fires the inter-pod hop
+              only every k-th iteration.  Runs THROUGH the chain solver
+              on the equivalent two-level `DistConfig.chain_levels()`.
   hier_q8     hier with the int8 wire format on the INTER-POD hop only
               (the bandwidth-constrained link); intra-pod messages stay
               full precision.  Error feedback as in ring_q8, updated only
               on iterations where the pod hop fires.
 
 Every mode returns per-device (nu, y) with nu converged to the same global
-optimum the reference engine (core/inference.py) computes.
+optimum the reference engine (core/inference.py) computes.  Mode
+capabilities (which modes quantize, vary in time, span multiple axes, or
+combine stale messages) live in ONE place — `MODE_REGISTRY` — consumed by
+`DistConfig.__post_init__` validation, the solver dispatch, and
+`combiner_info()`, so adding a mode means adding one registry row.
 """
 
 from __future__ import annotations
@@ -94,11 +106,52 @@ from repro.runtime.dist import shard_map
 
 Array = jax.Array
 
-RING_MODES = ("ring", "ring_q8", "ring_async")
-GRAPH_MODES = ("graph", "graph_q8", "graph_async")
-TV_MODES = ("graph_tv", "graph_tv_q8")
+@dataclasses.dataclass(frozen=True)
+class ModeCaps:
+    """One row of the mode registry: the capability flags of a gossip mode.
+
+    `family` names the solver branch ("exact" | "ring" | "graph" | "tv" |
+    "chain"); the flags say whether the mode quantizes its wire messages,
+    runs a time-varying combiner sequence, spans multiple agent axes
+    (hierarchical), or combines one-step-stale messages.  Validation,
+    dispatch, and reporting all read THESE flags instead of
+    pattern-matching mode strings."""
+
+    family: str
+    quantized: bool = False
+    time_varying: bool = False
+    hierarchical: bool = False
+    stale: bool = False
+
+
+# THE mode table: every mode the engine accepts, with its capabilities.
+# Adding a gossip mode = adding one row here (plus, for a new family, one
+# solver branch keyed on caps.family).
+MODE_REGISTRY = {
+    "exact": ModeCaps(family="exact"),
+    "exact_fista": ModeCaps(family="exact"),
+    "ring": ModeCaps(family="ring"),
+    "ring_q8": ModeCaps(family="ring", quantized=True),
+    "ring_async": ModeCaps(family="ring", stale=True),
+    "graph": ModeCaps(family="graph"),
+    "graph_q8": ModeCaps(family="graph", quantized=True),
+    "graph_async": ModeCaps(family="graph", stale=True),
+    "graph_tv": ModeCaps(family="tv", time_varying=True),
+    "graph_tv_q8": ModeCaps(family="tv", quantized=True, time_varying=True),
+    "hier": ModeCaps(family="chain", hierarchical=True),
+    "hier_q8": ModeCaps(family="chain", quantized=True, hierarchical=True),
+    "chain": ModeCaps(family="chain", hierarchical=True),
+}
+
+# Derived mode groups (kept as public names — tests, benchmarks, and docs
+# enumerate them).  HIER_MODES is the two-level deprecation shim; the
+# N-level "chain" mode shares its family but takes DistConfig.levels.
+RING_MODES = tuple(m for m, c in MODE_REGISTRY.items() if c.family == "ring")
+GRAPH_MODES = tuple(m for m, c in MODE_REGISTRY.items() if c.family == "graph")
+TV_MODES = tuple(m for m, c in MODE_REGISTRY.items() if c.family == "tv")
 HIER_MODES = ("hier", "hier_q8")
-MODES = ("exact", "exact_fista") + RING_MODES + GRAPH_MODES + TV_MODES + HIER_MODES
+CHAIN_MODES = tuple(m for m, c in MODE_REGISTRY.items() if c.family == "chain")
+MODES = tuple(MODE_REGISTRY)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -146,6 +199,19 @@ class DistConfig:
                        per-iteration combiner sequence has period k
                        (A_pod (x) A_model alternating with I (x) A_model),
                        which is how the reference parity models it.
+      levels           mode="chain" only: the N-level Kronecker-chain spec,
+                       a sequence of `core/topology.LevelSpec`s INNERMOST
+                       (model) level first — each level carries its own
+                       combiner kind, gossip stride, wire format, optional
+                       staleness (outermost level only), and optionally an
+                       explicit mesh axis name (default: level 0 ->
+                       model_axis, level 1 -> pod_axis, level i >= 2 ->
+                       "<pod_axis><i>").  A spec STRING is also accepted
+                       and parsed with `core/topology.parse_level_specs`
+                       (e.g. "torus,ring_metropolis:2:q8,ring:4:q8").  The
+                       hier modes ignore this field and shim their
+                       (topology, pod_topology, pod_gossip_every) trio
+                       onto a two-level chain — see `chain_levels()`.
       informed         "all" (every agent sees x) or "one" (only agent 0 —
                        global pod-major rank 0 in the hier modes — is
                        informed, the paper's |N_I| = 1 regime).
@@ -173,6 +239,8 @@ class DistConfig:
     # hier modes: inter-pod combiner kind (required) + sparse-gossip stride.
     pod_topology: str = ""  # e.g. "ring_metropolis"; "" = not configured
     pod_gossip_every: int = 1  # inter-pod hop every k iterations
+    # chain mode: N-level spec list (LevelSpecs or a parse_level_specs string)
+    levels: Tuple[topo.LevelSpec, ...] = ()
     informed: str = "all"  # "all" | "one" (only model-rank 0 sees x)
     model_axis: str = "model"
     data_axes: Tuple[str, ...] = ("data",)
@@ -187,11 +255,27 @@ class DistConfig:
 
         Misconfigurations that would otherwise only surface deep inside
         schedule compilation (or, worse, inside a traced shard_map body)
-        fail HERE with an actionable message: a time-varying mode needs a
-        schedule spec, a hierarchical mode needs an inter-pod combiner
-        kind, and the inter-pod gossip stride must be a positive count.
+        fail HERE with an actionable message (each requirement read off
+        the mode's `MODE_REGISTRY` capability row, not a mode-string
+        pattern): a time-varying mode needs a schedule spec, the hier shim
+        modes need an inter-pod combiner kind, mode="chain" needs a level
+        list, and the inter-pod gossip stride must be a positive count.
+        `levels` given as a spec string is parsed here
+        (`topology.parse_level_specs`); as a sequence it is normalized to
+        a tuple.
         """
-        if self.mode in TV_MODES and self.topology_schedule is None:
+        if isinstance(self.levels, str):
+            # "" means "not configured" (the CLI default), not a 1-level
+            # chain with an empty kind.
+            object.__setattr__(
+                self, "levels",
+                topo.parse_level_specs(self.levels) if self.levels else (),
+            )
+        else:
+            object.__setattr__(self, "levels", tuple(self.levels))
+        caps = MODE_REGISTRY.get(self.mode)
+        if caps is not None and caps.time_varying \
+                and self.topology_schedule is None:
             raise ValueError(
                 f"mode={self.mode!r} needs a combiner sequence but "
                 f"topology_schedule is None; pass a "
@@ -206,11 +290,63 @@ class DistConfig:
                 f"core/topology.make_topology kind (e.g. "
                 f"pod_topology='ring_metropolis') for the pod axis"
             )
+        if self.mode == "chain" and not self.levels:
+            raise ValueError(
+                "mode='chain' runs an N-level Kronecker chain but levels is "
+                "empty; pass levels=[LevelSpec(...), ...] (innermost/model "
+                "level first) or a parse_level_specs string like "
+                "'torus,ring_metropolis:2:q8,ring:4:q8'"
+            )
+        if self.levels and self.mode != "chain":
+            raise ValueError(
+                f"levels is only consumed by mode='chain' (got "
+                f"mode={self.mode!r}); the hier modes configure their "
+                f"two-level chain via topology/pod_topology/"
+                f"pod_gossip_every instead"
+            )
         if self.pod_gossip_every < 1:
             raise ValueError(
                 f"pod_gossip_every must be >= 1 (the inter-pod hop fires "
                 f"every k-th iteration), got {self.pod_gossip_every}"
             )
+
+    def chain_levels(self) -> Tuple[topo.LevelSpec, ...]:
+        """The effective Kronecker-chain level list, innermost-first.
+
+        mode="chain" returns `levels` verbatim; the hier modes return the
+        two-level DEPRECATION SHIM — model level from `topology`, pod
+        level from `pod_topology` with the `pod_gossip_every` stride and
+        the q8 wire for hier_q8 — so the legacy trio and a hand-built
+        two-level `levels` config compile to bit-identical schedules.
+        Flat modes return ()."""
+        caps = MODE_REGISTRY.get(self.mode)
+        if caps is None or not caps.hierarchical:
+            return ()
+        if self.mode == "chain":
+            return self.levels
+        return (
+            topo.LevelSpec(kind=self.topology, axis=self.model_axis),
+            topo.LevelSpec(
+                kind=self.pod_topology,
+                gossip_every=self.pod_gossip_every,
+                wire="q8" if MODE_REGISTRY[self.mode].quantized else "fp32",
+                axis=self.pod_axis,
+            ),
+        )
+
+    def level_axis(self, i: int) -> str:
+        """Mesh axis name of chain level i: the level's explicit `axis`
+        when set, else the default naming — level 0 gossips over
+        `model_axis`, level 1 over `pod_axis`, level i >= 2 over
+        "<pod_axis><i>" (e.g. "pod2")."""
+        specs = self.chain_levels()
+        if specs and specs[i].axis:
+            return specs[i].axis
+        if i == 0:
+            return self.model_axis
+        if i == 1:
+            return self.pod_axis
+        return f"{self.pod_axis}{i}"
 
 
 # ---------------------------------------------------------------------------
@@ -345,6 +481,10 @@ class DistributedSparseCoder:
         self._gscheds: Optional[Tuple[dist.GraphSchedule, ...]] = None
         self._htopo: Optional[topo.HierarchicalTopology] = None
         self._hsched: Optional[dist.HierSchedule] = None
+        self._chain: Optional[topo.KroneckerChain] = None
+        self._csched: Optional[dist.ChainSchedule] = None
+        self._level_axes: Tuple[str, ...] = ()
+        caps = MODE_REGISTRY[cfg.mode]
         n_model = dist.axis_sizes(mesh)[ax]
         if cfg.mode in GRAPH_MODES:
             if cfg.topology == "erdos":
@@ -386,38 +526,58 @@ class DistributedSparseCoder:
             self._gscheds = dist.graph_schedule_sequence(
                 self._tsched.combiners, self._tsched.kinds
             )
-        elif cfg.mode in HIER_MODES:
+        elif caps.hierarchical:
             sizes = dist.axis_sizes(mesh)
-            if cfg.pod_axis not in sizes:
-                raise ValueError(
-                    f"mode={cfg.mode!r} gossips over a {cfg.pod_axis!r} axis "
-                    f"the mesh does not have (axes: {tuple(mesh.axis_names)});"
-                    f" build a multi-pod mesh, e.g. dist.debug_mesh(model=N, "
-                    f"data=D, pods=P) or dist.production_mesh(multi_pod=True)"
-                )
-            n_pods = sizes[cfg.pod_axis]
-            if grown_from is not None and grown_from._htopo is not None:
-                # growth is model-axis only: the pod combiner is carried
-                # verbatim, the intra-pod one re-derived (erdos grown
+            level_specs = cfg.chain_levels()
+            self._level_axes = tuple(
+                cfg.level_axis(i) for i in range(len(level_specs))
+            )
+            for axis in self._level_axes:
+                if axis not in sizes:
+                    raise ValueError(
+                        f"mode={cfg.mode!r} gossips over a {axis!r} axis "
+                        f"the mesh does not have (axes: "
+                        f"{tuple(mesh.axis_names)}); build a mesh with one "
+                        f"axis per chain level, e.g. dist.debug_mesh("
+                        f"model=N, data=D, pods=P) or dist.make_mesh(...)"
+                    )
+            level_ns = tuple(sizes[axis] for axis in self._level_axes)
+            if grown_from is not None and grown_from._chain is not None:
+                # growth is model-axis only: every outer factor is carried
+                # verbatim, the innermost one re-derived (erdos grown
                 # neighborhood-preservingly) at the larger size.
-                self._htopo = grown_from._htopo.grown(n_model)
+                self._chain = grown_from._chain.grown(n_model)
             else:
-                self._htopo = topo.make_hierarchical_topology(
-                    cfg.pod_topology, cfg.topology, n_pods, n_model,
+                self._chain = topo.make_kronecker_chain(
+                    level_specs, level_ns,
                     p=cfg.topology_p, seed=cfg.topology_seed, beta=cfg.beta,
+                )
+            self._csched = dist.chain_schedule(self._chain, self._level_axes)
+            if cfg.mode in HIER_MODES:
+                # The legacy two-level surface, rebuilt FROM the chain
+                # factors/schedules so the shim is bit-identical to a
+                # hand-built two-level chain by construction.
+                self._htopo = topo.HierarchicalTopology(
+                    pod_kind=cfg.pod_topology, model_kind=cfg.topology,
+                    n_pods=level_ns[1], n_model=level_ns[0],
+                    A_pod=self._chain.combiners[1],
+                    A_model=self._chain.combiners[0],
+                    gossip_every=cfg.pod_gossip_every,
+                    p=cfg.topology_p, seed=cfg.topology_seed, beta=cfg.beta,
+                    model_adjacency=self._chain.adjacencies[0],
+                )
+                self._hsched = dist.HierSchedule(
+                    model=self._csched.levels[0].sched,
+                    pod=self._csched.levels[1].sched,
                     gossip_every=cfg.pod_gossip_every,
                 )
-            self._hsched = dist.hier_schedule(
-                self._htopo.A_pod, self._htopo.A_model,
-                pod_kind=cfg.pod_topology, model_kind=cfg.topology,
-                gossip_every=cfg.pod_gossip_every,
-            )
         # The agent axes the dictionary (and the per-agent outputs) shard
-        # over: (pod, model) pod-major for the hierarchical modes — device
-        # (i, j) of the pod x model grid IS agent i*N + j of the Kronecker
-        # network — and just (model,) for every flat mode.
+        # over: the level axes OUTERMOST-FIRST for the hierarchical family
+        # — device (i, ..., j) of the (outer, ..., model) grid IS the flat
+        # outermost-major agent of the Kronecker chain (pod-major in the
+        # two-level case) — and just (model,) for every flat mode.
         self._agent_axes: Tuple[str, ...] = (
-            (cfg.pod_axis, ax) if cfg.mode in HIER_MODES else (ax,)
+            tuple(reversed(self._level_axes)) if caps.hierarchical else (ax,)
         )
         agent_spec = (
             self._agent_axes if len(self._agent_axes) > 1 else self._agent_axes[0]
@@ -486,16 +646,19 @@ class DistributedSparseCoder:
     def _iter_setup(self, W_loc: Array, x_loc: Array):
         """Shared per-rank constants: total agent count, this agent's flat
         rank, and the informed-agent weighting (theta, |N_I|) of paper
-        Eq. 29.  For the hierarchical modes the network spans BOTH the pod
-        and model axes: the count reduces over both and the flat rank is
-        pod-major (pod_rank * N + model_rank), matching the Kronecker
-        combiner's agent ordering."""
+        Eq. 29.  For the hierarchical family the network spans EVERY level
+        axis: the count reduces over all of them and the flat rank is
+        outermost-major (fold of rank * axis_size + axis_index over the
+        agent axes, pod-major in the two-level case), matching the
+        Kronecker chain's agent ordering."""
         res, reg, cfg = self.res, self.reg, self.cfg
         ax = cfg.model_axis
         n_model = jax.lax.psum(1, self._agent_axes)
-        if cfg.mode in HIER_MODES:
-            nm = dist.axis_sizes(self.mesh)[ax]
-            rank = jax.lax.axis_index(cfg.pod_axis) * nm + jax.lax.axis_index(ax)
+        if len(self._agent_axes) > 1:
+            sizes = dist.axis_sizes(self.mesh)
+            rank = jnp.asarray(0, jnp.int32)
+            for axis in self._agent_axes:  # outermost-first
+                rank = rank * sizes[axis] + jax.lax.axis_index(axis)
         else:
             rank = jax.lax.axis_index(ax)
         if cfg.informed == "all":
@@ -640,46 +803,27 @@ class DistributedSparseCoder:
                     length=cfg.iters,
                 )
 
-        elif cfg.mode in HIER_MODES:  # two-level (pod x model) gossip
+        elif MODE_REGISTRY[cfg.mode].hierarchical:  # N-level chain gossip
             mu = self._mu_for(W_loc)
-            hs = self._hsched
-            pod_ax = cfg.pod_axis
+            cs = self._csched
             local_grad = self._local_grad_fn(W_loc, x_loc, theta, n_inf, n_model)
             t_start = jnp.asarray(t0, jnp.int32)
+            # ONE branch for the whole family (hier, hier_q8, chain): each
+            # level's hop is gated on its own stride by the traced t, q8
+            # error feedback and stale-round messages ride the per-level
+            # chain state (empty slots for levels that need neither, so the
+            # carry pytree is as small as the config demands).
+            state0 = dist.chain_state_init(nu0, cs)
 
-            if cfg.mode == "hier":
+            def step(carry, _):
+                nu, st, t = carry
+                psi = nu - mu * local_grad(nu)
+                comb, st = dist.chain_combine(psi, cs, t, st)
+                return (res.project_dual(comb), st, t + 1), None
 
-                def step(carry, _):
-                    nu, t = carry
-                    psi = nu - mu * local_grad(nu)
-                    # intra-pod combine over `model`, then the inter-pod hop
-                    # over `pod` (gated on t when pod_gossip_every > 1) —
-                    # together one application of A_pod (x) A_model.
-                    nu = res.project_dual(
-                        dist.hier_combine(psi, ax, pod_ax, hs, t)
-                    )
-                    return (nu, t + 1), None
-
-                (nu, _), _ = jax.lax.scan(
-                    step, (nu0, t_start), None, length=cfg.iters
-                )
-
-            else:  # hier_q8: int8 wire format on the inter-pod hop only
-
-                def step(carry, _):
-                    nu, err, t = carry
-                    psi = nu - mu * local_grad(nu)
-                    # error feedback lives with the pod hop: err only
-                    # updates on iterations where that hop actually fires.
-                    comb, err = dist.hier_combine_quantized(
-                        psi, err, ax, pod_ax, hs, t
-                    )
-                    return (res.project_dual(comb), err, t + 1), None
-
-                (nu, _, _), _ = jax.lax.scan(
-                    step, (nu0, jnp.zeros_like(nu0), t_start), None,
-                    length=cfg.iters,
-                )
+            (nu, _, _), _ = jax.lax.scan(
+                step, (nu0, state0, t_start), None, length=cfg.iters
+            )
 
         else:  # graph family: gossip under the compiled combiner schedule
             mu = self._mu_for(W_loc)
@@ -846,12 +990,13 @@ class DistributedSparseCoder:
         For the time-varying modes this is the effective ONE-PERIOD window
         product A_0 A_1 ... A_{P-1} (itself doubly stochastic) — the
         per-step sequence is `combiner_sequence()`.  For the hierarchical
-        modes it is the dense Kronecker composition A_pod (x) A_model on
-        the P*N-agent network (the window product over one pod_gossip_every
-        period when that is > 1).  Used by the ref<->dist parity tests, the
-        gossip benchmarks, and service stats."""
-        if self._htopo is not None:
-            return self._htopo.window_combiner()
+        family it is the dense Kronecker chain on the prod(ns)-agent
+        network (the window product over one stride-LCM period when any
+        stride is > 1; A_pod (x) A_model in the two-level case).  Used by
+        the ref<->dist parity tests, the gossip benchmarks, and service
+        stats."""
+        if self._chain is not None:
+            return self._chain.window_combiner()
         if self._tsched is not None:
             return self._tsched.window_combiner()
         if self._A is not None:
@@ -863,15 +1008,54 @@ class DistributedSparseCoder:
 
     def combiner_sequence(self) -> Tuple[np.ndarray, ...]:
         """The per-iteration combiner sequence A_0 .. A_{P-1} (period P = 1
-        for every static mode; P = pod_gossip_every for the hierarchical
-        modes, whose sequence alternates A_pod (x) A_model with
-        I (x) A_model) — the determinism tests compare this across engine
+        for every static mode; P = the stride LCM for the hierarchical
+        family, whose sequence gates each level's factor on its own stride
+        — alternating A_pod (x) A_model with I (x) A_model in the
+        two-level case) — the determinism tests compare this across engine
         constructions and grown() restarts."""
-        if self._htopo is not None:
-            return tuple(np.array(a) for a in self._htopo.sequence())
+        if self._chain is not None:
+            return tuple(np.array(a) for a in self._chain.sequence())
         if self._tsched is not None:
             return tuple(np.array(a) for a in self._tsched.combiners)
         return (self.combiner(),)
+
+    def _levels_info(self) -> list:
+        """Per-level metadata rows (kind, axis, n, gossip_every, wire,
+        stale), innermost-first: one row per chain level for the
+        hierarchical family, and the degenerate single-level view of every
+        flat mode (wire/stale read off the mode's registry caps) — so
+        stats and growth events report a uniform `levels` schema."""
+        if self._chain is not None:
+            return [
+                {
+                    "kind": spec.kind,
+                    "axis": lvl.axis,
+                    "n": int(n),
+                    "gossip_every": spec.gossip_every,
+                    "wire": spec.wire,
+                    "stale": spec.stale,
+                }
+                for spec, n, lvl in zip(
+                    self._chain.specs, self._chain.ns, self._csched.levels
+                )
+            ]
+        caps = MODE_REGISTRY[self.cfg.mode]
+        if caps.family == "tv":
+            kind = f"tv:{self._tsched.spec}"
+        elif caps.family == "graph":
+            kind = self.cfg.topology
+        elif caps.family == "ring":
+            kind = "ring"
+        else:
+            kind = "full"
+        return [{
+            "kind": kind,
+            "axis": self.cfg.model_axis,
+            "n": int(dist.axis_sizes(self.mesh)[self.cfg.model_axis]),
+            "gossip_every": 1,
+            "wire": "q8" if caps.quantized else "fp32",
+            "stale": caps.stale,
+        }]
 
     def combiner_info(self) -> dict:
         """Topology label + mixing rate for stats/benchmark reporting.
@@ -879,23 +1063,37 @@ class DistributedSparseCoder:
         mixing_rate is the gossip contraction factor: the second-largest
         singular value of A for static modes, the per-step WINDOWED rate
         sigma_2(window product)^(1/P) for the time-varying modes, and the
-        EFFECTIVE two-level rate (sigma_2(A_pod (x) A_model), windowed over
-        the pod_gossip_every period when that is > 1) for the hierarchical
-        modes.  Also carries `schedule` (the spec, None when static),
-        `schedule_period` (1 when static; pod_gossip_every for hier), and
-        the hier identity `pod_topology` / `pod_gossip_every` (None / 1 for
-        every flat mode)."""
-        if self.cfg.mode in HIER_MODES:
-            return {
+        EFFECTIVE chain rate (sigma_2 of the all-hops composition,
+        windowed over the stride-LCM period when any stride is > 1) for
+        the hierarchical family.  Also carries `schedule` (the spec, None
+        when static), `schedule_period` (1 when static; the stride LCM for
+        the hierarchical family), the hier identity `pod_topology` /
+        `pod_gossip_every` (None / 1 for every flat mode and for
+        mode="chain", whose level data lives in `levels`), and `levels` —
+        the uniform per-level metadata rows of `_levels_info` (every mode,
+        single-entry for flat ones)."""
+        caps = MODE_REGISTRY[self.cfg.mode]
+        if caps.hierarchical:
+            if self.cfg.mode in HIER_MODES:
                 # label reads intra+inter: hier:<model kind>+<pod kind>
-                "topology": f"hier:{self.cfg.topology}+{self.cfg.pod_topology}",
-                "mixing_rate": self._htopo.effective_mixing_rate(),
+                label = f"hier:{self.cfg.topology}+{self.cfg.pod_topology}"
+                pod_topology = self.cfg.pod_topology
+                pod_gossip_every = self.cfg.pod_gossip_every
+            else:
+                label = "chain:" + "+".join(
+                    s.kind for s in self._chain.specs
+                )
+                pod_topology, pod_gossip_every = None, 1
+            return {
+                "topology": label,
+                "mixing_rate": self._chain.effective_mixing_rate(),
                 "schedule": None,
-                "schedule_period": self._htopo.period,
-                "pod_topology": self.cfg.pod_topology,
-                "pod_gossip_every": self.cfg.pod_gossip_every,
+                "schedule_period": self._chain.period,
+                "pod_topology": pod_topology,
+                "pod_gossip_every": pod_gossip_every,
+                "levels": self._levels_info(),
             }
-        if self.cfg.mode in TV_MODES:
+        if caps.family == "tv":
             return {
                 "topology": f"tv:{self._tsched.spec}",
                 "mixing_rate": self._tsched.windowed_mixing_rate(),
@@ -903,10 +1101,11 @@ class DistributedSparseCoder:
                 "schedule_period": self._tsched.period,
                 "pod_topology": None,
                 "pod_gossip_every": 1,
+                "levels": self._levels_info(),
             }
-        if self.cfg.mode in GRAPH_MODES:
+        if caps.family == "graph":
             label = self.cfg.topology
-        elif self.cfg.mode in RING_MODES:
+        elif caps.family == "ring":
             label = "ring"
         else:
             label = "full"
@@ -917,6 +1116,7 @@ class DistributedSparseCoder:
             "schedule_period": 1,
             "pod_topology": None,
             "pod_gossip_every": 1,
+            "levels": self._levels_info(),
         }
 
     @property
@@ -956,26 +1156,44 @@ class DistributedSparseCoder:
         return self._hsched
 
     @property
+    def chain(self) -> Optional[topo.KroneckerChain]:
+        """The validated N-level Kronecker chain driving a hierarchical
+        coder (hier/hier_q8/chain modes; None for every flat mode).  The
+        hier modes see their two-level topology here as a length-2 chain,
+        innermost (model) level first."""
+        return self._chain
+
+    @property
+    def chain_gossip_schedule(self) -> Optional[dist.ChainSchedule]:
+        """The compiled per-level ppermute plan (hierarchical family only):
+        one `LevelPlan` per chain level, innermost-first, each carrying its
+        axis name, `GraphSchedule`, stride, and wire format — benchmarks
+        read per-level message counts off it."""
+        return self._csched
+
+    @property
     def schedule_period(self) -> int:
         """Length of the per-iteration combiner sequence before it repeats:
-        the `TopologySchedule` period for the time-varying modes,
-        pod_gossip_every for the hierarchical modes, 1 for every static
+        the `TopologySchedule` period for the time-varying modes, the LCM
+        of level strides for the hierarchical family, 1 for every static
         mode.  The service's schedule clock reduces its offset modulo
         this."""
         if self._tsched is not None:
             return self._tsched.period
-        if self._htopo is not None:
-            return self._htopo.period
+        if self._chain is not None:
+            return self._chain.period
         return 1
 
     @property
     def is_time_varying(self) -> bool:
         """Whether this coder's combiner changes per iteration (the service
         threads a persistent schedule offset t0 through solve/fit iff so).
-        True for the graph_tv modes, and for the hier modes whenever
-        pod_gossip_every > 1 (the inter-pod hop phase then matters)."""
-        return self.cfg.mode in TV_MODES or (
-            self.cfg.mode in HIER_MODES and self.cfg.pod_gossip_every > 1
+        True for the graph_tv modes, and for the hierarchical family
+        whenever the stride LCM exceeds 1 (some hop's firing phase then
+        matters)."""
+        caps = MODE_REGISTRY[self.cfg.mode]
+        return caps.time_varying or (
+            caps.hierarchical and self.schedule_period > 1
         )
 
     def shard(self, W: Array, x: Array) -> Tuple[Array, Array]:
@@ -1018,12 +1236,13 @@ class DistributedSparseCoder:
         kinds re-derive at the larger size.  Time-varying coders re-derive
         the whole SEQUENCE (deterministically in topology_seed).
 
-        Hierarchical coders grow on the MODEL axis only (the pod count is
-        fixed at mesh construction — inter-pod links are physical): every
-        pod gains `extra_model` fresh agents, the inter-pod combiner is
-        carried verbatim, and because the atom layout is pod-major the
-        fresh shards are interleaved per pod — each existing (pod, model)
-        agent keeps exactly the atom shard it already owned.
+        Hierarchical coders grow on the innermost MODEL level only (the
+        outer-level agent counts are fixed at mesh construction — inter-pod
+        and inter-rack links are physical): every outer-level group gains
+        `extra_model` fresh agents, all outer combiners are carried
+        verbatim, and because the atom layout is outermost-major the fresh
+        shards are interleaved per group — each existing agent keeps
+        exactly the atom shard it already owned.
         """
         if extra_model <= 0:
             raise ValueError(f"extra_model must be positive, got {extra_model}")
@@ -1039,20 +1258,21 @@ class DistributedSparseCoder:
             new_mesh, self.res, self.reg, self.cfg, grown_from=self
         )
         m, k = W.shape
-        if self.cfg.mode in HIER_MODES:
-            n_pods = sizes[self.cfg.pod_axis]
-            shards = n_pods * n_old
+        if self._chain is not None:
+            outer = int(np.prod(self._chain.ns[1:])) if self._chain.n_levels > 1 else 1
+            shards = outer * n_old
             if k % shards:
                 raise ValueError(
-                    f"K={k} not divisible by pod*model={shards}"
+                    f"K={k} not divisible by outer*model={shards}"
                 )
             kb = k // shards
-            # Pod-major atom layout: pod i owns columns [i*n_old*kb,
-            # (i+1)*n_old*kb).  Append each pod's fresh atoms NEXT TO its
-            # existing block so old shards stay with their owners.
-            W_host = np.asarray(jax.device_get(W)).reshape(m, n_pods, n_old * kb)
+            # Outermost-major atom layout: outer group i owns columns
+            # [i*n_old*kb, (i+1)*n_old*kb).  Append each group's fresh
+            # atoms NEXT TO its existing block so old shards stay with
+            # their owners.
+            W_host = np.asarray(jax.device_get(W)).reshape(m, outer, n_old * kb)
             parts = []
-            for i, kp in enumerate(jax.random.split(key, n_pods)):
+            for i, kp in enumerate(jax.random.split(key, outer)):
                 fresh = init_dictionary(
                     kp, m, kb * int(extra_model), nonneg=self.reg.nonneg
                 )

@@ -16,12 +16,15 @@ Three regimes live here:
   is the regime of Daneshmand et al. (arXiv:1612.07335, arXiv:1808.05933):
   the network changes every iteration, and convergence only needs each
   A_t doubly stochastic plus joint connectivity over a window;
-* **hierarchical** (two-level) combiners — `HierarchicalTopology`, the
-  Kronecker composition A_pod (x) A_model of a sparse inter-pod combiner
-  with a dense intra-pod one (graph-of-graphs: fast local neighborhoods
-  composed with slowly-mixing long-haul links, the multi-pod regime of
-  arXiv:1612.07335 / arXiv:1304.3568), optionally firing the inter-pod
-  hop only every k-th iteration.
+* **hierarchical** (N-level) combiners — `KroneckerChain`, the Kronecker
+  composition A_{L-1} (x) ... (x) A_1 (x) A_0 of per-level combiners
+  described by a validated `LevelSpec` list (innermost model level first).
+  Each level carries its own combiner kind, gossip stride, and wire
+  format (graph-of-graphs: fast local neighborhoods composed with
+  slowly-mixing long-haul links, the multi-hop regime of
+  arXiv:1612.07335 / arXiv:1304.3568).  `HierarchicalTopology` is the
+  two-level special case, kept as the stable public surface of the
+  `hier`/`hier_q8` modes and implemented by delegation to a chain.
 
 Elastic growth is topology-aware: `erdos_renyi_grow` enlarges a random
 graph WITHOUT resampling the edges between existing agents, so growth
@@ -32,6 +35,7 @@ never rewires the neighborhoods the old agents already use
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Optional, Sequence, Tuple
 
 import numpy as np
@@ -416,24 +420,342 @@ def _adjacency_for(kind: str, n: int) -> Optional[np.ndarray]:
 
 
 # ---------------------------------------------------------------------------
-# Hierarchical (two-level) combiners: A = A_pod (x) A_model
+# Hierarchical (N-level) combiners: A = A_{L-1} (x) ... (x) A_1 (x) A_0
 # (graph-of-graphs — Daneshmand et al. arXiv:1612.07335 and Chainais-Richard
 # arXiv:1304.3568 analyze exactly this sparse-long-haul + dense-local regime)
 # ---------------------------------------------------------------------------
 
+LEVEL_WIRES = ("fp32", "q8")
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelSpec:
+    """Per-level description of one hop of a Kronecker chain — pure config
+    (no sizes, no matrices), so the same spec list can describe meshes of
+    different shapes.
+
+    Fields:
+      kind          combiner kind of this level (any `make_topology` kind)
+      gossip_every  fire this level's hop only at iterations t with
+                    t % gossip_every == 0 (the sparse-communication trick
+                    for slow links; 1 = every iteration)
+      wire          wire format of this level's messages: "fp32" (full
+                    precision) or "q8" (int8 + per-row scale with error
+                    feedback, as in ring_q8/hier_q8)
+      stale         combine with one-step-stale messages on this level so
+                    its sends overlap the next local gradient (graph_async
+                    style) — allowed on the OUTERMOST level only, where the
+                    long-haul latency it hides lives
+      axis          mesh axis name this level gossips over (None = the
+                    engine's default naming: level 0 -> model axis, level 1
+                    -> "pod", level i>=2 -> "pod<i>")
+    """
+
+    kind: str
+    gossip_every: int = 1
+    wire: str = "fp32"
+    stale: bool = False
+    axis: Optional[str] = None
+
+    def __post_init__(self):
+        """Validate stride and wire format (kind names are checked where
+        matrices are generated, so explicit-matrix chains stay buildable)."""
+        if self.gossip_every < 1:
+            raise ValueError(
+                f"gossip_every must be >= 1, got {self.gossip_every}"
+            )
+        if self.wire not in LEVEL_WIRES:
+            raise ValueError(
+                f"unknown wire format {self.wire!r} (options: {LEVEL_WIRES})"
+            )
+
+
+def parse_level_specs(spec: str) -> Tuple[LevelSpec, ...]:
+    """Parse a comma-separated chain spec string into `LevelSpec`s.
+
+    One level per comma, INNERMOST (model) level first, each level
+    ``kind[:stride][:wire][:stale]`` — e.g.
+    ``"torus,ring_metropolis:2:q8,ring:4:q8:stale"`` is a 3-level chain:
+    dense intra-chip torus every iteration, q8 pod ring every 2nd,
+    one-step-stale q8 rack ring every 4th.  Tokens after the kind may
+    appear in any order (an integer is the stride, "fp32"/"q8" the wire
+    format, "stale" the staleness flag).
+    """
+    levels = []
+    for part in spec.split(","):
+        tokens = [t.strip() for t in part.strip().split(":") if t.strip()]
+        if not tokens:
+            raise ValueError(f"empty level in chain spec {spec!r}")
+        kind, stride, wire, stale = tokens[0], 1, "fp32", False
+        for tok in tokens[1:]:
+            if tok.lstrip("-").isdigit():
+                stride = int(tok)
+            elif tok in LEVEL_WIRES:
+                wire = tok
+            elif tok == "stale":
+                stale = True
+            else:
+                raise ValueError(
+                    f"unknown token {tok!r} in level {part.strip()!r} of "
+                    f"chain spec {spec!r} (expected an integer stride, "
+                    f"one of {LEVEL_WIRES}, or 'stale')"
+                )
+        levels.append(LevelSpec(kind=kind, gossip_every=stride, wire=wire,
+                                stale=stale))
+    return tuple(levels)
+
+
+def chain_mixing_rate(*factors: np.ndarray) -> float:
+    """sigma_2(A_{L-1} (x) ... (x) A_0) from the FACTOR spectra.
+
+    The singular values of a Kronecker product are all products of one
+    singular value per factor, so the second-largest is computed from L
+    small SVDs instead of one (prod(n_i), prod(n_i)) decomposition — the
+    host-side tests pin this against `numpy.linalg.svd` of the dense
+    3-factor Kronecker product.
+    """
+    prods = np.ones(1)
+    for a in factors:
+        s = np.linalg.svd(np.asarray(a, np.float64), compute_uv=False)
+        prods = np.outer(prods, s).ravel()
+    prods = np.sort(prods)[::-1]
+    return float(prods[1]) if prods.size > 1 else 0.0
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class KroneckerChain:
+    """An N-level (graph-of-graphs) combiner chain, levels as DATA.
+
+    The network of prod(ns) agents is the Kronecker composition
+
+        A(t) = F_{L-1}(t) (x) ... (x) F_1(t) (x) F_0(t),
+        F_i(t) = combiners[i]  if t % specs[i].gossip_every == 0 else I
+
+    with levels stored INNERMOST-FIRST: level 0 is the model level (the
+    fast local neighborhoods, the only level elastic growth touches),
+    higher levels are progressively slower/sparser long-haul hops.  Flat
+    agent indexing is outermost-major (level L-1 varies slowest), the
+    order an (outer, ..., pod, data, model) mesh enumerates its agent
+    device tuples — for two levels this is exactly the pod-major
+    `HierarchicalTopology` order.  The Kronecker product of
+    doubly-stochastic factors is doubly stochastic, and skipping a hop
+    substitutes the (doubly stochastic) identity, so every sequence entry
+    is a valid diffusion combiner; all factors are validated at
+    construction.
+
+    Pure function of (specs, ns, p, seed, beta): level 0 draws from the
+    RAW seed (an erdos model level matches the flat mode="graph" network
+    for the same seed), level i >= 1 from the derived stream
+    `derive_seed(seed, i)` — so no two levels ever share a random graph,
+    and the two-level chain reproduces `HierarchicalTopology`'s streams
+    bit for bit.
+
+    Fields:
+      specs        per-level `LevelSpec`, innermost-first
+      ns           per-level agent counts (level i combiner is ns[i] x ns[i])
+      combiners    per-level doubly-stochastic factor matrices
+      adjacencies  per-level bool adjacency for erdos levels (None for
+                   structured kinds) — carried so `grown` preserves
+                   existing neighborhoods
+      p, seed, beta  generator parameters shared by all levels
+    """
+
+    specs: Tuple[LevelSpec, ...]
+    ns: Tuple[int, ...]
+    combiners: Tuple[np.ndarray, ...]
+    adjacencies: Tuple[Optional[np.ndarray], ...]
+    p: float = 0.5
+    seed: int = 0
+    beta: float = 1.0 / 3.0
+
+    def __post_init__(self):
+        """Validate level agreement, factor shapes/stochasticity, and the
+        staleness placement (outermost level only)."""
+        if not self.specs:
+            raise ValueError("KroneckerChain needs at least one level")
+        if not (len(self.specs) == len(self.ns) == len(self.combiners)
+                == len(self.adjacencies)):
+            raise ValueError(
+                "specs, ns, combiners, and adjacencies must have equal length"
+            )
+        for i, (spec, n, a) in enumerate(
+                zip(self.specs, self.ns, self.combiners)):
+            a = np.asarray(a)
+            if a.shape != (n, n):
+                raise ValueError(
+                    f"level {i} combiner has shape {a.shape}, expected "
+                    f"{(n, n)}"
+                )
+            if not is_doubly_stochastic(a):
+                raise ValueError(
+                    f"level {i} (kind {spec.kind!r}) combiner is not doubly "
+                    f"stochastic"
+                )
+            if spec.stale and i != len(self.specs) - 1:
+                raise ValueError(
+                    f"stale=True is only allowed on the outermost level "
+                    f"(level {len(self.specs) - 1}), got it on level {i} — "
+                    f"staleness hides long-haul latency, which lives on the "
+                    f"outermost hop"
+                )
+
+    @property
+    def n_levels(self) -> int:
+        """Number of levels in the chain."""
+        return len(self.specs)
+
+    @property
+    def n_agents(self) -> int:
+        """Total network size prod(ns) (the flat agent count)."""
+        return int(np.prod(self.ns))
+
+    @property
+    def period(self) -> int:
+        """LCM of the per-level gossip strides — the length of the
+        per-iteration combiner sequence before it repeats."""
+        return math.lcm(*(s.gossip_every for s in self.specs))
+
+    def kron(self) -> np.ndarray:
+        """The dense all-hops-firing combiner A_{L-1} (x) ... (x) A_0."""
+        acc = np.asarray(self.combiners[0], np.float64)
+        for a in self.combiners[1:]:
+            acc = np.kron(np.asarray(a, np.float64), acc)
+        return acc
+
+    def at(self, t: int) -> np.ndarray:
+        """The dense combiner applied at diffusion iteration t: each level
+        contributes its factor when its stride fires (t % gossip_every
+        == 0), the identity otherwise."""
+        acc = None
+        for spec, n, a in zip(self.specs, self.ns, self.combiners):
+            f = (np.asarray(a, np.float64)
+                 if int(t) % spec.gossip_every == 0 else np.eye(n))
+            acc = f if acc is None else np.kron(f, acc)
+        return acc
+
+    def sequence(self) -> Tuple[np.ndarray, ...]:
+        """One period (= stride LCM) of the per-iteration combiner
+        sequence."""
+        return tuple(self.at(t) for t in range(self.period))
+
+    def window_combiner(self) -> np.ndarray:
+        """The effective one-period combiner (the window product of
+        `sequence()`; itself doubly stochastic)."""
+        return _window_product(self.sequence())
+
+    def mixing_rate(self) -> float:
+        """sigma_2 of the all-hops-firing composition, from the factor
+        spectra (`chain_mixing_rate`) — the contraction when every level
+        fires each iteration."""
+        return chain_mixing_rate(*self.combiners)
+
+    def effective_mixing_rate(self) -> float:
+        """Per-step contraction of the stride-gated sequence:
+        sigma_2(window product)^(1/period).  Equals `mixing_rate()` when
+        every stride is 1."""
+        if self.period == 1:
+            return self.mixing_rate()
+        return windowed_mixing_rate(self.sequence())
+
+    def as_callable(self) -> Callable:
+        """A jax-traceable ``A_t(t) -> (n_agents, n_agents)`` closure over
+        the dense stride-gated sequence — the reference-engine form the
+        chain parity tests feed to `core.inference.diffusion_infer`.
+        Staleness is NOT modeled here (the stale parity test builds the
+        explicit one-step-delayed reference)."""
+        import jax.numpy as jnp
+
+        stack = jnp.asarray(
+            np.stack([np.asarray(a, np.float32) for a in self.sequence()])
+        )
+        period = self.period
+        return lambda t: stack[jnp.mod(t, period)]
+
+    def grown(self, n_model_new: int) -> "KroneckerChain":
+        """Re-derive the chain for a larger INNERMOST (model) agent count.
+
+        Elastic growth happens on the model level only — outer-level
+        counts are fixed at mesh construction (long-haul links are
+        physical), so every outer factor is carried verbatim.  An erdos
+        model level grows via `erdos_renyi_grow` (existing agents keep
+        their neighborhoods, seed stream (seed, 0, n_new) — the same
+        stream the flat static-erdos engine growth uses); structured
+        kinds re-derive at the larger size.  Deterministic in
+        (seed, n_model_new)."""
+        if n_model_new < self.ns[0]:
+            raise ValueError(
+                f"cannot grow model level from {self.ns[0]} agents down to "
+                f"{n_model_new}"
+            )
+        spec0 = self.specs[0]
+        if spec0.kind == "erdos" and self.adjacencies[0] is not None:
+            adj = erdos_renyi_grow(
+                self.adjacencies[0], n_model_new, p=self.p,
+                seed=derive_seed(self.seed, 0, n_model_new),
+            )
+            A0, adj0 = metropolis_weights(adj), adj
+        else:
+            A0 = make_topology(spec0.kind, n_model_new, p=self.p,
+                               seed=self.seed, beta=self.beta)
+            adj0 = _adjacency_for(spec0.kind, n_model_new)
+        return KroneckerChain(
+            specs=self.specs, ns=(n_model_new,) + self.ns[1:],
+            combiners=(A0,) + self.combiners[1:],
+            adjacencies=(adj0,) + self.adjacencies[1:],
+            p=self.p, seed=self.seed, beta=self.beta,
+        )
+
+
+def make_kronecker_chain(
+    specs: Sequence[LevelSpec],
+    ns: Sequence[int],
+    *,
+    p: float = 0.5,
+    seed: int = 0,
+    beta: float = 1.0 / 3.0,
+) -> KroneckerChain:
+    """Build a validated N-level combiner chain from specs + level sizes.
+
+    `specs` and `ns` are innermost-first (level 0 = model level).  Level 0
+    draws from the RAW `seed` (so an erdos model level matches the flat
+    mode="graph" network for the same seed); level i >= 1 draws from the
+    derived stream `derive_seed(seed, i)` — for two levels these are
+    exactly `make_hierarchical_topology`'s streams.
+    """
+    specs = tuple(specs)
+    ns = tuple(int(n) for n in ns)
+    if len(specs) != len(ns):
+        raise ValueError(
+            f"got {len(specs)} level specs but {len(ns)} level sizes"
+        )
+    combiners, adjs = [], []
+    for i, (spec, n) in enumerate(zip(specs, ns)):
+        if spec.kind not in GRAPH_KINDS:
+            raise KeyError(
+                f"unknown topology kind {spec.kind!r} for chain level {i} "
+                f"(options: {GRAPH_KINDS})"
+            )
+        level_seed = seed if i == 0 else derive_seed(seed, i)
+        if spec.kind == "erdos":
+            adj = erdos_renyi_adjacency(n, p=p, seed=level_seed)
+            combiners.append(metropolis_weights(adj))
+            adjs.append(adj)
+        else:
+            combiners.append(make_topology(spec.kind, n, p=p, seed=level_seed,
+                                           beta=beta))
+            adjs.append(_adjacency_for(spec.kind, n))
+    return KroneckerChain(
+        specs=specs, ns=ns, combiners=tuple(combiners),
+        adjacencies=tuple(adjs), p=p, seed=seed, beta=beta,
+    )
+
 
 def kron_mixing_rate(A_pod: np.ndarray, A_model: np.ndarray) -> float:
-    """sigma_2(A_pod (x) A_model) from the FACTOR spectra.
-
-    The singular values of a Kronecker product are all pairwise products of
-    the factors' singular values, so the second-largest is computed from two
-    small SVDs instead of one (P*N, P*N) decomposition — the host-side tests
-    pin this against `numpy.linalg.svd` of the dense Kronecker product.
-    """
-    sp = np.linalg.svd(np.asarray(A_pod, np.float64), compute_uv=False)
-    sm = np.linalg.svd(np.asarray(A_model, np.float64), compute_uv=False)
-    prods = np.sort(np.outer(sp, sm).ravel())[::-1]
-    return float(prods[1]) if prods.size > 1 else 0.0
+    """sigma_2(A_pod (x) A_model) from the FACTOR spectra — the two-factor
+    case of `chain_mixing_rate` (two small SVDs instead of one
+    (P*N, P*N) decomposition; the host-side tests pin it against
+    `numpy.linalg.svd` of the dense Kronecker product)."""
+    return chain_mixing_rate(A_model, A_pod)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -502,6 +824,23 @@ class HierarchicalTopology:
                 f"gossip_every must be >= 1, got {self.gossip_every}"
             )
 
+    def chain(self) -> KroneckerChain:
+        """The equivalent two-level `KroneckerChain` (model level 0 from
+        this hierarchy's intra-pod factor, pod level 1 from the inter-pod
+        factor with this hierarchy's gossip stride).  Every method below
+        delegates to it — the chain IS the implementation, this class is
+        the stable two-level surface."""
+        return KroneckerChain(
+            specs=(LevelSpec(kind=self.model_kind),
+                   LevelSpec(kind=self.pod_kind,
+                             gossip_every=self.gossip_every)),
+            ns=(self.n_model, self.n_pods),
+            combiners=(np.asarray(self.A_model, np.float64),
+                       np.asarray(self.A_pod, np.float64)),
+            adjacencies=(self.model_adjacency, None),
+            p=self.p, seed=self.seed, beta=self.beta,
+        )
+
     @property
     def n_agents(self) -> int:
         """Total network size P*N (the flat agent count of the composition)."""
@@ -515,8 +854,7 @@ class HierarchicalTopology:
 
     def kron(self) -> np.ndarray:
         """The dense (P*N, P*N) two-level combiner A_pod (x) A_model."""
-        return np.kron(np.asarray(self.A_pod, np.float64),
-                       np.asarray(self.A_model, np.float64))
+        return self.chain().kron()
 
     def local_only(self) -> np.ndarray:
         """The dense combiner of a pod-hop-free iteration: I (x) A_model."""
@@ -527,45 +865,37 @@ class HierarchicalTopology:
         """The dense (P*N, P*N) combiner applied at diffusion iteration t:
         the full Kronecker composition when the pod hop fires
         (t % gossip_every == 0), I (x) A_model otherwise."""
-        return self.kron() if int(t) % self.gossip_every == 0 else self.local_only()
+        return self.chain().at(t)
 
     def sequence(self) -> Tuple[np.ndarray, ...]:
         """One period of the per-iteration combiner sequence,
         (A_pod (x) A_model, I (x) A_model, ..., I (x) A_model)."""
-        return tuple(self.at(t) for t in range(self.gossip_every))
+        return self.chain().sequence()
 
     def window_combiner(self) -> np.ndarray:
         """The effective one-period combiner (the window product of
         `sequence()`; itself doubly stochastic) — what
         `DistributedSparseCoder.combiner()` reports for the hier modes."""
-        return _window_product(self.sequence())
+        return self.chain().window_combiner()
 
     def mixing_rate(self) -> float:
         """sigma_2(A_pod (x) A_model) of the full composition (computed
         from the factor spectra, see `kron_mixing_rate`) — the contraction
         when the pod hop fires every iteration."""
-        return kron_mixing_rate(self.A_pod, self.A_model)
+        return self.chain().mixing_rate()
 
     def effective_mixing_rate(self) -> float:
         """Per-step contraction of the gossip_every-period sequence:
         sigma_2(window product)^(1/gossip_every).  Equals `mixing_rate()`
         at gossip_every = 1; reported by stats and the gossip benchmarks."""
-        if self.gossip_every == 1:
-            return self.mixing_rate()
-        return windowed_mixing_rate(self.sequence())
+        return self.chain().effective_mixing_rate()
 
     def as_callable(self) -> Callable:
         """A jax-traceable ``A_t(t) -> (P*N, P*N)`` closure over the dense
         per-iteration sequence — the reference-engine form the hier parity
         tests feed to `core.inference.diffusion_infer` (with
         pod_gossip_every > 1 modeled as the alternating sequence)."""
-        import jax.numpy as jnp
-
-        stack = jnp.asarray(
-            np.stack([np.asarray(a, np.float32) for a in self.sequence()])
-        )
-        period = self.gossip_every
-        return lambda t: stack[jnp.mod(t, period)]
+        return self.chain().as_callable()
 
     def grown(self, n_model_new: int) -> "HierarchicalTopology":
         """Re-derive the hierarchy for a larger INTRA-POD agent count.
@@ -576,30 +906,15 @@ class HierarchicalTopology:
         `erdos_renyi_grow` (existing agents keep their neighborhoods, seed
         stream (seed, 0, n_new) — the same stream the flat static-erdos
         engine growth uses); structured kinds re-derive at the larger size.
-        Deterministic in (seed, n_model_new)."""
-        if n_model_new < self.n_model:
-            raise ValueError(
-                f"cannot grow intra-pod network from {self.n_model} agents "
-                f"down to {n_model_new}"
-            )
-        if self.model_kind == "erdos" and self.model_adjacency is not None:
-            adj = erdos_renyi_grow(
-                self.model_adjacency, n_model_new, p=self.p,
-                seed=derive_seed(self.seed, 0, n_model_new),
-            )
-            A_model, model_adj = metropolis_weights(adj), adj
-        else:
-            A_model = make_topology(
-                self.model_kind, n_model_new, p=self.p, seed=self.seed,
-                beta=self.beta,
-            )
-            model_adj = _adjacency_for(self.model_kind, n_model_new)
+        Deterministic in (seed, n_model_new).  Delegates to
+        `KroneckerChain.grown` (innermost level only)."""
+        g = self.chain().grown(n_model_new)
         return HierarchicalTopology(
             pod_kind=self.pod_kind, model_kind=self.model_kind,
             n_pods=self.n_pods, n_model=n_model_new,
-            A_pod=self.A_pod, A_model=A_model,
+            A_pod=self.A_pod, A_model=g.combiners[0],
             gossip_every=self.gossip_every, p=self.p, seed=self.seed,
-            beta=self.beta, model_adjacency=model_adj,
+            beta=self.beta, model_adjacency=g.adjacencies[0],
         )
 
 
@@ -630,19 +945,17 @@ def make_hierarchical_topology(
                 f"unknown topology kind {kind!r} for {label} "
                 f"(options: {GRAPH_KINDS})"
             )
-    A_pod = make_topology(pod_kind, n_pods, p=p, seed=derive_seed(seed, 1),
-                          beta=beta)
-    if model_kind == "erdos":
-        adj = erdos_renyi_adjacency(n_model, p=p, seed=seed)
-        A_model, model_adj = metropolis_weights(adj), adj
-    else:
-        A_model = make_topology(model_kind, n_model, p=p, seed=seed, beta=beta)
-        model_adj = _adjacency_for(model_kind, n_model)
+    chain = make_kronecker_chain(
+        (LevelSpec(kind=model_kind),
+         LevelSpec(kind=pod_kind, gossip_every=int(gossip_every))),
+        (n_model, n_pods), p=p, seed=seed, beta=beta,
+    )
     return HierarchicalTopology(
         pod_kind=pod_kind, model_kind=model_kind,
-        n_pods=n_pods, n_model=n_model, A_pod=A_pod, A_model=A_model,
+        n_pods=n_pods, n_model=n_model,
+        A_pod=chain.combiners[1], A_model=chain.combiners[0],
         gossip_every=int(gossip_every), p=p, seed=seed, beta=beta,
-        model_adjacency=model_adj,
+        model_adjacency=chain.adjacencies[0],
     )
 
 

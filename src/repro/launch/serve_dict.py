@@ -17,6 +17,16 @@ inter-pod combiner kind and optional sparse-gossip stride:
       --mode hier --mesh 2x1x4 --topology torus \\
       --pod-topology ring_metropolis --pod-gossip-every 2 --grow-at 0
 
+An N-level Kronecker chain takes `--mode chain` with a `--levels` spec
+(comma-separated `kind[:stride][:wire][:stale]`, innermost/model level
+first) and a mesh with one leading dim per OUTER level, outermost first
+('PxQxDxM' for three levels):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  PYTHONPATH=src python -m repro.launch.serve_dict \\
+      --mode chain --mesh 2x2x1x2 \\
+      --levels ring_metropolis,ring_metropolis:2:q8,full:4:q8 --grow-at 0
+
 Prints throughput (samples/s), per-sample latency percentiles, learner
 progress, and the growth event; `--json` additionally emits one
 machine-readable line (consumed by benchmarks/serve_throughput.py).
@@ -48,7 +58,8 @@ def main() -> None:
     ap.add_argument("--mode", type=str, default="exact_fista",
                     choices=["exact", "exact_fista", "ring", "ring_q8", "ring_async",
                              "graph", "graph_q8", "graph_async",
-                             "graph_tv", "graph_tv_q8", "hier", "hier_q8"])
+                             "graph_tv", "graph_tv_q8", "hier", "hier_q8",
+                             "chain"])
     ap.add_argument("--topology", type=str, default="ring_metropolis",
                     choices=["ring", "ring_metropolis", "torus", "erdos", "full"],
                     help="graph-mode combiner kind (core/topology.make_topology); "
@@ -60,6 +71,12 @@ def main() -> None:
     ap.add_argument("--pod-gossip-every", type=int, default=1,
                     help="hier modes: fire the inter-pod hop every k-th "
                          "iteration (1 = every iteration)")
+    ap.add_argument("--levels", type=str, default="",
+                    help="chain mode: comma-separated level specs "
+                         "'kind[:stride][:wire][:stale]', innermost (model) "
+                         "level first — e.g. "
+                         "'ring_metropolis,ring_metropolis:2:q8,full:4:q8' "
+                         "(core/topology.parse_level_specs)")
     ap.add_argument("--topology-p", type=float, default=0.5,
                     help="erdos edge probability")
     ap.add_argument("--topology-seed", type=int, default=0,
@@ -75,8 +92,10 @@ def main() -> None:
     ap.add_argument("--m", type=int, default=32, help="data dimension")
     ap.add_argument("--atoms-per-agent", type=int, default=8)
     ap.add_argument("--mesh", type=str, default="1x2",
-                    help="'DxM' (data x model) or 'PxDxM' (pod x data x "
-                         "model — required for the hier modes)")
+                    help="'DxM' (data x model), 'PxDxM' (pod x data x model "
+                         "— required for the hier modes), or one leading dim "
+                         "per outer chain level, outermost first (e.g. "
+                         "'PxQxDxM' for a 3-level --levels spec)")
     ap.add_argument("--samples", type=int, default=600)
     ap.add_argument("--micro-batch", type=int, default=16)
     ap.add_argument("--max-wait-ms", type=float, default=20.0)
@@ -94,34 +113,58 @@ def main() -> None:
     args = ap.parse_args()
 
     dims = [int(v) for v in args.mesh.split("x")]
-    if len(dims) == 2:
-        pods, (d, m_axis) = 0, dims
-    elif len(dims) == 3:
-        pods, d, m_axis = dims
+    # How many AGENT levels the mesh must carry (model + outer levels):
+    # the --levels spec length for chain mode, 2 for the hier shim, 1 flat.
+    if args.mode == "chain":
+        if not args.levels:
+            raise SystemExit(
+                "--mode chain needs a --levels spec "
+                "(e.g. 'ring_metropolis,ring_metropolis:2:q8,full:4:q8')"
+            )
+        n_agent_levels = len([s for s in args.levels.split(",") if s.strip()])
+    elif args.mode in ("hier", "hier_q8"):
+        n_agent_levels = 2
     else:
-        raise SystemExit(f"--mesh must be 'DxM' or 'PxDxM', got {args.mesh!r}")
-    if args.mode in ("hier", "hier_q8") and not pods:
-        raise SystemExit(
-            f"--mode {args.mode} gossips over a pod axis; pass a 3-D "
-            f"--mesh PxDxM (e.g. 2x1x4), not {args.mesh!r}"
+        n_agent_levels = 1
+    if len(dims) != n_agent_levels + 1:
+        want = (
+            "'DxM'" if n_agent_levels == 1
+            else "'PxDxM'" if n_agent_levels == 2
+            else f"{n_agent_levels + 1} dims (one per outer level, outermost "
+                 f"first, then data x model)"
         )
+        raise SystemExit(
+            f"--mode {args.mode} needs a --mesh of {want}, got {args.mesh!r}"
+        )
+    *outer_dims, d, m_axis = dims  # outer levels OUTERMOST first
+    outer = 1
+    for v in outer_dims:
+        outer *= v
     if args.grow_at >= args.samples:
         args.grow_at = 0  # growth point past the stream: never fires
-    need = max(pods, 1) * d * (m_axis + (args.grow_model if args.grow_at else 0))
+    need = outer * d * (m_axis + (args.grow_model if args.grow_at else 0))
     if jax.device_count() < need:
         raise SystemExit(
             f"need {need} devices for mesh {args.mesh} + growth; have "
             f"{jax.device_count()} (set XLA_FLAGS=--xla_force_host_platform_device_count=N)"
         )
-    if pods:
+    if outer_dims:
+        # Axis names match DistConfig.level_axis: level 1 is the pod axis,
+        # level i>=2 is "pod<i>"; mesh order is outermost-major.
+        outer_names = tuple(
+            dist.POD_AXIS if i == 1 else f"{dist.POD_AXIS}{i}"
+            for i in range(n_agent_levels - 1, 0, -1)
+        )
         mesh = dist.make_mesh(
-            (pods, d, m_axis), (dist.POD_AXIS, dist.DATA_AXIS, dist.MODEL_AXIS)
+            (*outer_dims, d, m_axis),
+            (*outer_names, dist.DATA_AXIS, dist.MODEL_AXIS),
         )
     else:
         mesh = dist.make_mesh((d, m_axis), (dist.DATA_AXIS, dist.MODEL_AXIS))
     res, reg = make_task(args.task, gamma=args.gamma, delta=args.delta)
-    # one atom block per AGENT: the hier modes shard atoms over pod x model.
-    k0 = args.atoms_per_agent * m_axis * (pods if args.mode.startswith("hier") else 1)
+    # one atom block per AGENT: the hierarchical family shards atoms over
+    # (all outer levels) x model.
+    k0 = args.atoms_per_agent * m_axis * outer
     W0 = init_dictionary(jax.random.PRNGKey(args.seed), args.m, k0, nonneg=reg.nonneg)
     coder = DistributedSparseCoder(
         mesh, res, reg, DistConfig(
@@ -131,6 +174,7 @@ def main() -> None:
             schedule_period=args.schedule_period,
             pod_topology=args.pod_topology,
             pod_gossip_every=args.pod_gossip_every,
+            levels=args.levels,
         )
     )
     comb = coder.combiner_info()
@@ -149,6 +193,10 @@ def main() -> None:
           f"topology={comb['topology']} mixing_rate={comb['mixing_rate']:.3f} "
           f"schedule_period={comb.get('schedule_period', 1)} "
           f"pod_gossip_every={comb.get('pod_gossip_every', 1)}")
+    for lv in comb.get("levels") or []:
+        print(f"  level axis={lv['axis']} kind={lv['kind']} n={lv['n']} "
+              f"stride={lv['gossip_every']} wire={lv['wire']} "
+              f"stale={lv['stale']}")
 
     futures = []
     grow_fut = None
@@ -202,6 +250,7 @@ def main() -> None:
             "active_schedule": stats.get("active_schedule", 0),
             "pod_topology": stats.get("pod_topology"),
             "pod_gossip_every": stats.get("pod_gossip_every", 1),
+            "levels": stats.get("levels"),
             "wall_s": wall_s,
             "samples_per_s": stats["coded"] / wall_s,
             "latency_ms": lat,

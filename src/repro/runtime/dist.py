@@ -35,18 +35,28 @@ Mode -> collective mapping (core/distributed.py consumes these):
                                           program
   graph_tv_q8          graph_combine_     the same switch over the int8
                        quantized_switch   wire format
-  hier                 hier_combine over  HIERARCHICAL two-level gossip
-                       (hier_schedule     (core/topology.Hierarchical-
-                       A_pod, A_model)    Topology): the intra-pod schedule
-                                          runs over MODEL_AXIS and the
-                                          inter-pod schedule over POD_AXIS
-                                          back-to-back inside one shard_map
-                                          body, realizing the Kronecker
-                                          combiner A_pod (x) A_model; with
-                                          gossip_every > 1 the pod hop is
-                                          gated by the traced iteration
-                                          index (lax.cond — one compiled
-                                          program, like the tv switch)
+  chain                chain_combine over HIERARCHICAL N-level gossip
+                       (chain_schedule    (core/topology.KroneckerChain):
+                       of a Kronecker-    one `GraphSchedule` per level,
+                       Chain)             applied INNERMOST-FIRST inside
+                                          one shard_map body, realizing the
+                                          Kronecker chain A_{L-1} (x) ...
+                                          (x) A_0.  Each level's hop is
+                                          gated on its own stride by the
+                                          traced iteration index (lax.cond
+                                          — one compiled program, like the
+                                          tv switch), ships fp32 or q8
+                                          (+error feedback) per its wire
+                                          format, and the OUTERMOST level
+                                          may combine one-step-stale
+                                          messages (graph_async style) to
+                                          hide long-haul latency
+  hier                 hier_combine       two-level special case of the
+                                          chain (`HierSchedule.as_chain`):
+                                          intra-pod schedule over
+                                          MODEL_AXIS, inter-pod over
+                                          POD_AXIS, pod hop gated on
+                                          gossip_every
   hier_q8              hier_combine_      the same composition with the q8
                        quantized          wire format on the INTER-POD hop
                                           only (that is the bandwidth-
@@ -72,6 +82,7 @@ Mesh factories:
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -113,6 +124,11 @@ __all__ = [
     "graph_combine_quantized",
     "graph_combine_switch",
     "graph_combine_quantized_switch",
+    "LevelPlan",
+    "ChainSchedule",
+    "chain_schedule",
+    "chain_state_init",
+    "chain_combine",
     "HierSchedule",
     "hier_schedule",
     "hier_combine",
@@ -140,12 +156,25 @@ def supports_partial_manual() -> bool:
 # ---------------------------------------------------------------------------
 
 
-def debug_mesh(model: int, data: int = 1, pods: int = 0):
+def debug_mesh(model: int, data: int = 1, pods: int = 0, outer: tuple = ()):
     """CPU/debug mesh with the production axis names over the first
-    `pods*data*model` visible devices (tests force multi-device via
-    XLA_FLAGS=--xla_force_host_platform_device_count=N)."""
+    `prod(outer)*pods*data*model` visible devices (tests force multi-device
+    via XLA_FLAGS=--xla_force_host_platform_device_count=N).
+
+    `outer` adds agent levels ABOVE the pod level for N-level chain runs,
+    outermost first; their axes are named "pod2", "pod3", ... innermost-out
+    to match `DistConfig.level_axis` — e.g. ``debug_mesh(model=2, pods=2,
+    outer=(2,))`` is the (2, 2, 1, 2) mesh ("pod2", "pod", "data",
+    "model")."""
+    if outer and not pods:
+        raise ValueError("outer levels require pods >= 1 (the pod level "
+                         "sits between model and the outer levels)")
     if pods:
-        return make_mesh((pods, data, model), (POD_AXIS, DATA_AXIS, MODEL_AXIS))
+        n_out = len(outer)
+        names = tuple(
+            f"{POD_AXIS}{n_out + 1 - i}" for i in range(n_out)
+        ) + (POD_AXIS, DATA_AXIS, MODEL_AXIS)
+        return make_mesh((*outer, pods, data, model), names)
     return make_mesh((data, model), (DATA_AXIS, MODEL_AXIS))
 
 
@@ -430,9 +459,185 @@ def graph_combine_quantized(
 
 
 # ---------------------------------------------------------------------------
-# Hierarchical (two-level) gossip: the Kronecker combiner A_pod (x) A_model
-# realized as the intra-pod schedule over MODEL_AXIS composed with the
-# inter-pod schedule over POD_AXIS (core/topology.HierarchicalTopology)
+# Hierarchical N-level gossip: the Kronecker chain A_{L-1} (x) ... (x) A_0
+# realized as one GraphSchedule per level, applied innermost-first inside a
+# single shard_map body (core/topology.KroneckerChain)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelPlan:
+    """One compiled level of a `ChainSchedule` — the runtime half of a
+    `core/topology.LevelSpec`.
+
+    Fields:
+      axis          mesh axis name this level's ppermutes run over
+      sched         the level's compiled `GraphSchedule`
+      gossip_every  fire the hop only at iterations t % gossip_every == 0
+      quantized     ship this level's messages in the int8 wire format
+                    (q8 + per-row scales, error feedback kept in the chain
+                    state)
+      stale         combine with the messages shipped at the PREVIOUS
+                    firing iteration (graph_async style; outermost level
+                    only — validated by the topology layer)
+    """
+
+    axis: str
+    sched: GraphSchedule
+    gossip_every: int = 1
+    quantized: bool = False
+    stale: bool = False
+
+    @property
+    def messages_per_iter(self) -> float:
+        """ppermute rounds per iteration on this level, AVERAGED over the
+        gossip stride (the hop only fires every gossip_every-th step)."""
+        return self.sched.messages_per_iter / self.gossip_every
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainSchedule:
+    """Static N-level data-movement plan for the Kronecker-chain combine
+    nu = (A_{L-1} (x) ... (x) A_0)^T psi.
+
+    `levels` is INNERMOST-FIRST (level 0 = model level): because the
+    Kronecker combine factorizes, running each level's schedule over its
+    own mesh axis back-to-back inside one shard_map body realizes the full
+    composition; each level is independently gated on its own stride.
+    """
+
+    levels: Tuple[LevelPlan, ...]
+
+    @property
+    def period(self) -> int:
+        """LCM of the per-level gossip strides — iterations before the
+        gating pattern repeats."""
+        return math.lcm(*(lvl.gossip_every for lvl in self.levels))
+
+    def reconstruct(self) -> np.ndarray:
+        """Dense all-hops-firing combiner this schedule realizes
+        (host-side; tests/benchmarks)."""
+        acc = self.levels[0].sched.reconstruct()
+        for lvl in self.levels[1:]:
+            acc = np.kron(lvl.sched.reconstruct(), acc)
+        return acc
+
+    @property
+    def messages_per_iter_per_level(self) -> Tuple[float, ...]:
+        """Per-level ppermute rounds per iteration, stride-averaged —
+        innermost-first (the per-level wire-byte accounting the gossip
+        benchmarks report)."""
+        return tuple(lvl.messages_per_iter for lvl in self.levels)
+
+
+def chain_schedule(chain, axes: Sequence[str]) -> ChainSchedule:
+    """Compile a `core/topology.KroneckerChain` into a `ChainSchedule`.
+
+    `axes` names the mesh axis of each level, innermost-first (same order
+    as `chain.specs`).  Each factor is compiled independently
+    (`graph_schedule`; a level whose kind is "torus" takes the 4-link 2-D
+    ICI `torus_schedule` instead), and the level's stride / wire format /
+    staleness ride into the `LevelPlan`.
+    """
+    from repro.core.topology import torus_dims  # numpy-only leaf
+
+    axes = tuple(axes)
+    if len(axes) != len(chain.specs):
+        raise ValueError(
+            f"chain has {len(chain.specs)} levels but got {len(axes)} axis "
+            f"names"
+        )
+    levels = []
+    for spec, A, axis in zip(chain.specs, chain.combiners, axes):
+        if spec.kind == "torus":
+            rows, cols = torus_dims(np.asarray(A).shape[0])
+            sched = torus_schedule(rows, cols, A)
+        else:
+            sched = graph_schedule(A)
+        levels.append(LevelPlan(
+            axis=axis, sched=sched, gossip_every=spec.gossip_every,
+            quantized=(spec.wire == "q8"), stale=spec.stale,
+        ))
+    return ChainSchedule(levels=tuple(levels))
+
+
+def chain_state_init(x: Array, cs: ChainSchedule) -> Tuple:
+    """Initial per-level carry state for `chain_combine`: one (err, recv)
+    pair per level.  `err` is the q8 error-feedback accumulator
+    (zeros_like(x) for quantized levels, () otherwise); `recv` holds the
+    messages shipped at the previous firing iteration for stale levels
+    (one zeros_like(x) per schedule round — the first stale combine sees
+    zero neighbor contributions, exactly like graph_async's first step;
+    () for synchronous levels)."""
+    state = []
+    for lvl in cs.levels:
+        err = jnp.zeros_like(x) if lvl.quantized else ()
+        recv = (tuple(jnp.zeros_like(x) for _ in lvl.sched.steps)
+                if lvl.stale else ())
+        state.append((err, recv))
+    return tuple(state)
+
+
+def _level_apply(v: Array, lvl: LevelPlan, t, err, recv_prev):
+    """One level's gated hop: ship v's messages (fp32 or q8+error-feedback
+    per the level's wire format), combine with this round's messages — or
+    the PREVIOUS firing round's for a stale level — and return
+    (combined, new_err, new_recv).  Skipped iterations (t % gossip_every
+    != 0) pass everything through unchanged via lax.cond; both branches
+    share one pytree structure, so the gated run stays one program."""
+
+    def fire(op):
+        u, e, r_prev = op
+        if lvl.quantized:
+            q, s = quantize_q8(u + e)
+            e_next = (u + e) - dequantize_q8(q, s)
+            recv = tuple(
+                dequantize_q8(
+                    jax.lax.ppermute(q, lvl.axis, list(perm)),
+                    jax.lax.ppermute(s, lvl.axis, list(perm)),
+                    u.dtype,
+                )
+                for perm, _ in lvl.sched.steps
+            )
+        else:
+            e_next = e
+            recv = graph_shift(u, lvl.axis, lvl.sched)
+        out = graph_accumulate(u, r_prev if lvl.stale else recv,
+                               lvl.axis, lvl.sched)
+        return out, e_next, (recv if lvl.stale else ())
+
+    if lvl.gossip_every == 1:
+        return fire((v, err, recv_prev))
+    return jax.lax.cond(
+        jnp.equal(jnp.mod(t, lvl.gossip_every), 0),
+        fire, lambda op: op, (v, err, recv_prev),
+    )
+
+
+def chain_combine(x: Array, cs: ChainSchedule, t, state: Tuple):
+    """N-level synchronous/stale gossip: apply every level of the chain
+    innermost-first, each hop gated on its own stride by the (traced)
+    iteration index `t`.
+
+    `state` is the per-level (err, recv) carry from `chain_state_init` /
+    the previous call; returns (combined, new_state).  Quantized levels
+    update their error-feedback accumulator only on firing iterations;
+    stale levels combine with the messages shipped at the PREVIOUS firing
+    iteration and stash this round's sends in the state (`t` must be
+    replicated across all agent axes; it comes from the scan counter, so
+    it always is)."""
+    out = x
+    new_state = []
+    for lvl, (err, recv_prev) in zip(cs.levels, state):
+        out, err_next, recv_next = _level_apply(out, lvl, t, err, recv_prev)
+        new_state.append((err_next, recv_next))
+    return out, tuple(new_state)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical (two-level) gossip: the Kronecker combiner A_pod (x) A_model —
+# the stable two-level surface of the hier/hier_q8 modes, implemented as a
+# two-level ChainSchedule (core/topology.HierarchicalTopology)
 # ---------------------------------------------------------------------------
 
 
@@ -468,6 +673,20 @@ class HierSchedule:
         """Inter-pod ppermute rounds per iteration, AVERAGED over the
         gossip_every period (the hop only fires every k-th iteration)."""
         return self.pod.messages_per_iter / self.gossip_every
+
+    def as_chain(self, model_axis: str, pod_axis: str, *,
+                 quantized_pod: bool = False,
+                 stale_pod: bool = False) -> ChainSchedule:
+        """The equivalent two-level `ChainSchedule` (model level innermost,
+        pod level carrying this schedule's gossip stride).  `hier_combine`
+        and `hier_combine_quantized` run THROUGH this chain — the two-level
+        path and the N-level path are one implementation."""
+        return ChainSchedule(levels=(
+            LevelPlan(axis=model_axis, sched=self.model),
+            LevelPlan(axis=pod_axis, sched=self.pod,
+                      gossip_every=self.gossip_every,
+                      quantized=quantized_pod, stale=stale_pod),
+        ))
 
 
 def hier_schedule(
@@ -512,16 +731,12 @@ def hier_combine(x, model_axis: str, pod_axis: str, hs: HierSchedule, t=0):
     index `t` via lax.cond — both branches are traced once with their own
     static ppermutes, so the whole gated run stays ONE compiled program
     (`t` must be replicated across both axes; it comes from the scan
-    counter, so it always is)."""
-    v = graph_combine(x, model_axis, hs.model)
-    if hs.gossip_every == 1:
-        return graph_combine(v, pod_axis, hs.pod)
-    return jax.lax.cond(
-        jnp.equal(jnp.mod(t, hs.gossip_every), 0),
-        lambda u: graph_combine(u, pod_axis, hs.pod),
-        lambda u: u,
-        v,
-    )
+    counter, so it always is).  Thin wrapper over `chain_combine` on the
+    equivalent two-level chain (no per-call state: fp32 levels carry
+    none)."""
+    cs = hs.as_chain(model_axis, pod_axis)
+    out, _ = chain_combine(x, cs, t, chain_state_init(x, cs))
+    return out
 
 
 def hier_combine_quantized(
@@ -535,20 +750,11 @@ def hier_combine_quantized(
     inter-pod round — that hop is the bandwidth-constrained link the q8
     format exists for.  Returns (combined, new_err); on iterations where
     the pod hop does not fire (t % gossip_every != 0) nothing is quantized
-    and `err` rides through unchanged."""
-    v = graph_combine(x, model_axis, hs.model)
-
-    def hop(op):
-        u, e = op
-        q, s = quantize_q8(u + e)
-        e_next = (u + e) - dequantize_q8(q, s)
-        return graph_combine_quantized(u, q, s, pod_axis, hs.pod), e_next
-
-    if hs.gossip_every == 1:
-        return hop((v, err))
-    return jax.lax.cond(
-        jnp.equal(jnp.mod(t, hs.gossip_every), 0), hop, lambda op: op, (v, err)
-    )
+    and `err` rides through unchanged.  Thin wrapper over `chain_combine`
+    on the equivalent two-level chain with a quantized pod level."""
+    cs = hs.as_chain(model_axis, pod_axis, quantized_pod=True)
+    out, new_state = chain_combine(x, cs, t, (((), ()), (err, ())))
+    return out, new_state[1][0]
 
 
 def all_to_all_tiled(x: Array, axis_name: str) -> Array:

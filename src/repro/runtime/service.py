@@ -31,13 +31,15 @@ exactly that contract:
     doubly-stochastic combiner A (and its ppermute schedule) for the larger
     axis; time-varying coders re-derive the whole combiner SEQUENCE, with
     erdos steps grown neighborhood-preservingly (topology.erdos_renyi_grow);
-    hierarchical (hier/hier_q8) coders grow on the model axis ONLY — every
-    pod gains the new agents, the inter-pod combiner is carried verbatim
-    (the pod count is fixed at mesh construction) and each existing
-    (pod, model) agent keeps its atom shard;
+    hierarchical coders (hier/hier_q8/chain — an N-level Kronecker chain)
+    grow on the innermost model level ONLY — every outer-level group gains
+    the new agents, all outer combiners are carried verbatim (outer agent
+    counts are fixed at mesh construction) and each existing agent keeps
+    its atom shard;
     stats() and the growth event report the topology + mixing rate (windowed
-    for sequences, effective two-level rate for hier) + schedule spec/period
-    + the hier pod_topology / pod_gossip_every identity.
+    for sequences, effective chain rate for the hierarchical family) +
+    schedule spec/period + the hier pod_topology / pod_gossip_every identity
+    + the uniform per-level `levels` rows (kind/axis/n/stride/wire/stale).
     Growth is applied by the learner thread at a step boundary; the batcher
     keeps coding against the old (coder, snapshot) pair until the new pair
     is published.  One caveat on
@@ -207,8 +209,10 @@ class DictionaryService:
         happen at the execution serialization point, so claim order equals
         execution order and the stream really runs one continuous network.
         The returned offset is reduced mod the coder's schedule period (a
-        `TopologySchedule` period, or pod_gossip_every for a hierarchical
-        coder — only t0 mod P reaches the compiled program) so the int
+        `TopologySchedule` period, or the LCM of level strides for a
+        hierarchical coder — only t0 mod P reaches the compiled program,
+        and the LCM is exactly the point at which every level's firing
+        phase realigns) so the int
         passed to the engine stays small no matter how long the unbounded
         Python-int clock runs (an unreduced clock would eventually overflow
         the int32 cast)."""
@@ -364,11 +368,15 @@ class DictionaryService:
                 "active_schedule": (
                     self._sched_t % self._comb_info.get("schedule_period", 1)
                 ),
-                # Hierarchical (two-level) gossip identity: the inter-pod
-                # combiner kind and its sparse-gossip stride (None / 1 for
-                # every flat mode).
+                # Hierarchical (two-level shim) gossip identity: the
+                # inter-pod combiner kind and its sparse-gossip stride
+                # (None / 1 for every flat mode and for mode="chain").
                 "pod_topology": self._comb_info.get("pod_topology"),
                 "pod_gossip_every": self._comb_info.get("pod_gossip_every", 1),
+                # Uniform per-level metadata rows, innermost-first: one per
+                # chain level for the hierarchical family, a single row for
+                # every flat mode (kind/axis/n/gossip_every/wire/stale).
+                "levels": self._comb_info.get("levels"),
                 "elapsed_s": elapsed,
                 "samples_per_s": (self.coded / elapsed) if elapsed > 0 else 0.0,
             }
@@ -529,6 +537,7 @@ class DictionaryService:
                     "schedule_period": new_info.get("schedule_period", 1),
                     "pod_topology": new_info.get("pod_topology"),
                     "pod_gossip_every": new_info.get("pod_gossip_every", 1),
+                    "levels": new_info.get("levels"),
                 }
                 self.grow_events.append(info)
             _resolve(fut, info)

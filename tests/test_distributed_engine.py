@@ -226,3 +226,111 @@ def test_hier_mode_rejects_podless_mesh():
         DistributedSparseCoder(
             mesh, res, reg,
             DistConfig(mode="hier", pod_topology="ring_metropolis"))
+
+
+def test_mode_registry_capabilities():
+    """The mode-registry table is the single source of truth the engine
+    dispatches on: every mode has a caps row, the derived groups match it,
+    and the capability bits read correctly for representative modes."""
+    from repro.core.distributed import (
+        CHAIN_MODES, GRAPH_MODES, HIER_MODES, MODE_REGISTRY, MODES,
+        RING_MODES, TV_MODES,
+    )
+
+    assert set(MODES) == set(MODE_REGISTRY)
+    assert set(RING_MODES) == {m for m, c in MODE_REGISTRY.items()
+                               if c.family == "ring"}
+    assert set(GRAPH_MODES) == {m for m, c in MODE_REGISTRY.items()
+                                if c.family == "graph"}
+    assert set(TV_MODES) == {m for m, c in MODE_REGISTRY.items()
+                             if c.time_varying}
+    assert set(CHAIN_MODES) == {m for m, c in MODE_REGISTRY.items()
+                                if c.family == "chain"}
+    assert set(HIER_MODES) <= set(CHAIN_MODES)
+    assert MODE_REGISTRY["ring_q8"].quantized
+    assert MODE_REGISTRY["graph_async"].stale
+    assert MODE_REGISTRY["graph_tv"].time_varying
+    assert MODE_REGISTRY["hier"].hierarchical
+    assert MODE_REGISTRY["hier_q8"].quantized
+    assert MODE_REGISTRY["chain"].hierarchical
+    assert not MODE_REGISTRY["exact"].quantized
+    assert not MODE_REGISTRY["graph"].hierarchical
+
+
+def test_dist_config_chain_field_validation():
+    """mode="chain" requires a level list; `levels` on any other mode is
+    rejected; a spec string normalizes to LevelSpec tuples at construction."""
+    from repro.core.distributed import DistConfig
+    from repro.core import topology as topo
+
+    with pytest.raises(ValueError, match="levels"):
+        DistConfig(mode="chain")
+    with pytest.raises(ValueError, match="chain"):
+        DistConfig(mode="graph", levels="ring,full")
+    cfg = DistConfig(mode="chain", levels="torus,ring_metropolis:2:q8")
+    assert cfg.levels == topo.parse_level_specs("torus,ring_metropolis:2:q8")
+    # "" is the CLI's "not configured" default, not a 1-level chain
+    assert DistConfig(mode="graph", levels="").levels == ()
+    # chain_levels(): chain verbatim; hier = the documented two-level shim
+    assert DistConfig(mode="chain", levels="ring,full").chain_levels() == \
+        topo.parse_level_specs("ring,full")
+    hier = DistConfig(mode="hier_q8", topology="torus",
+                      pod_topology="ring_metropolis", pod_gossip_every=2)
+    lv = hier.chain_levels()
+    assert [s.kind for s in lv] == ["torus", "ring_metropolis"]
+    assert [s.gossip_every for s in lv] == [1, 2]
+    assert [s.wire for s in lv] == ["fp32", "q8"]
+    assert DistConfig(mode="graph").chain_levels() == ()
+
+
+def test_hier_shim_bit_identical_to_two_level_chain():
+    """Satellite guarantee: the hier/hier_q8 deprecation shim and a
+    hand-built two-level `levels=[...]` chain config compile to
+    BIT-IDENTICAL combiners and ppermute schedules (same factor matrices,
+    same per-level GraphSchedules, same strides/wires)."""
+    out = _run("""
+        import numpy as np
+        from repro.core.conjugates import make_task
+        from repro.core.distributed import DistributedSparseCoder, DistConfig, make_debug_mesh
+
+        res, reg = make_task("sparse_svd", gamma=0.1, delta=0.1)
+        mesh = make_debug_mesh(model=2, data=1, pods=2)
+
+        for hier_mode, wire in [("hier", "fp32"), ("hier_q8", "q8")]:
+            hier_cfg = DistConfig(mode=hier_mode, iters=5, topology="ring_metropolis",
+                                  pod_topology="ring_metropolis",
+                                  pod_gossip_every=2, topology_seed=7)
+            chain_cfg = DistConfig(mode="chain", iters=5, topology_seed=7,
+                                   levels=f"ring_metropolis,ring_metropolis:2:{wire}")
+            h = DistributedSparseCoder(mesh, res, reg, hier_cfg)
+            c = DistributedSparseCoder(mesh, res, reg, chain_cfg)
+
+            # identical factor matrices, bit for bit
+            for a, b in zip(h.chain.combiners, c.chain.combiners):
+                np.testing.assert_array_equal(a, b)
+            # identical compiled level plans: axis, stride, wire, and the
+            # exact ppermute schedule (diag + per-round (perm, weights))
+            assert len(h.chain_gossip_schedule.levels) == \
+                len(c.chain_gossip_schedule.levels) == 2
+            for lh, lc in zip(h.chain_gossip_schedule.levels,
+                              c.chain_gossip_schedule.levels):
+                assert lh.axis == lc.axis
+                assert lh.gossip_every == lc.gossip_every
+                assert lh.quantized == lc.quantized
+                assert lh.stale == lc.stale
+                np.testing.assert_array_equal(lh.sched.diag, lc.sched.diag)
+                assert len(lh.sched.steps) == len(lc.sched.steps)
+                for (pa, wa), (pb, wb) in zip(lh.sched.steps, lc.sched.steps):
+                    assert list(pa) == list(pb)
+                    np.testing.assert_array_equal(wa, wb)
+            # identical dense combiner sequences (period 2)
+            for a, b in zip(h.combiner_sequence(), c.combiner_sequence()):
+                np.testing.assert_array_equal(a, b)
+            # and the legacy two-level surfaces still exist on the shim
+            assert h.hier_topology is not None
+            assert h.hier_gossip_schedule is not None
+            assert c.hier_topology is None
+            print(hier_mode, "bit-identical to chain")
+        print("OK")
+    """, n_devices=4)
+    assert "OK" in out

@@ -419,3 +419,135 @@ def test_adaptive_mu_identical_across_ranks_all_modes():
         print("OK")
     """)
     assert "OK" in out
+
+
+@pytest.mark.slow
+def test_chain_3level_parity_with_reference_engine():
+    """mode="chain" with the acceptance 3-level chain (chip x pod x rack,
+    strides 1/2/4) on the (2, 2, 1, 2) debug mesh — eight agents, axes
+    ("pod2", "pod", "data", "model") — matches diffusion_infer run under
+    the dense stride-gated Kronecker-sequence callable
+    (KroneckerChain.as_callable) to 1e-4.  The q8-on-both-outer-hops
+    variant stays in a quantization-sized neighborhood, and the
+    stale-outermost variant matches an explicit one-step-delayed dense
+    reference (off-diagonal outer contributions computed from the inner
+    combine of the PREVIOUS outer firing, zeros before the first) to
+    1e-4."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.conjugates import make_task
+        from repro.core.distributed import DistributedSparseCoder, DistConfig, make_debug_mesh
+        from repro.core.dictionary import blocks_from_full
+        from repro.core.inference import (
+            DiffusionConfig, agent_grad, diffusion_infer, safe_diffusion_mu)
+        from repro.core import topology as topo
+
+        res, reg = make_task("sparse_svd", gamma=0.05, delta=0.1)
+        mesh = make_debug_mesh(model=2, data=1, pods=2, outer=(2,))
+        NTOT = 8
+        M, K, B, ITERS = 16, 32, 4, 300
+        W = jax.random.normal(jax.random.PRNGKey(1), (M, K))
+        W = W / jnp.linalg.norm(W, axis=0)
+        x = jax.random.normal(jax.random.PRNGKey(2), (B, M))
+        # flat reference network: 8 agents, outermost-major atom blocks
+        W_blocks = blocks_from_full(W, NTOT)
+        mu_ref = float(safe_diffusion_mu(res, reg, W_blocks))
+        ones = jnp.ones((NTOT,), jnp.float32)
+
+        # -- fp32 chain, strides 1/2/4: dense Kronecker-sequence parity ----
+        cfg = DistConfig(mode="chain", iters=ITERS, mu=-1.0, topology_seed=7,
+                         levels="ring_metropolis,ring_metropolis:2,full:4")
+        coder = DistributedSparseCoder(mesh, res, reg, cfg)
+        chain = coder.chain
+        assert chain.ns == (2, 2, 2) and chain.period == 4
+        assert coder.schedule_period == 4 and coder.is_time_varying
+        A0 = coder.combiner_sequence()[0]
+        np.testing.assert_allclose(
+            A0, np.kron(chain.combiners[2],
+                        np.kron(chain.combiners[1], chain.combiners[0])))
+        assert topo.is_doubly_stochastic(np.asarray(A0))
+
+        Ws, xs = coder.shard(W, x)
+        # adaptive mu pmax'd over ALL THREE agent axes: identical everywhere
+        mus = np.asarray(coder.adaptive_mu(Ws))
+        assert mus.shape == (NTOT,)
+        assert float(np.ptp(mus)) == 0.0, mus
+        assert abs(float(mus[0]) - mu_ref) < 1e-7 * mu_ref
+
+        nu_ref, y_ref, _ = diffusion_infer(
+            res, reg, W_blocks, x, chain.as_callable(), ones,
+            DiffusionConfig(iters=ITERS), mu=jnp.asarray(mu_ref, x.dtype))
+        nu_d, y_d = coder.solve_per_agent(Ws, xs)
+        nu_err = float(jnp.max(jnp.abs(jnp.asarray(nu_d) - nu_ref)))
+        y_err = float(jnp.max(jnp.abs(jnp.asarray(y_d) - y_ref)))
+        print("chain fp32 nu_err", nu_err, "y_err", y_err)
+        assert nu_err < 1e-4, nu_err
+        assert y_err < 1e-4, y_err
+
+        # t0 phase offset: engine at t0=1 == reference on the shifted seq
+        fn = chain.as_callable()
+        nu_ref1, _, _ = diffusion_infer(
+            res, reg, W_blocks, x, (lambda t: fn(t + 1)), ones,
+            DiffusionConfig(iters=ITERS), mu=jnp.asarray(mu_ref, x.dtype))
+        nu_d1, _ = coder.solve_per_agent(Ws, xs, t0=1)
+        err1 = float(jnp.max(jnp.abs(jnp.asarray(nu_d1) - nu_ref1)))
+        print("chain fp32 t0=1 nu_err", err1)
+        assert err1 < 1e-4, err1
+
+        # -- q8 on both outer hops: quantization-sized neighborhood --------
+        cfgq = DistConfig(mode="chain", iters=ITERS, mu=-1.0, topology_seed=7,
+                          levels="ring_metropolis,ring_metropolis:2:q8,full:4:q8")
+        coderq = DistributedSparseCoder(mesh, res, reg, cfgq)
+        nu_q, _ = coderq.solve_per_agent(Ws, xs)
+        q_dev = float(jnp.max(jnp.abs(jnp.asarray(nu_q) - nu_ref)))
+        print("chain q8 deviation", q_dev)
+        assert np.isfinite(np.asarray(nu_q)).all()
+        assert q_dev < 1e-2, q_dev
+
+        # -- stale outermost hop: explicit one-step-delayed reference ------
+        cfgs = DistConfig(mode="chain", iters=ITERS, mu=-1.0, topology_seed=7,
+                          levels="ring_metropolis,ring_metropolis:2,full:4:stale")
+        coders = DistributedSparseCoder(mesh, res, reg, cfgs)
+        sch = coders.chain
+        f_out = sch.combiners[2]
+        D = np.diag(np.diag(f_out))          # self weights: current value
+        Off = f_out - D                      # neighbor weights: delayed value
+        n_in = 4                             # agents under each outer group
+        I_in = np.eye(n_in)
+        k_out = 4                            # outer stride
+
+        def inner_at(t):
+            F0 = sch.combiners[0]
+            F1 = sch.combiners[1] if t % 2 == 0 else np.eye(2)
+            return np.kron(np.eye(2), np.kron(F1, F0))
+
+        grad_all = jax.vmap(
+            lambda W_k, nu_k: agent_grad(
+                res, reg, W_k, nu_k, x, jnp.asarray(1.0, x.dtype),
+                NTOT, jnp.asarray(float(NTOT), x.dtype)))
+        mu = jnp.asarray(mu_ref, x.dtype)
+        nu = jnp.zeros((NTOT,) + x.shape, x.dtype)
+        u_sent = jnp.zeros_like(nu)          # zeros before the first firing
+        for t in range(ITERS):
+            g = grad_all(W_blocks, nu)
+            psi = nu - mu * g
+            u = jnp.tensordot(
+                jnp.asarray(inner_at(t).T, x.dtype), psi, axes=1)
+            if t % k_out == 0:
+                comb = (
+                    jnp.tensordot(jnp.asarray(np.kron(D, I_in).T, x.dtype),
+                                  u, axes=1)
+                    + jnp.tensordot(jnp.asarray(np.kron(Off, I_in).T, x.dtype),
+                                    u_sent, axes=1)
+                )
+                u_sent = u                   # messages shipped THIS firing
+            else:
+                comb = u
+            nu = res.project_dual(comb)
+        nu_s, _ = coders.solve_per_agent(Ws, xs)
+        s_err = float(jnp.max(jnp.abs(jnp.asarray(nu_s) - nu)))
+        print("chain stale-outermost nu_err", s_err)
+        assert s_err < 1e-4, s_err
+        print("OK")
+    """, n_devices=8)
+    assert "OK" in out

@@ -195,3 +195,112 @@ def test_torus_dims_factorization():
     for n in (4, 6, 8, 9, 12, 16):
         r, c = topo.torus_dims(n)
         assert r * c == n and r <= c
+
+
+# ---------------------------------------------------------------------------
+# N-level Kronecker chains (LevelSpec / KroneckerChain)
+# ---------------------------------------------------------------------------
+
+
+def test_parse_level_specs_grammar():
+    """`kind[:stride][:wire][:stale]` per comma, innermost level first;
+    tokens after the kind are order-free; junk tokens and empty levels are
+    rejected with the offending token in the message."""
+    specs = topo.parse_level_specs("torus,ring_metropolis:2:q8,ring:4:q8:stale")
+    assert [s.kind for s in specs] == ["torus", "ring_metropolis", "ring"]
+    assert [s.gossip_every for s in specs] == [1, 2, 4]
+    assert [s.wire for s in specs] == ["fp32", "q8", "q8"]
+    assert [s.stale for s in specs] == [False, False, True]
+    # token order after the kind does not matter
+    a = topo.parse_level_specs("ring:q8:2")[0]
+    b = topo.parse_level_specs("ring:2:q8")[0]
+    assert a == b
+    with pytest.raises(ValueError, match="florp"):
+        topo.parse_level_specs("ring:florp")
+    with pytest.raises(ValueError, match="empty level"):
+        topo.parse_level_specs("ring,,torus")
+    with pytest.raises(ValueError):
+        topo.LevelSpec(kind="ring", gossip_every=0)
+    with pytest.raises(ValueError):
+        topo.LevelSpec(kind="ring", wire="fp64")
+
+
+def test_chain_mixing_rate_matches_dense_3factor_svd():
+    """sigma_2 computed from the factor spectra equals numpy.linalg.svd of
+    the dense 3-factor Kronecker product (the property the chain rate
+    computation relies on: Kronecker SVs = products of factor SVs)."""
+    f0 = topo.make_topology("ring_metropolis", 4)
+    f1 = topo.make_topology("erdos", 3, seed=5)
+    f2 = topo.make_topology("full", 2)
+    dense = np.kron(f2, np.kron(f1, f0))
+    sv = np.linalg.svd(dense, compute_uv=False)
+    np.testing.assert_allclose(
+        topo.chain_mixing_rate(f0, f1, f2), sv[1], atol=1e-12)
+
+
+def test_chain_period_is_stride_lcm_and_sequence_gates():
+    """schedule period = lcm of level strides, and the dense sequence gates
+    each factor to identity off its firing iterations."""
+    chain = topo.make_kronecker_chain(
+        topo.parse_level_specs("ring_metropolis,ring_metropolis:2,full:3"),
+        (2, 2, 2), seed=3)
+    assert chain.period == 6
+    seq = chain.sequence()
+    assert len(seq) == 6
+    eye = np.eye(2)
+    f0, f1, f2 = chain.combiners
+    for t, A in enumerate(seq):
+        want = np.kron(f2 if t % 3 == 0 else eye,
+                       np.kron(f1 if t % 2 == 0 else eye, f0))
+        np.testing.assert_allclose(A, want, atol=1e-12)
+        assert topo.is_doubly_stochastic(np.asarray(A))
+    # windowed effective rate sits in (0, 1] and is finite
+    assert 0.0 <= chain.effective_mixing_rate() <= 1.0
+
+
+def test_chain_grown_is_innermost_only_deterministic_and_preserving():
+    """grown() touches only level 0: outer factors verbatim, erdos inner
+    adjacency keeps the old block (neighborhood-preserving growth), and the
+    result is seed-deterministic."""
+    specs = topo.parse_level_specs("erdos,ring_metropolis:2,full")
+    chain = topo.make_kronecker_chain(specs, (4, 2, 2), p=0.6, seed=11)
+    g1 = chain.grown(6)
+    g2 = chain.grown(6)
+    assert g1.ns == (6, 2, 2)
+    for a, b in zip(g1.combiners[1:], chain.combiners[1:]):
+        np.testing.assert_array_equal(a, b)  # outer levels untouched
+    np.testing.assert_array_equal(
+        g1.adjacencies[0][:4, :4], chain.adjacencies[0])
+    for a, b in zip(g1.combiners, g2.combiners):
+        np.testing.assert_array_equal(a, b)  # deterministic
+    with pytest.raises(ValueError):
+        chain.grown(2)  # shrinking is not growth
+
+
+def test_chain_validation_stale_only_outermost():
+    """Staleness is only admissible on the outermost hop (the long-haul
+    link it exists to hide); inner stale levels are rejected, as are
+    unknown kinds."""
+    with pytest.raises(ValueError, match="outermost"):
+        topo.make_kronecker_chain(
+            topo.parse_level_specs("ring:stale,full"), (2, 2))
+    ok = topo.make_kronecker_chain(
+        topo.parse_level_specs("ring_metropolis,full:stale"), (2, 2))
+    assert ok.specs[1].stale
+    with pytest.raises(KeyError):
+        topo.make_kronecker_chain(
+            topo.parse_level_specs("hypercube,full"), (2, 2))
+
+
+def test_hier_topology_chain_equivalence():
+    """The two-level HierarchicalTopology and its chain() view agree on
+    factors, dense sequence, and mixing rate — the shim is the chain."""
+    ht = topo.make_hierarchical_topology(
+        "ring_metropolis", "torus", 2, 4, gossip_every=2, seed=7)
+    chain = ht.chain()
+    np.testing.assert_array_equal(chain.combiners[0], ht.A_model)
+    np.testing.assert_array_equal(chain.combiners[1], ht.A_pod)
+    assert chain.period == ht.period == 2
+    for a, b in zip(chain.sequence(), ht.sequence()):
+        np.testing.assert_allclose(a, b)
+    assert chain.effective_mixing_rate() == ht.effective_mixing_rate()

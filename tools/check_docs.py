@@ -18,6 +18,14 @@ never imports the package, so it runs without jax installed):
    removed in the CLI fails HERE, not in a reader's shell).  Only tokens
    AFTER the `serve_dict` module name count — env prefixes like
    `XLA_FLAGS=--xla_...` on the same command line are not CLI flags.
+4. **Chain-spec check** — every value following `--levels` on those same
+   fenced serve_dict command lines must parse under the
+   `core/topology.parse_level_specs` grammar
+   (`kind[:stride][:wire][:stale]` per comma-separated level): known
+   graph kind, integer stride >= 1, known wire format, `stale` on the
+   outermost level only.  The kind and wire vocabularies are read off
+   `topology.py`'s `GRAPH_KINDS` / `LEVEL_WIRES` tuples by AST, so a kind
+   added or renamed there is picked up here without importing jax.
 
 Exit code 0 = clean; 1 = problems (each printed as `file: problem`).
 """
@@ -193,17 +201,110 @@ def check_serve_flags() -> list:
     return problems
 
 
+TOPOLOGY_MOD = REPO / "src" / "repro" / "core" / "topology.py"
+
+
+def topology_vocab() -> tuple:
+    """(graph kinds, wire formats) accepted by the chain-spec grammar, read
+    off `core/topology.py`'s module-level `GRAPH_KINDS` / `LEVEL_WIRES`
+    tuple assignments by AST (never imported, so this runs without jax)."""
+    tree = ast.parse(TOPOLOGY_MOD.read_text())
+    vocab = {}
+    for node in tree.body:
+        if not isinstance(node, ast.Assign):
+            continue
+        for t in node.targets:
+            if isinstance(t, ast.Name) and t.id in ("GRAPH_KINDS", "LEVEL_WIRES"):
+                vocab[t.id] = tuple(
+                    e.value
+                    for e in node.value.elts  # type: ignore[attr-defined]
+                    if isinstance(e, ast.Constant) and isinstance(e.value, str)
+                )
+    return vocab.get("GRAPH_KINDS", ()), vocab.get("LEVEL_WIRES", ())
+
+
+def _levels_spec_problems(spec: str, kinds: tuple, wires: tuple) -> list:
+    """Stdlib re-implementation of the `parse_level_specs` grammar: the
+    problems (empty if valid) with one comma-separated chain spec string."""
+    problems = []
+    parts = spec.split(",")
+    for i, part in enumerate(parts):
+        tokens = [t.strip() for t in part.strip().split(":") if t.strip()]
+        if not tokens:
+            problems.append(f"empty level {i} in {spec!r}")
+            continue
+        if tokens[0] not in kinds:
+            problems.append(
+                f"unknown graph kind {tokens[0]!r} in level {i} of {spec!r} "
+                f"(options: {kinds})"
+            )
+        for tok in tokens[1:]:
+            if tok.lstrip("-").isdigit():
+                if int(tok) < 1:
+                    problems.append(f"stride {tok} < 1 in level {i} of {spec!r}")
+            elif tok == "stale":
+                if i != len(parts) - 1:
+                    problems.append(
+                        f"'stale' on non-outermost level {i} of {spec!r} "
+                        f"(one-step staleness is outermost-hop only)"
+                    )
+            elif tok not in wires:
+                problems.append(
+                    f"unknown token {tok!r} in level {i} of {spec!r} "
+                    f"(expected an integer stride, one of {wires}, or 'stale')"
+                )
+    return problems
+
+
+def check_levels_specs() -> list:
+    """Cross-check every `--levels <spec>` in fenced serve_dict examples
+    against the chain-spec grammar — a kind renamed in `GRAPH_KINDS` or a
+    malformed doc example fails HERE, not in a reader's shell."""
+    kinds, wires = topology_vocab()
+    problems = []
+    if not kinds or not wires:
+        return [f"{TOPOLOGY_MOD.relative_to(REPO)}: GRAPH_KINDS/LEVEL_WIRES "
+                f"tuples not found (chain-spec check cannot run)"]
+    for md in DOC_FILES:
+        if not md.exists():
+            continue
+        for block in _FENCE_RE.findall(md.read_text()):
+            for line in block.replace("\\\n", " ").splitlines():
+                if "serve_dict" not in line:
+                    continue
+                toks = line.split("serve_dict", 1)[1].split()
+                for flag, val in zip(toks, toks[1:] + [""]):
+                    if flag != "--levels":
+                        continue
+                    if not val or val.startswith("--"):
+                        problems.append(
+                            f"{md.relative_to(REPO)}: fenced serve_dict "
+                            f"example has --levels with no spec value"
+                        )
+                        continue
+                    for p in _levels_spec_problems(val, kinds, wires):
+                        problems.append(
+                            f"{md.relative_to(REPO)}: fenced serve_dict "
+                            f"example --levels spec invalid: {p}"
+                        )
+    return problems
+
+
 def main() -> int:
-    problems = check_links() + check_docstrings() + check_serve_flags()
+    problems = (check_links() + check_docstrings() + check_serve_flags()
+                + check_levels_specs())
     for p in problems:
         print(f"DOCS-CHECK FAIL  {p}")
     if problems:
         print(f"\n{len(problems)} problem(s).")
         return 1
     n_links = len(DOC_FILES)
+    kinds, wires = topology_vocab()
     print(f"docs-check OK: {n_links} markdown files, "
           f"{len(SEAM_MODULES)} seam modules clean, "
-          f"{len(serve_cli_flags())} serve_dict flags cross-checked")
+          f"{len(serve_cli_flags())} serve_dict flags cross-checked, "
+          f"--levels specs validated against {len(kinds)} kinds / "
+          f"{len(wires)} wire formats")
     return 0
 
 

@@ -122,34 +122,19 @@ for name, base_cfg in ROWS.items():
             period = info.get("schedule_period", 1)
             pod_every = info.get("pod_gossip_every", 1)
             b_loc = B  # data=1 here
-            if cfg.mode in ("exact", "exact_fista"):
-                per_iter = 2 * b_loc * M * 4        # one psum (all-reduce) of (B, M) fp32
-            elif cfg.mode == "ring_q8":
-                per_iter = 2 * b_loc * (M * 1 + 4)  # two ppermutes of int8 + row scale
-            elif cfg.mode in ("ring", "ring_async"):
-                per_iter = 2 * b_loc * M * 4        # two ppermutes of fp32
-            elif hier:
-                # per-level split, innermost (model) level first: each
-                # level's messages are already averaged over its gossip
-                # stride by LevelPlan.messages_per_iter; q8 levels ship
-                # int8 payloads + one fp32 scale per row.
-                cs = coder.chain_gossip_schedule
-                per_level = [
-                    lvl.messages_per_iter * (
-                        b_loc * (M * 1 + 4) if lvl.quantized
-                        else b_loc * M * 4
-                    )
-                    for lvl in cs.levels
-                ]
-                per_iter = sum(per_level)
+            # The engine's own analytic byte model — one (axis, bytes/iter)
+            # pair per gossip level, strides and wire formats averaged in.
+            # tools/analyze's jaxpr layer cross-checks these exact numbers
+            # against the traced collectives (rule: wire-bytes), so this
+            # table cannot silently drift from the compiled protocol.
+            pairs = coder.wire_bytes_per_iter(b_loc, M)
+            per_iter = sum(v for _, v in pairs)
+            if hier:
+                # per-level split, innermost (model) level first
+                per_level = [v for _, v in pairs]
                 if len(per_level) == 2:
                     # legacy per-axis aliases for the two-level rows
                     per_model, per_pod = per_level
-            else:  # graph families: one fp32 message per schedule round,
-                   # averaged over the period for time-varying sequences
-                scheds = coder.gossip_schedules
-                per_iter = (sum(s.messages_per_iter for s in scheds)
-                            / len(scheds)) * b_loc * M * 4
         Ws, xs = coder.shard(W, x)
         nu, _ = coder.solve(Ws, xs)
         if float(snr_db(nu_ref, nu)) >= P["target_db"]:

@@ -242,9 +242,9 @@ class DistConfig:
     # chain mode: N-level spec list (LevelSpecs or a parse_level_specs string)
     levels: Tuple[topo.LevelSpec, ...] = ()
     informed: str = "all"  # "all" | "one" (only model-rank 0 sees x)
-    model_axis: str = "model"
-    data_axes: Tuple[str, ...] = ("data",)
-    pod_axis: str = "pod"  # inter-pod gossip axis (hier modes)
+    model_axis: str = dist.MODEL_AXIS
+    data_axes: Tuple[str, ...] = (dist.DATA_AXIS,)
+    pod_axis: str = dist.POD_AXIS  # inter-pod gossip axis (hier modes)
     use_kernel: bool = False  # fuse local hot loop with the Pallas kernel
     # Pallas interpret mode: None -> auto-detect (interpret only where there
     # is no Mosaic lowering, i.e. CPU); True/False force it explicitly.
@@ -1196,6 +1196,42 @@ class DistributedSparseCoder:
             caps.hierarchical and self.schedule_period > 1
         )
 
+    def wire_bytes_per_iter(
+        self, b_loc: int, m: int
+    ) -> Tuple[Tuple[str, float], ...]:
+        """Analytic wire bytes per solve iteration per device, split by
+        gossip level: ((axis_name, bytes), ...) innermost-first, for a
+        (b_loc, m) per-device dual block.
+
+        This is the SINGLE source of truth for the engine's byte
+        accounting: benchmarks/gossip_modes.py reports these numbers and
+        tools/analyze cross-checks them against bytes counted directly off
+        the abstract jaxpr (`abstract_trace`), so the formula, the
+        benchmark, and the traced program cannot drift apart.  One fp32
+        message is `4*b_loc*m` bytes, one q8 message `b_loc*(m+4)` (int8
+        payload + one fp32 scale per row); exact modes count their psum
+        all-reduce at 2x the operand (reduce-scatter + all-gather);
+        time-varying modes average over the schedule period and strided
+        levels over their gossip stride."""
+        caps = MODE_REGISTRY[self.cfg.mode]
+        ax = self.cfg.model_axis
+        fp32 = 4 * b_loc * m
+        q8 = b_loc * (m + 4)
+        if caps.family == "exact":
+            return ((ax, 2.0 * fp32),)
+        if caps.family == "ring":
+            # ring_shift: one ppermute to each neighbor per iteration
+            return ((ax, 2.0 * (q8 if caps.quantized else fp32)),)
+        if caps.family in ("graph", "tv"):
+            scheds = self.gossip_schedules
+            rounds = sum(s.messages_per_iter for s in scheds) / len(scheds)
+            return ((ax, rounds * (q8 if caps.quantized else fp32)),)
+        # hierarchical family: one entry per chain level, innermost-first
+        per_level = dist.wire_bytes_per_level(self._csched, b_loc, m)
+        return tuple(
+            (lvl.axis, b) for lvl, b in zip(self._csched.levels, per_level)
+        )
+
     def shard(self, W: Array, x: Array) -> Tuple[Array, Array]:
         """Place global arrays with the engine's shardings (for benchmarks)."""
         W = jax.device_put(W, NamedSharding(self.mesh, self._w_spec))
@@ -1289,6 +1325,123 @@ class DistributedSparseCoder:
             )
             W2 = jnp.concatenate([jax.device_get(W), fresh], axis=1)
         return new_coder, new_coder.snapshot(W2)
+
+
+# ---------------------------------------------------------------------------
+# Abstract-trace hooks: device-free tracing of the shard_map bodies, the
+# seam tools/analyze verifies protocol invariants through.  Everything here
+# runs on an AbstractMesh — no devices, no XLA_FLAGS, no compilation.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceCase:
+    """One abstractly-traceable engine configuration: `axis_sizes` is the
+    ordered mesh (outermost axis first), `cfg` the mode under test.  The
+    default catalog (`mode_trace_cases`) covers every MODE_REGISTRY mode,
+    so the static analyzer's coverage check is `{case.cfg.mode} >= MODES`."""
+
+    name: str
+    cfg: DistConfig
+    axis_sizes: Tuple[Tuple[str, int], ...]
+
+
+def mode_trace_cases() -> Tuple[TraceCase, ...]:
+    """The analyzer's trace matrix: at least one case per registry mode,
+    on the smallest mesh that exercises the mode's collectives (flat modes
+    on 4 agents; the hierarchical family on multi-pod meshes, including
+    the benchmark's 3-level chain row so its static byte accounting is
+    cross-checked, plus a stale-outermost-hop variant)."""
+    flat = ((dist.DATA_AXIS, 1), (dist.MODEL_AXIS, 4))
+    hier_axes = (
+        (dist.POD_AXIS, 2), (dist.DATA_AXIS, 1), (dist.MODEL_AXIS, 2)
+    )
+    chain_axes = (
+        (f"{dist.POD_AXIS}2", 2), (dist.POD_AXIS, 2),
+        (dist.DATA_AXIS, 1), (dist.MODEL_AXIS, 2),
+    )
+    cases = []
+    for mode, caps in MODE_REGISTRY.items():
+        if caps.hierarchical:
+            continue
+        cases.append(TraceCase(mode, DistConfig(mode=mode, iters=2), flat))
+    cases.append(TraceCase(
+        "hier",
+        DistConfig(mode="hier", iters=2, topology="torus",
+                   pod_topology="ring_metropolis"),
+        hier_axes,
+    ))
+    cases.append(TraceCase(
+        "hier_q8",
+        DistConfig(mode="hier_q8", iters=2, topology="torus",
+                   pod_topology="ring_metropolis", pod_gossip_every=2),
+        hier_axes,
+    ))
+    # the benchmark's chain:3level row, verbatim — the analyzer's byte
+    # cross-check ties the traced program to the reported numbers
+    cases.append(TraceCase(
+        "chain:3level",
+        DistConfig(mode="chain", iters=2,
+                   levels="ring_metropolis,ring_metropolis:2:q8,full:4:q8"),
+        chain_axes,
+    ))
+    cases.append(TraceCase(
+        "chain:stale",
+        DistConfig(
+            mode="chain", iters=2,
+            levels="ring_metropolis,ring_metropolis:2:q8,full:4:q8:stale",
+        ),
+        chain_axes,
+    ))
+    return tuple(cases)
+
+
+def abstract_trace(
+    cfg: DistConfig,
+    axis_sizes: Sequence[Tuple[str, int]],
+    *,
+    batch: int = 8,
+    m: int = 32,
+    kb: int = 4,
+    task: str = "nmf",
+    fit: bool = False,
+):
+    """Trace one engine body abstractly: build the coder on a device-free
+    `dist.abstract_mesh` with the given (outermost-first) axis sizes and
+    `jax.make_jaxpr` its per-device solve (or fit) body with every mesh
+    axis bound in the trace's axis env.
+
+    Returns (coder, closed_jaxpr).  The jaxpr is the per-DEVICE program —
+    exactly what shard_map stages — with psum/ppermute/pmax equations
+    carrying their axis names, so protocol checks (collective parity
+    across cond branches, permutation-table validity, wire-byte
+    accounting) run without any devices.  `kb` is the per-agent atom
+    count and `batch` the GLOBAL batch (divided over the data axes)."""
+    from repro.core.conjugates import make_task
+
+    names = tuple(n for n, _ in axis_sizes)
+    sizes = tuple(s for _, s in axis_sizes)
+    mesh = dist.abstract_mesh(sizes, names)
+    res, reg = make_task(task)
+    coder = DistributedSparseCoder(mesh, res, reg, cfg)
+    size_of = dict(axis_sizes)
+    b_loc = batch // int(
+        np.prod([size_of[a] for a in cfg.data_axes], dtype=np.int64)
+    )
+    W_loc = jax.ShapeDtypeStruct((m, kb), jnp.float32)
+    x_loc = jax.ShapeDtypeStruct((b_loc, m), jnp.float32)
+    t0 = jax.ShapeDtypeStruct((), jnp.int32)
+    axis_env = [(n, s) for n, s in axis_sizes]
+    if fit:
+        mu_w = jax.ShapeDtypeStruct((), jnp.float32)
+        jaxpr = jax.make_jaxpr(coder._fit_body, axis_env=axis_env)(
+            W_loc, x_loc, mu_w, t0
+        )
+    else:
+        jaxpr = jax.make_jaxpr(coder._solve_body, axis_env=axis_env)(
+            W_loc, x_loc, t0
+        )
+    return coder, jaxpr
 
 
 # ---------------------------------------------------------------------------

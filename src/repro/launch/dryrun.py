@@ -31,6 +31,7 @@ from repro.configs.base import SHAPES, ShapeConfig, cell_supported
 from repro.launch.mesh import HW, make_production_mesh
 from repro.optim import optimizers as opt_mod
 from repro.runtime import compat
+from repro.runtime import dist
 from repro.runtime import steps as S
 
 OUT_ROOT = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
@@ -269,7 +270,9 @@ def run_dictlearn(multi_pod: bool, outdir: pathlib.Path, resume: bool = False,
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     res, reg = make_task("nmf", gamma=0.05, delta=0.1)
-    data_axes = ("pod", "data") if multi_pod else ("data",)
+    data_axes = (
+        (dist.POD_AXIS, dist.DATA_AXIS) if multi_pod else (dist.DATA_AXIS,)
+    )
     coder = DistributedSparseCoder(
         mesh, res, reg,
         DistConfig(mode=mode, iters=iters, data_axes=data_axes),

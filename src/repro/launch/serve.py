@@ -41,7 +41,7 @@ def main() -> None:
     if not cfg.decode_supported:
         raise SystemExit(f"{args.arch} is encoder-only; no decode loop")
     d, m = (int(x) for x in args.mesh.split("x"))
-    mesh = dist.make_mesh((d, m), ("data", "model"))
+    mesh = dist.make_mesh((d, m), (dist.DATA_AXIS, dist.MODEL_AXIS))
     rules = shd.rules_for(cfg)
     S.install_activation_sharding(mesh, rules)
 

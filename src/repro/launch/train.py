@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.configs import ALIASES, ARCH_IDS, get_config, get_smoke_config
 from repro.data import synthetic as data
-from repro.runtime.dist import make_mesh
+from repro.runtime.dist import DATA_AXIS, MODEL_AXIS, make_mesh
 from repro.optim import optimizers as opt_mod
 from repro.optim.schedules import cosine_warmup
 from repro.runtime.runner import RunnerConfig, TrainRunner
@@ -70,7 +70,7 @@ def main() -> None:
 
     cfg = get_config(args.arch) if args.full_config else get_smoke_config(args.arch)
     d, m = (int(x) for x in args.mesh.split("x"))
-    mesh = make_mesh((d, m), ("data", "model"))
+    mesh = make_mesh((d, m), (DATA_AXIS, MODEL_AXIS))
     opt = opt_mod.for_arch(cfg, lr=cosine_warmup(args.lr, warmup=20, total=args.steps))
 
     ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix=f"ckpt_{args.arch}_")
@@ -99,7 +99,7 @@ def main() -> None:
 
     if args.rescale_mesh:
         d2, m2 = (int(x) for x in args.rescale_mesh.split("x"))
-        new_mesh = make_mesh((d2, m2), ("data", "model"))
+        new_mesh = make_mesh((d2, m2), (DATA_AXIS, MODEL_AXIS))
         runner2 = TrainRunner.rescale(cfg, new_mesh, opt, run_cfg)
         state2 = runner2.restore_or_init(args.seed)
         step2 = int(jax.device_get(state2["step"]))

@@ -124,7 +124,7 @@ def moe_a2a_body(
     tp: int,  # model-axis size
     capacity_factor: float,
     data_axes: Tuple[str, ...],
-    model_axis: str = "model",
+    model_axis: str = dist.MODEL_AXIS,
     router_dtype=jnp.float32,
     wire_dtype: str = "native",  # native | int8 (q8 gathers + dispatch a2a)
 ) -> Tuple[Array, Array]:
@@ -249,7 +249,7 @@ def apply_moe_a2a(
     top_k: int,
     n_experts: int,
     capacity_factor: float = 1.25,
-    model_axis: str = "model",
+    model_axis: str = dist.MODEL_AXIS,
     wire_dtype: str = "native",
 ) -> Tuple[Array, Array]:
     """shard_map wrapper. Param shardings: router (embed->data, None),
@@ -257,9 +257,12 @@ def apply_moe_a2a(
     embed->data); x: (batch->dp, seq->model, None)."""
     sizes = dist.axis_sizes(mesh)
     tp = sizes.get(model_axis, 1)
-    data_axes = tuple(a for a in ("data",) if a in sizes)
-    dp_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    data_axes = tuple(a for a in (dist.DATA_AXIS,) if a in sizes)
+    dp_axes = tuple(
+        a for a in (dist.POD_AXIS, dist.DATA_AXIS) if a in sizes
+    )
     bspec = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+    da = dist.DATA_AXIS if dist.DATA_AXIS in sizes else None
 
     body = functools.partial(
         moe_a2a_body,
@@ -268,16 +271,16 @@ def apply_moe_a2a(
         model_axis=model_axis, wire_dtype=wire_dtype,
     )
     param_specs = {
-        "router": P("data" if "data" in sizes else None, None),
-        "wi": P(model_axis, "data" if "data" in sizes else None, None),
-        "wg": P(model_axis, "data" if "data" in sizes else None, None),
-        "wo": P(model_axis, None, "data" if "data" in sizes else None),
+        "router": P(da, None),
+        "wi": P(model_axis, da, None),
+        "wg": P(model_axis, da, None),
+        "wo": P(model_axis, None, da),
     }
     if "shared" in params:
         param_specs["shared"] = {
-            "wi": P("data" if "data" in sizes else None, None),
-            "wg": P("data" if "data" in sizes else None, None),
-            "wo": P(None, "data" if "data" in sizes else None),
+            "wi": P(da, None),
+            "wg": P(da, None),
+            "wo": P(None, da),
         }
     fn = shard_map(
         lambda p, xx: body(p, xx),

@@ -114,14 +114,15 @@ def _moe_ffn(moe_params: dict, f_in: Array, cfg):
     otherwise the GSPMD capacity-dispatch path (single-host tests, decode)."""
     if cfg.moe_impl == "a2a":
         from repro.models.sharding_hook import current_mesh
+        from repro.runtime import dist
 
         mesh = current_mesh()
         if mesh is not None:
             sizes = dict(mesh.shape)
-            tp = sizes.get("model", 1)
+            tp = sizes.get(dist.MODEL_AXIS, 1)
             b, s, _ = f_in.shape
             dp = 1
-            for a in ("pod", "data"):
+            for a in (dist.POD_AXIS, dist.DATA_AXIS):
                 dp *= sizes.get(a, 1)
             if (cfg.n_experts % tp == 0 and s % tp == 0 and b % dp == 0
                     and tp > 1):

@@ -371,7 +371,9 @@ def slstm_block_auto(params: dict, x: Array, *, n_heads: int,
     if mesh is None:
         return slstm_block(params, x, n_heads=n_heads, return_cache=return_cache)
     sizes = dist.axis_sizes(mesh)
-    dp_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    dp_axes = tuple(
+        a for a in (dist.POD_AXIS, dist.DATA_AXIS) if a in sizes
+    )
     b = x.shape[0]
     while dp_axes and b % _prod(sizes, dp_axes):
         dp_axes = dp_axes[1:]

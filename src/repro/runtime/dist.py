@@ -127,6 +127,7 @@ __all__ = [
     "LevelPlan",
     "ChainSchedule",
     "chain_schedule",
+    "wire_bytes_per_level",
     "chain_state_init",
     "chain_combine",
     "HierSchedule",
@@ -409,13 +410,20 @@ def graph_combine_switch(
     time-varying run is ONE compiled program.  `t` must be replicated across
     the axis (it always is: it comes from the scan counter), otherwise ranks
     would disagree about which collective to issue.
+
+    The period selector uses `lax.rem` (valid because t >= 0 always: it is a
+    scan counter seeded at t0 >= 0) so the switch index stays a single
+    readable `rem` equation in the jaxpr — tools/analyze reads the period
+    off it when attributing wire bytes to branches.
     """
     if len(scheds) == 1:
         return graph_combine(x, axis_name, scheds[0])
     branches = [
         (lambda v, s=s: graph_combine(v, axis_name, s)) for s in scheds
     ]
-    return jax.lax.switch(jnp.mod(t, len(scheds)), branches, x)
+    return jax.lax.switch(
+        jax.lax.rem(t, jnp.int32(len(scheds))), branches, x
+    )
 
 
 def graph_combine_quantized_switch(
@@ -430,7 +438,9 @@ def graph_combine_quantized_switch(
     quantizes its outgoing message once as (q, s) = quantize_q8(...), and the
     active schedule (index t mod P, via lax.switch) ships (int8 payload,
     scales) on each of its rounds.  Error feedback stays with the caller,
-    exactly as in graph_combine_quantized / ring_q8."""
+    exactly as in graph_combine_quantized / ring_q8.  Selector uses
+    `lax.rem` for the same jaxpr-readability reason as
+    graph_combine_switch (t >= 0 always)."""
     if len(scheds) == 1:
         return graph_combine_quantized(x_self, q, s, axis_name, scheds[0])
     branches = [
@@ -438,7 +448,9 @@ def graph_combine_quantized_switch(
             op[0], op[1], op[2], axis_name, sch))
         for sch in scheds
     ]
-    return jax.lax.switch(jnp.mod(t, len(scheds)), branches, (x_self, q, s))
+    return jax.lax.switch(
+        jax.lax.rem(t, jnp.int32(len(scheds))), branches, (x_self, q, s)
+    )
 
 
 def graph_combine_quantized(
@@ -561,6 +573,26 @@ def chain_schedule(chain, axes: Sequence[str]) -> ChainSchedule:
     return ChainSchedule(levels=tuple(levels))
 
 
+def wire_bytes_per_level(
+    cs: ChainSchedule, b_loc: int, m: int
+) -> Tuple[float, ...]:
+    """Stride-averaged wire bytes per iteration on each level of `cs`,
+    innermost-first, for a (b_loc, m) per-device code block.
+
+    One fp32 message is `4 * b_loc * m` bytes; one q8 message is
+    `b_loc * (m + 4)` (int8 payload plus one fp32 scale per row).  Each
+    level ships `messages_per_iter` messages (already divided by its
+    gossip stride).  This is the SINGLE source of truth for per-level
+    byte accounting: `DistributedSparseCoder.wire_bytes_per_iter`, the
+    gossip benchmarks, and the tools/analyze jaxpr byte cross-check all
+    call it rather than re-deriving the formula."""
+    out = []
+    for lvl in cs.levels:
+        msg = b_loc * (m + 4) if lvl.quantized else 4 * b_loc * m
+        out.append(lvl.messages_per_iter * msg)
+    return tuple(out)
+
+
 def chain_state_init(x: Array, cs: ChainSchedule) -> Tuple:
     """Initial per-level carry state for `chain_combine`: one (err, recv)
     pair per level.  `err` is the q8 error-feedback accumulator
@@ -584,7 +616,9 @@ def _level_apply(v: Array, lvl: LevelPlan, t, err, recv_prev):
     the PREVIOUS firing round's for a stale level — and return
     (combined, new_err, new_recv).  Skipped iterations (t % gossip_every
     != 0) pass everything through unchanged via lax.cond; both branches
-    share one pytree structure, so the gated run stays one program."""
+    share one pytree structure, so the gated run stays one program.  The
+    gate uses `lax.rem` (t >= 0 always — scan counter) so the stride is a
+    single readable `rem` equation in the jaxpr for tools/analyze."""
 
     def fire(op):
         u, e, r_prev = op
@@ -609,7 +643,7 @@ def _level_apply(v: Array, lvl: LevelPlan, t, err, recv_prev):
     if lvl.gossip_every == 1:
         return fire((v, err, recv_prev))
     return jax.lax.cond(
-        jnp.equal(jnp.mod(t, lvl.gossip_every), 0),
+        jnp.equal(jax.lax.rem(t, jnp.int32(lvl.gossip_every)), 0),
         fire, lambda op: op, (v, err, recv_prev),
     )
 

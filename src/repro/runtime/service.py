@@ -124,6 +124,22 @@ class DictionaryService:
             results = [f.result() for f in futs]     # (nu_i, y_i) each
     """
 
+    # The service's concurrency contract, machine-checked by
+    # tools/analyze (rules lock-discipline / exec-lock): every mutation of
+    # a _GUARDED_BY_LOCK attribute outside __init__ must hold `self._lock`
+    # (stats()/readers see consistent snapshots), and every call of an
+    # _EXEC_GUARDED_CALLS engine method outside __init__ must hold
+    # `self._exec_lock` (multi-device programs with collectives must not
+    # interleave).  Extending the service = extending these tuples.
+    _GUARDED_BY_LOCK = (
+        "submitted", "coded", "fit_steps", "fit_failures", "learn_dropped",
+        "fit_first_error", "published", "grow_events", "_latencies",
+        "_sched_t", "_coder", "_live", "_snap", "_comb_info",
+    )
+    _EXEC_GUARDED_CALLS = (
+        "solve", "fit_batch", "score", "solve_per_agent", "adaptive_mu",
+    )
+
     def __init__(
         self,
         coder: DistributedSparseCoder,
@@ -247,11 +263,15 @@ class DictionaryService:
     def _warmup(self, coder: DistributedSparseCoder, W: Array) -> None:
         """Trigger the jit compiles on a zero micro-batch so the first real
         request (and the first post-growth request) pays no compile stall.
-        Results are discarded; with mu_w=0 the fit warmup is a no-op step."""
+        Results are discarded; with mu_w=0 the fit warmup is a no-op step.
+
+        Runs WITHOUT taking `_exec_lock` itself: start() calls it before
+        any worker thread exists, and _maybe_grow() calls it while already
+        holding the lock (threading.Lock is not reentrant)."""
         z = jnp.zeros((self._pad, self._m), jnp.float32)
-        jax.block_until_ready(coder.solve(W, z))
+        jax.block_until_ready(coder.solve(W, z))  # analyze: allow(exec-lock)
         if self.cfg.learn:
-            jax.block_until_ready(coder.fit_batch(W, z, 0.0))
+            jax.block_until_ready(coder.fit_batch(W, z, 0.0))  # analyze: allow(exec-lock)
 
     def start(self) -> "DictionaryService":
         if self._threads:

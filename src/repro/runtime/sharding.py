@@ -30,21 +30,21 @@ AxisAssign = Union[None, str, Tuple[str, ...]]
 def default_rules(fsdp_embed: bool = False) -> Dict[str, AxisAssign]:
     return {
         # parameters
-        "vocab": "model",
-        "heads": "model",
-        "kv_heads": "model",
-        "ffn": "model",
+        "vocab": dist.MODEL_AXIS,
+        "heads": dist.MODEL_AXIS,
+        "kv_heads": dist.MODEL_AXIS,
+        "ffn": dist.MODEL_AXIS,
         "ffn_out": None,
-        "experts": "model",
+        "experts": dist.MODEL_AXIS,
         "expert_ffn": None,
-        "embed": "data" if fsdp_embed else None,
+        "embed": dist.DATA_AXIS if fsdp_embed else None,
         "embed_out": None,
-        "ssm_inner": "model",
-        "ssm_heads": "model",
+        "ssm_inner": dist.MODEL_AXIS,
+        "ssm_heads": dist.MODEL_AXIS,
         # activations / caches
-        "batch": ("pod", "data"),
-        "kv_seq": "model",
-        "seq": "model",
+        "batch": (dist.POD_AXIS, dist.DATA_AXIS),
+        "kv_seq": dist.MODEL_AXIS,
+        "seq": dist.MODEL_AXIS,
     }
 
 
@@ -117,7 +117,7 @@ def tree_shardings(mesh: Mesh, axes_tree, shape_tree, rules: Dict[str, AxisAssig
 
 def batch_spec(mesh: Mesh, rules: Dict[str, AxisAssign]) -> P:
     """Sharding for (B, ...) model inputs: batch over the DP axes."""
-    assign = rules.get("batch", ("pod", "data"))
+    assign = rules.get("batch", (dist.POD_AXIS, dist.DATA_AXIS))
     cand = (assign,) if isinstance(assign, str) else tuple(assign)
     sizes = _mesh_axes(mesh)
     cand = tuple(a for a in cand if a in sizes)
@@ -127,7 +127,7 @@ def batch_spec(mesh: Mesh, rules: Dict[str, AxisAssign]) -> P:
 def batch_shardings(mesh: Mesh, batch_tree, rules: Dict[str, AxisAssign]):
     """Shard every model input on the batch (leading) dim where divisible."""
     sizes = _mesh_axes(mesh)
-    assign = rules.get("batch", ("pod", "data"))
+    assign = rules.get("batch", (dist.POD_AXIS, dist.DATA_AXIS))
     cand = (assign,) if isinstance(assign, str) else tuple(assign)
     cand = tuple(a for a in cand if a in sizes)
 

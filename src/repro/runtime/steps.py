@@ -22,6 +22,7 @@ from repro.models import model as M
 from repro.models import transformer as tfm
 from repro.models.layers import split_tree
 from repro.optim.optimizers import Optimizer
+from repro.runtime import dist
 from repro.runtime import sharding as shd
 
 Array = jax.Array
@@ -42,10 +43,10 @@ def install_activation_sharding(mesh: Mesh, rules, *, seq_axis: str = "seq") -> 
     and reduce-scatter at exit.
     """
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    batch_assign = rules.get("batch", ("pod", "data"))
+    batch_assign = rules.get("batch", (dist.POD_AXIS, dist.DATA_AXIS))
     batch_axes = (batch_assign,) if isinstance(batch_assign, str) else tuple(batch_assign)
     batch_axes = tuple(a for a in batch_axes if a in sizes)
-    seq_assign = rules.get(seq_axis, "model")
+    seq_assign = rules.get(seq_axis, dist.MODEL_AXIS)
     seq_axes = () if seq_assign is None else (
         (seq_assign,) if isinstance(seq_assign, str) else tuple(seq_assign)
     )
@@ -62,7 +63,9 @@ def install_activation_sharding(mesh: Mesh, rules, *, seq_axis: str = "seq") -> 
             return None
         return axes_ if len(axes_) > 1 else axes_[0]
 
-    model_axes = ("model",) if "model" in sizes else ()
+    model_axes = (
+        (dist.MODEL_AXIS,) if dist.MODEL_AXIS in sizes else ()
+    )
 
     def hook(x, kind: str = "residual"):
         if kind == "residual":

@@ -1,0 +1,10 @@
+"""Known-bad fixture: one bare axis-name string literal.  Must fire
+`axis-literal` exactly once (this docstring mentioning "model" in prose is
+exempt, as is the *_AXIS constant below).
+"""
+
+SOME_AXIS = "model"  # canonical constant definition: exempt
+
+
+def spec():
+    return ("model", None)  # bare literal: the one expected finding

@@ -1,0 +1,21 @@
+"""Known-bad fixture: an engine execution registered in
+_EXEC_GUARDED_CALLS invoked outside `with self._exec_lock:`.  Must fire
+`exec-lock` exactly once (the guarded call in good() must NOT fire).
+"""
+
+import threading
+
+
+class Runner:
+    _EXEC_GUARDED_CALLS = ("solve",)
+
+    def __init__(self):
+        self._exec_lock = threading.Lock()
+        self._coder = None
+
+    def bad(self, x):
+        return self._coder.solve(x, x)  # unguarded: the one expected finding
+
+    def good(self, x):
+        with self._exec_lock:
+            return self._coder.solve(x, x)

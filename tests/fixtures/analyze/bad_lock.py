@@ -1,0 +1,21 @@
+"""Known-bad fixture: a counter registered in _GUARDED_BY_LOCK mutated
+outside `with self._lock:`.  Must fire `lock-discipline` exactly once (the
+guarded mutation in ok() must NOT fire).
+"""
+
+import threading
+
+
+class Service:
+    _GUARDED_BY_LOCK = ("counter",)
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.counter = 0
+
+    def bump(self):
+        self.counter += 1  # unguarded: the one expected finding
+
+    def ok(self):
+        with self._lock:
+            self.counter += 1

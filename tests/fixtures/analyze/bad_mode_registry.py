@@ -1,0 +1,24 @@
+"""Known-bad fixture: a MODE_REGISTRY declaring a time-varying mode whose
+config __post_init__ never rejects a missing topology_schedule.  Must fire
+`mode-registry` exactly once.  (The mode name reuses "graph_tv" so the
+tests-reference half of the rule stays satisfied by the real test suite.)
+"""
+
+
+class ModeCaps:
+    def __init__(self, family, time_varying=False):
+        self.family = family
+        self.time_varying = time_varying
+
+
+MODE_REGISTRY = {
+    "graph_tv": ModeCaps(family="tv", time_varying=True),
+}
+
+
+class Cfg:
+    mode = "graph_tv"
+
+    def __post_init__(self):
+        if self.mode not in MODE_REGISTRY:
+            raise ValueError(f"unknown mode {self.mode!r}")

@@ -1,0 +1,13 @@
+"""Known-bad fixture: a ppermute table that is NOT a permutation (device 1
+is written twice, device 0 never) — jax traces this without complaint and
+zero-fills the missing destination at run time.  Must fire
+`ppermute-table` exactly once.
+"""
+
+import jax
+
+AXIS_ENV = (("model", 2),)
+
+
+def fn(x):
+    return jax.lax.ppermute(x, "model", [(0, 1), (1, 1)])

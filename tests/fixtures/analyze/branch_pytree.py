@@ -1,0 +1,18 @@
+"""Known-bad fixture: cond branches returning different pytree structures.
+jax rejects this at trace time; `rules_jaxpr.trace_check` converts the
+TypeError into a `branch-structure` finding (exactly one).
+"""
+
+import jax
+
+AXIS_ENV = (("model", 2),)
+
+
+def fn(x):
+    def two(v):
+        return (v, v)
+
+    def one(v):
+        return (v,)
+
+    return jax.lax.cond(x.sum() > 0, two, one, x)

@@ -1,0 +1,23 @@
+"""Known-bad fixture: a cond whose SELECTOR varies over a mesh axis while
+its branches issue different collectives.  Devices at even/odd axis index
+take different branches in the same step — the even devices block in a
+ppermute rendezvous the odd devices never enter.  Must fire
+`cond-collective-parity` exactly once.
+"""
+
+import jax
+import jax.numpy as jnp
+
+AXIS_ENV = (("model", 2),)
+
+
+def fn(x):
+    idx = jax.lax.axis_index("model")
+
+    def shift(v):
+        return jax.lax.ppermute(v, "model", [(0, 1), (1, 0)])
+
+    def hold(v):
+        return v * 1.0
+
+    return jax.lax.cond(jnp.equal(idx, 0), shift, hold, x)

@@ -1,0 +1,276 @@
+"""Tests for tools/analyze: each rule fires exactly once on its known-bad
+fixture, the repo itself is clean, and the jaxpr layer's wire-byte
+accounting reproduces the engine's analytic numbers (the chain:3level
+row of benchmarks/gossip_modes.py).
+"""
+
+import math
+import pathlib
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+if str(ROOT) not in sys.path:
+    sys.path.insert(0, str(ROOT))
+
+from tools.analyze import all_rules, run_repo  # noqa: E402
+from tools.analyze import rules_ast, rules_jaxpr  # noqa: E402
+from tools.analyze.report import Finding, render_github, render_json  # noqa: E402
+from tools.analyze.walker import filter_suppressed  # noqa: E402
+
+FIXTURES = ROOT / "tests" / "fixtures" / "analyze"
+
+
+def _load_fixture(name):
+    import importlib.util
+
+    spec = importlib.util.spec_from_file_location(name, FIXTURES / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _trace_fixture(mod):
+    import jax
+    import jax.numpy as jnp
+
+    args = (jnp.zeros((2, 4), jnp.float32),)
+    return rules_jaxpr.trace_check(
+        mod.fn, args, mod.AXIS_ENV, file="tests/fixtures/analyze"
+    )
+
+
+# ---------------------------------------------------------------------------
+# jaxpr rules on known-bad fixtures
+# ---------------------------------------------------------------------------
+
+
+def test_cond_mismatch_fires_parity_once():
+    mod = _load_fixture("cond_mismatch")
+    jaxpr, findings = _trace_fixture(mod)
+    assert not findings
+    ck = rules_jaxpr.check_jaxpr(jaxpr, dict(mod.AXIS_ENV))
+    rules = [f.rule for f in ck.findings]
+    assert rules == ["cond-collective-parity"]
+
+
+def test_bad_permutation_fires_table_once():
+    mod = _load_fixture("bad_permutation")
+    jaxpr, findings = _trace_fixture(mod)
+    assert not findings
+    ck = rules_jaxpr.check_jaxpr(jaxpr, dict(mod.AXIS_ENV))
+    rules = [f.rule for f in ck.findings]
+    assert rules == ["ppermute-table"]
+
+
+def test_branch_pytree_fires_structure_once():
+    mod = _load_fixture("branch_pytree")
+    jaxpr, findings = _trace_fixture(mod)
+    assert jaxpr is None
+    assert [f.rule for f in findings] == ["branch-structure"]
+
+
+def test_good_permutation_is_clean():
+    import jax
+    import jax.numpy as jnp
+
+    def fn(x):
+        return jax.lax.ppermute(x, "model", [(0, 1), (1, 0)])
+
+    jaxpr, findings = rules_jaxpr.trace_check(
+        fn, (jnp.zeros((2, 4), jnp.float32),), (("model", 2),), file="t"
+    )
+    assert not findings
+    ck = rules_jaxpr.check_jaxpr(jaxpr, {"model": 2})
+    assert not ck.findings
+
+
+def test_unreadable_gate_fires_wire_bytes_once():
+    # cond branches inside a scan ship different byte counts, but the
+    # selector is a traced input (not a rem-of-counter gate): the firing
+    # fraction is not statically readable -> wire-bytes fires
+    import jax
+    import jax.numpy as jnp
+
+    def fn(x, sel):
+        def body(carry, _):
+            def fire(v):
+                return jax.lax.ppermute(v, "model", [(0, 1), (1, 0)])
+
+            def hold(v):
+                return v
+
+            return jax.lax.cond(sel, fire, hold, carry), None
+
+        y, _ = jax.lax.scan(body, x, None, length=2)
+        return y
+
+    jaxpr, findings = rules_jaxpr.trace_check(
+        fn, (jnp.zeros((2, 4), jnp.float32), jnp.asarray(True)),
+        (("model", 2),), file="t",
+    )
+    assert not findings
+    ck = rules_jaxpr.check_jaxpr(jaxpr, {"model": 2})
+    assert [f.rule for f in ck.findings] == ["wire-bytes"]
+
+
+def test_missing_trace_case_fires_coverage(monkeypatch):
+    from repro.core import distributed as D
+
+    monkeypatch.setattr(D, "mode_trace_cases", lambda: [])
+    findings = rules_jaxpr.run(ROOT)
+    assert {f.rule for f in findings} == {"trace-coverage"}
+    assert len(findings) == len(D.MODES)
+
+
+# ---------------------------------------------------------------------------
+# AST rules on known-bad fixtures
+# ---------------------------------------------------------------------------
+
+
+def test_bad_lock_fires_once():
+    fs = rules_ast.check_lock_discipline(FIXTURES / "bad_lock.py", ROOT)
+    assert [f.rule for f in fs] == ["lock-discipline"]
+    assert "counter" in fs[0].message
+
+
+def test_bad_exec_fires_once():
+    fs = rules_ast.check_exec_lock(FIXTURES / "bad_exec.py", ROOT)
+    assert [f.rule for f in fs] == ["exec-lock"]
+    assert "solve" in fs[0].message
+
+
+def test_bad_axis_fires_once():
+    fs = rules_ast.check_axis_literals(FIXTURES / "bad_axis.py", ROOT)
+    assert [f.rule for f in fs] == ["axis-literal"]
+    assert "'model'" in fs[0].message
+
+
+def test_bad_mode_registry_fires_once():
+    fs = rules_ast.check_mode_registry(
+        FIXTURES / "bad_mode_registry.py", ROOT / "tests", ROOT
+    )
+    assert [f.rule for f in fs] == ["mode-registry"]
+    assert "topology_schedule" in fs[0].message
+
+
+# ---------------------------------------------------------------------------
+# docs rules on a known-bad synthetic tree (one firing per rule)
+# ---------------------------------------------------------------------------
+
+
+def test_doc_rules_each_fire_once(tmp_path):
+    from tools.analyze import rules_docs
+    from tools.analyze.report import counts_by_rule
+
+    (tmp_path / "docs").mkdir()
+    sr = tmp_path / "src" / "repro"
+    (sr / "runtime").mkdir(parents=True)
+    (sr / "core").mkdir()
+    (sr / "launch").mkdir()
+    (sr / "runtime" / "dist.py").write_text(
+        '"""m."""\n\n\ndef documented():\n    """d."""\n\n\n'
+        "def bare():\n    pass\n"
+    )
+    (sr / "core" / "distributed.py").write_text('"""m."""\n')
+    (sr / "core" / "topology.py").write_text(
+        '"""m."""\nGRAPH_KINDS = ("ring",)\nLEVEL_WIRES = ("fp32", "q8")\n'
+    )
+    (sr / "launch" / "serve_dict.py").write_text(
+        '"""m."""\nimport argparse\nap = argparse.ArgumentParser()\n'
+        'ap.add_argument("--levels")\n'
+    )
+    (tmp_path / "README.md").write_text(
+        "[broken](missing.md)\n\n"
+        "```\npython -m repro.launch.serve_dict --fake --levels bogus\n```\n"
+    )
+    counts = counts_by_rule(rules_docs.run(tmp_path))
+    assert counts == {
+        "doc-links": 1,        # missing.md does not resolve
+        "doc-docstrings": 1,   # bare() has no docstring
+        "doc-cli-flags": 1,    # --fake is not an argparse flag
+        "doc-levels-spec": 1,  # 'bogus' is not a graph kind
+    }
+
+
+# ---------------------------------------------------------------------------
+# clean-repo regression + report formats
+# ---------------------------------------------------------------------------
+
+
+def test_repo_is_clean_ast_and_docs():
+    findings, rules, _ = run_repo(ROOT, with_jaxpr=False)
+    assert len(rules) >= 6
+    assert findings == [], "\n".join(f.location() + " " + f.message for f in findings)
+
+
+def test_repo_is_clean_jaxpr():
+    findings = rules_jaxpr.run(ROOT)
+    kept, _ = filter_suppressed(findings, ROOT)
+    assert kept == [], "\n".join(f.location() + " " + f.message for f in kept)
+
+
+def test_all_rules_registered():
+    rules = all_rules(with_jaxpr=True)
+    assert len(rules) == len(set(rules)) >= 13
+    assert "cond-collective-parity" in rules and "doc-links" in rules
+
+
+def test_report_formats():
+    f = Finding("ppermute-table", "src/x.py", 7, "msg\nsecond line")
+    gj = render_github([f])
+    assert "::error file=src/x.py,line=7" in gj and "\n" not in gj.split("::error")[1]
+    import json
+
+    data = json.loads(render_json([f], ("ppermute-table",)))
+    assert data["ok"] is False and data["findings"][0]["line"] == 7
+
+
+# ---------------------------------------------------------------------------
+# wire-byte cross-check: the jaxpr-measured bytes equal the engine's
+# analytic wire_bytes_per_iter — the chain:3level row matches the numbers
+# benchmarks/gossip_modes.py reports
+# ---------------------------------------------------------------------------
+
+
+def _trace_case(case, batch=8, m=32):
+    from repro.core import distributed as D
+
+    sizes = dict(case.axis_sizes)
+    coder, jaxpr = D.abstract_trace(case.cfg, case.axis_sizes, batch=batch, m=m)
+    ck = rules_jaxpr.check_jaxpr(
+        jaxpr, sizes,
+        in_varying=[frozenset(coder._agent_axes),
+                    frozenset(case.cfg.data_axes), frozenset()],
+    )
+    b_loc = batch // int(math.prod(sizes[a] for a in case.cfg.data_axes))
+    return coder, ck, dict(coder.wire_bytes_per_iter(b_loc, m))
+
+
+def _case(name):
+    from repro.core import distributed as D
+
+    return next(c for c in D.mode_trace_cases() if c.name == name)
+
+
+def test_chain_3level_wire_bytes():
+    coder, ck, expected = _trace_case(_case("chain:3level"))
+    assert not ck.findings
+    # fp32 model level (B=8, M=32) = 4*8*32; q8 pod level stride 2 =
+    # 8*(32+4)/2; q8 outer level stride 4 = 8*(32+4)/4
+    assert expected == {"model": 1024.0, "pod": 144.0, "pod2": 72.0}
+    assert ck.bytes_by_axis == pytest.approx(expected)
+
+
+def test_ring_q8_wire_bytes():
+    _, ck, expected = _trace_case(_case("ring_q8"))
+    assert expected == {"model": 576.0}
+    assert ck.bytes_by_axis == pytest.approx(expected)
+
+
+def test_mode_trace_cases_cover_registry():
+    from repro.core import distributed as D
+
+    covered = {c.cfg.mode for c in D.mode_trace_cases()}
+    assert covered == set(D.MODES)

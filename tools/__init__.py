@@ -1,0 +1,4 @@
+"""Repo tooling: stdlib-first checkers that run in CI without executing the
+engine.  `tools.analyze` is the static-analysis package (`python -m
+tools.analyze`); `tools/check_docs.py` is the legacy docs-check CLI, now a
+thin shim over `tools.analyze.rules_docs`."""

@@ -1,0 +1,49 @@
+"""Static analysis for the distributed dictionary-learning engine.
+
+Two layers (docs/ANALYSIS.md has the full rule catalog):
+
+  AST rules (stdlib-only, always available)   tools.analyze.rules_ast
+  Docs rules (stdlib-only)                    tools.analyze.rules_docs
+  Jaxpr rules (need jax, no devices)          tools.analyze.rules_jaxpr
+
+Run everything:  python -m tools.analyze   (add --json / --github / --no-jaxpr)
+
+Suppression: append `# analyze: allow(<rule-id>)` on the finding's line or
+the line directly above (comma-separate several rule ids).
+"""
+
+from __future__ import annotations
+
+import pathlib
+from typing import List, Tuple
+
+from tools.analyze.report import Finding
+from tools.analyze.walker import REPO, filter_suppressed
+
+
+def all_rules(with_jaxpr: bool = True) -> Tuple[str, ...]:
+    from tools.analyze import rules_ast, rules_docs
+
+    rules = rules_docs.RULES + rules_ast.RULES
+    if with_jaxpr:
+        from tools.analyze import rules_jaxpr
+
+        rules = rules + rules_jaxpr.RULES
+    return rules
+
+
+def run_repo(
+    root: pathlib.Path = REPO, *, with_jaxpr: bool = True
+) -> Tuple[List[Finding], Tuple[str, ...], int]:
+    """Run every layer; returns (findings, active rules, n_suppressed)."""
+    from tools.analyze import rules_ast, rules_docs
+
+    findings: List[Finding] = []
+    findings.extend(rules_docs.run(root))
+    findings.extend(rules_ast.run(root))
+    if with_jaxpr:
+        from tools.analyze import rules_jaxpr
+
+        findings.extend(rules_jaxpr.run(root))
+    kept, n_suppressed = filter_suppressed(findings, root)
+    return kept, all_rules(with_jaxpr), n_suppressed

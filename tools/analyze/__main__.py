@@ -1,0 +1,52 @@
+"""CLI: python -m tools.analyze [--json] [--github] [--no-jaxpr] [--root DIR]
+
+Exit code 0 when the repo is clean, 1 when any finding survives
+suppression filtering.  --github emits ::error workflow annotations IN
+ADDITION to the chosen report format.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m tools.analyze")
+    ap.add_argument("--json", action="store_true", help="machine-readable report")
+    ap.add_argument("--github", action="store_true",
+                    help="also emit GitHub workflow ::error annotations")
+    ap.add_argument("--no-jaxpr", action="store_true",
+                    help="skip the jaxpr layer (runs without jax installed)")
+    ap.add_argument("--root", type=pathlib.Path, default=None,
+                    help="repo root (default: auto-detected)")
+    args = ap.parse_args(argv)
+
+    repo = pathlib.Path(__file__).resolve().parents[2]
+    root = (args.root or repo).resolve()
+    # tools.* imports resolve against the repo this file lives in; the
+    # engine (repro.*) against <root>/src so --root can target a checkout.
+    for p in (str(root / "src"), str(repo)):
+        if p not in sys.path:
+            sys.path.insert(0, p)
+
+    from tools.analyze import run_repo
+    from tools.analyze.report import render_github, render_json, render_text
+
+    findings, rules, n_suppressed = run_repo(root, with_jaxpr=not args.no_jaxpr)
+
+    if args.json:
+        print(render_json(findings, rules))
+    else:
+        print(render_text(findings, rules))
+        if n_suppressed:
+            print(f"({n_suppressed} finding(s) suppressed via "
+                  f"'# analyze: allow(...)')")
+    if args.github and findings:
+        print(render_github(findings))
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

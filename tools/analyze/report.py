@@ -1,0 +1,81 @@
+"""Finding model + output renderers for `tools.analyze`.
+
+A `Finding` is one rule violation anchored to a `file:line` in the repo.
+Three renderers share the same finding list: human text (default), `--json`
+(machine-readable, the CI artifact), and `--github` (GitHub Actions
+workflow-command annotations, so findings show up inline on PR diffs).
+Pure stdlib — the docs rules and the check_docs shim import this without
+jax installed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation: `rule` is the registry id (e.g. "ppermute-table"),
+    `file` a repo-relative path, `line` 1-based (1 when the rule has no
+    better anchor), `message` the human-readable explanation."""
+
+    rule: str
+    file: str
+    line: int
+    message: str
+
+    def location(self) -> str:
+        """The clickable `file:line` anchor."""
+        return f"{self.file}:{self.line}"
+
+
+def render_text(findings: Sequence[Finding], rules: Sequence[str]) -> str:
+    """Human-readable report: one `file:line [rule] message` per finding,
+    plus a one-line summary."""
+    lines = [
+        f"{f.location()} [{f.rule}] {f.message}" for f in findings
+    ]
+    if findings:
+        lines.append(
+            f"\n{len(findings)} finding(s) from {len(rules)} active rule(s)."
+        )
+    else:
+        lines.append(f"analyze OK: 0 findings from {len(rules)} active rule(s).")
+    return "\n".join(lines)
+
+
+def render_json(findings: Sequence[Finding], rules: Sequence[str]) -> str:
+    """Machine-readable report (the `--json` CI artifact): active rules,
+    findings, and an `ok` verdict."""
+    return json.dumps(
+        {
+            "ok": not findings,
+            "rules": list(rules),
+            "findings": [dataclasses.asdict(f) for f in findings],
+        },
+        indent=2,
+    )
+
+
+def render_github(findings: Sequence[Finding]) -> str:
+    """GitHub Actions `::error` workflow commands — one per finding, so the
+    static-analysis job annotates the PR diff at the offending line."""
+    out: List[str] = []
+    for f in findings:
+        # workflow-command values must not contain newlines
+        msg = f.message.replace("\n", " ")
+        out.append(
+            f"::error file={f.file},line={f.line},"
+            f"title=analyze/{f.rule}::{msg}"
+        )
+    return "\n".join(out)
+
+
+def counts_by_rule(findings: Sequence[Finding]) -> Dict[str, int]:
+    """Findings per rule id (test + summary helper)."""
+    out: Dict[str, int] = {}
+    for f in findings:
+        out[f.rule] = out.get(f.rule, 0) + 1
+    return out

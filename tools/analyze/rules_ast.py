@@ -1,0 +1,382 @@
+"""AST lint rules (stdlib-only — runs without jax installed).
+
+Rules:
+  lock-discipline  in any class declaring a `_GUARDED_BY_LOCK` tuple (the
+                   service does), every mutation of a registered attribute
+                   outside `__init__` must happen lexically inside
+                   `with self._lock:` — the invariant that makes `stats()`
+                   a consistent snapshot.
+  exec-lock        in any class declaring `_EXEC_GUARDED_CALLS`, every call
+                   of a registered engine-execution method (`solve`,
+                   `fit_batch`, ...) outside `__init__` must happen inside
+                   `with self._exec_lock:` — two multi-device programs
+                   interleaving their collective rendezvous on one device
+                   set deadlock, so executions must serialize.
+  axis-literal     no bare "model"/"data"/"pod" axis-name string literals
+                   in `src/repro` outside the canonical constant
+                   definitions (`*_AXIS = "..."` in runtime/dist.py) —
+                   everything else must go through `dist.MODEL_AXIS` /
+                   `DATA_AXIS` / `POD_AXIS`, `DistConfig.level_axis()`, or
+                   config fields, so renaming an axis is a one-line change.
+  mode-registry    MODE_REGISTRY completeness: every mode key is referenced
+                   by at least one test under tests/, and
+                   `DistConfig.__post_init__` carries a rejection path for
+                   every capability the registry declares (a time-varying
+                   mode without a schedule, a hier mode without
+                   pod_topology, a chain mode without levels, a bad
+                   stride).
+
+The lock rules are REGISTRY-DRIVEN: they key on `_GUARDED_BY_LOCK` /
+`_EXEC_GUARDED_CALLS` class attributes rather than hard-coded class names,
+so the service declares its own contract and the fixture corpus can
+exercise the rules on tiny stand-alone classes.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from tools.analyze.report import Finding
+from tools.analyze.walker import REPO, iter_py_files, parse, rel
+
+RULES = ("lock-discipline", "exec-lock", "axis-literal", "mode-registry")
+
+# Bare axis-name strings the axis-literal rule flags ("pod2"/"pod3"/... via
+# the regex — the outer-level axes of an N-level chain mesh).
+_AXIS_NAMES = ("model", "data", "pod")
+_OUTER_AXIS_RE = re.compile(r"^pod\d+$")
+
+# Attribute calls that mutate their receiver (list/deque/set/dict methods).
+_MUTATOR_METHODS = frozenset({
+    "append", "appendleft", "extend", "insert", "remove", "pop", "popleft",
+    "clear", "add", "update", "discard", "setdefault",
+})
+
+
+def _class_str_tuple(cls: ast.ClassDef, name: str) -> Optional[Tuple[str, ...]]:
+    """The string tuple assigned to class attribute `name` (None if the
+    class doesn't declare it)."""
+    for node in cls.body:
+        targets: List[ast.expr] = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets = [node.target]
+        for t in targets:
+            if isinstance(t, ast.Name) and t.id == name:
+                value = node.value
+                if isinstance(value, (ast.Tuple, ast.List)):
+                    return tuple(
+                        e.value for e in value.elts
+                        if isinstance(e, ast.Constant) and isinstance(e.value, str)
+                    )
+    return None
+
+
+def _with_holds(node: ast.With, lock_attr: str) -> bool:
+    """Whether a `with` statement acquires `self.<lock_attr>`."""
+    for item in node.items:
+        e = item.context_expr
+        if (
+            isinstance(e, ast.Attribute)
+            and e.attr == lock_attr
+            and isinstance(e.value, ast.Name)
+            and e.value.id == "self"
+        ):
+            return True
+    return False
+
+
+def _iter_with_lock(
+    node: ast.AST, lock_attr: str, under: bool
+) -> Iterator[Tuple[ast.AST, bool]]:
+    """Yield every descendant of `node` exactly once, paired with whether
+    it sits lexically inside `with self.<lock_attr>:`.  Nested function
+    bodies reset to unguarded — they run later, possibly without the
+    lock held."""
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, ast.With):
+            inner = under or _with_holds(child, lock_attr)
+            # context expressions evaluate before the lock is acquired
+            for item in child.items:
+                yield item.context_expr, under
+                yield from _iter_with_lock(item.context_expr, lock_attr, under)
+            for stmt in child.body:
+                yield stmt, inner
+                yield from _iter_with_lock(stmt, lock_attr, inner)
+        elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            yield child, False
+            yield from _iter_with_lock(child, lock_attr, False)
+        else:
+            yield child, under
+            yield from _iter_with_lock(child, lock_attr, under)
+
+
+def _self_attr(node: ast.expr) -> Optional[str]:
+    """`self.<name>` -> name, else None."""
+    if (
+        isinstance(node, ast.Attribute)
+        and isinstance(node.value, ast.Name)
+        and node.value.id == "self"
+    ):
+        return node.attr
+    return None
+
+
+def _mutations_at(node: ast.AST, guarded: frozenset) -> List[Tuple[int, str]]:
+    """(line, attr) for registered `self.<attr>` mutations at this single
+    node: assignment targets (incl. tuple unpacking) and mutating method
+    calls like `self._latencies.append(...)`."""
+    out: List[Tuple[int, str]] = []
+    targets: List[ast.expr] = []
+    if isinstance(node, ast.Assign):
+        targets = list(node.targets)
+    elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+        targets = [node.target]
+    flat: List[ast.expr] = []
+    for t in targets:
+        flat.extend(t.elts if isinstance(t, (ast.Tuple, ast.List)) else [t])
+    for t in flat:
+        name = _self_attr(t)
+        if name in guarded:
+            out.append((t.lineno, name))
+    if (
+        isinstance(node, ast.Call)
+        and isinstance(node.func, ast.Attribute)
+        and node.func.attr in _MUTATOR_METHODS
+    ):
+        name = _self_attr(node.func.value)
+        if name in guarded:
+            out.append((node.lineno, name))
+    return out
+
+
+def check_lock_discipline(path: pathlib.Path, root: pathlib.Path = REPO) -> List[Finding]:
+    """lock-discipline over one file: see the module docstring."""
+    findings: List[Finding] = []
+    r = rel(path, root)
+    for cls in [n for n in ast.walk(parse(path)) if isinstance(n, ast.ClassDef)]:
+        guarded = _class_str_tuple(cls, "_GUARDED_BY_LOCK")
+        if not guarded:
+            continue
+        gset = frozenset(guarded)
+        for meth in cls.body:
+            if not isinstance(meth, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if meth.name == "__init__":
+                continue  # construction precedes any concurrent reader
+            for node, under in _iter_with_lock(meth, "_lock", False):
+                if under:
+                    continue
+                for line, name in _mutations_at(node, gset):
+                    findings.append(Finding(
+                        "lock-discipline", r, line,
+                        f"{cls.name}.{meth.name} mutates self.{name} outside "
+                        f"`with self._lock:` — every registered counter "
+                        f"mutation must hold the lock so stats() snapshots "
+                        f"stay consistent (see _GUARDED_BY_LOCK)",
+                    ))
+    return findings
+
+
+def check_exec_lock(path: pathlib.Path, root: pathlib.Path = REPO) -> List[Finding]:
+    """exec-lock over one file: see the module docstring."""
+    findings: List[Finding] = []
+    r = rel(path, root)
+    for cls in [n for n in ast.walk(parse(path)) if isinstance(n, ast.ClassDef)]:
+        guarded = _class_str_tuple(cls, "_EXEC_GUARDED_CALLS")
+        if not guarded:
+            continue
+        gset = frozenset(guarded)
+        for meth in cls.body:
+            if not isinstance(meth, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if meth.name == "__init__":
+                continue
+            for node, under in _iter_with_lock(meth, "_exec_lock", False):
+                if under:
+                    continue
+                if (
+                    isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in gset
+                ):
+                    findings.append(Finding(
+                        "exec-lock", r, node.lineno,
+                        f"{cls.name}.{meth.name} calls .{node.func.attr}(...) "
+                        f"outside `with self._exec_lock:` — multi-device "
+                        f"programs with collectives deadlock if two "
+                        f"interleave their rendezvous on one device set, so "
+                        f"engine executions must serialize "
+                        f"(see _EXEC_GUARDED_CALLS)",
+                    ))
+    return findings
+
+
+def _is_axis_literal(value: str) -> bool:
+    return value in _AXIS_NAMES or bool(_OUTER_AXIS_RE.match(value))
+
+
+def check_axis_literals(path: pathlib.Path, root: pathlib.Path = REPO) -> List[Finding]:
+    """axis-literal over one file: flag every bare axis-name string
+    constant, except (a) docstrings, (b) literal fragments inside f-strings
+    (prose), and (c) the canonical `<NAME>_AXIS = "..."` constant
+    definitions."""
+    findings: List[Finding] = []
+    r = rel(path, root)
+    tree = parse(path)
+
+    skip: set = set()
+    for node in ast.walk(tree):
+        # docstrings: a Constant that is the sole expression statement
+        if isinstance(node, ast.Expr) and isinstance(node.value, ast.Constant):
+            skip.add(id(node.value))
+        # f-string fragments are prose, not axis names
+        if isinstance(node, ast.JoinedStr):
+            for v in node.values:
+                if isinstance(v, ast.Constant):
+                    skip.add(id(v))
+        # the canonical constant definitions: MODEL_AXIS = "model" etc.
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Constant):
+            if any(
+                isinstance(t, ast.Name) and t.id.endswith("_AXIS")
+                for t in node.targets
+            ):
+                skip.add(id(node.value))
+
+    for node in ast.walk(tree):
+        if (
+            isinstance(node, ast.Constant)
+            and isinstance(node.value, str)
+            and _is_axis_literal(node.value)
+            and id(node) not in skip
+        ):
+            findings.append(Finding(
+                "axis-literal", r, node.lineno,
+                f"bare axis-name literal {node.value!r} — use the canonical "
+                f"constants (dist.MODEL_AXIS / DATA_AXIS / POD_AXIS), "
+                f"DistConfig.level_axis(), or a config field so axis "
+                f"renames stay one-line changes",
+            ))
+    return findings
+
+
+def _mode_registry_caps(tree: ast.Module) -> Dict[str, Dict[str, object]]:
+    """Parse `MODE_REGISTRY = {"mode": ModeCaps(family=..., flag=True), ...}`
+    into {mode: {kwarg: value}} without importing the module."""
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        if not any(
+            isinstance(t, ast.Name) and t.id == "MODE_REGISTRY"
+            for t in node.targets
+        ):
+            continue
+        if not isinstance(node.value, ast.Dict):
+            continue
+        out: Dict[str, Dict[str, object]] = {}
+        for k, v in zip(node.value.keys, node.value.values):
+            if not (isinstance(k, ast.Constant) and isinstance(k.value, str)):
+                continue
+            caps: Dict[str, object] = {}
+            if isinstance(v, ast.Call):
+                for kw in v.keywords:
+                    if isinstance(kw.value, ast.Constant):
+                        caps[kw.arg] = kw.value.value
+            out[k.value] = caps
+        return out
+    return {}
+
+
+def _post_init_raise_strings(tree: ast.Module) -> List[str]:
+    """Every string constant inside a `raise` statement of any
+    `__post_init__` method in the module (the rejection messages)."""
+    out: List[str] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and node.name == "__post_init__":
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Raise):
+                    for c in ast.walk(sub):
+                        if isinstance(c, ast.Constant) and isinstance(c.value, str):
+                            out.append(c.value)
+    return out
+
+
+def check_mode_registry(
+    distributed_path: pathlib.Path,
+    tests_dir: pathlib.Path,
+    root: pathlib.Path = REPO,
+) -> List[Finding]:
+    """mode-registry: every MODE_REGISTRY key is referenced by a test, and
+    `__post_init__` rejects every misconfiguration class the registry's
+    capability flags imply (no schedule for a time-varying mode, no
+    pod_topology for a hier mode, no levels for a chain mode, bad
+    stride)."""
+    findings: List[Finding] = []
+    r = rel(distributed_path, root)
+    tree = parse(distributed_path)
+    registry = _mode_registry_caps(tree)
+    if not registry:
+        return [Finding(
+            "mode-registry", r, 1,
+            "MODE_REGISTRY dict not found (completeness check cannot run)",
+        )]
+
+    # (a) every mode referenced by at least one test file
+    test_text = "\n".join(
+        p.read_text() for p in sorted(tests_dir.rglob("test_*.py"))
+    )
+    for mode in registry:
+        if f'"{mode}"' not in test_text and f"'{mode}'" not in test_text:
+            findings.append(Finding(
+                "mode-registry", r, 1,
+                f"mode {mode!r} is in MODE_REGISTRY but no test under "
+                f"{tests_dir.name}/ references it — every mode needs a "
+                f"parity/behavior test",
+            ))
+
+    # (b) __post_init__ rejection paths per capability flag
+    raise_text = " ".join(_post_init_raise_strings(tree))
+    required: List[Tuple[str, str]] = []
+    if any(c.get("time_varying") for c in registry.values()):
+        required.append((
+            "topology_schedule",
+            "a time-varying mode with no combiner sequence",
+        ))
+    if any(c.get("hierarchical") for c in registry.values()):
+        required.append((
+            "pod_topology", "a hier mode with no inter-pod combiner kind"
+        ))
+        required.append((
+            "levels", "a chain mode with no level list"
+        ))
+        required.append((
+            "pod_gossip_every", "a non-positive inter-pod gossip stride"
+        ))
+    for token, why in required:
+        if token not in raise_text:
+            findings.append(Finding(
+                "mode-registry", r, 1,
+                f"__post_init__ has no rejection message mentioning "
+                f"{token!r} ({why} must fail at construction, not deep "
+                f"inside schedule compilation)",
+            ))
+    return findings
+
+
+def run(root: pathlib.Path = REPO) -> List[Finding]:
+    """All four AST rules over the repo (`src/repro` scope)."""
+    findings: List[Finding] = []
+    for path in iter_py_files(root, ("src/repro",)):
+        findings.extend(check_lock_discipline(path, root))
+        findings.extend(check_exec_lock(path, root))
+        findings.extend(check_axis_literals(path, root))
+    findings.extend(check_mode_registry(
+        root / "src" / "repro" / "core" / "distributed.py",
+        root / "tests",
+        root,
+    ))
+    return findings

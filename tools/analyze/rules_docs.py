@@ -1,0 +1,342 @@
+"""Docs-health rules (the four gates of the legacy `tools/check_docs.py`,
+now registry rules of `tools.analyze`; the old CLI is a thin shim over
+these).  Pure stdlib and AST-based — never imports the package, so the
+docs-check CI lane keeps running without jax installed.
+
+Rules:
+  doc-links        every relative markdown link in README.md / docs/*.md
+                   resolves to a file or directory in the repo.
+  doc-docstrings   every exported symbol of the public seam modules
+                   (runtime/dist.py, core/distributed.py, core/topology.py)
+                   has a docstring — top-level defs/classes (per __all__
+                   when present) and public methods of public classes.
+  doc-cli-flags    every `--flag` on a fenced `serve_dict` command line in
+                   the docs exists in launch/serve_dict.py's argparse.
+  doc-levels-spec  every `--levels <spec>` on those command lines parses
+                   under the core/topology.parse_level_specs grammar (kind
+                   and wire vocabularies read off GRAPH_KINDS / LEVEL_WIRES
+                   by AST).
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+from typing import List, Sequence, Tuple
+
+from tools.analyze.report import Finding
+from tools.analyze.walker import REPO, parse, rel
+
+RULES = ("doc-links", "doc-docstrings", "doc-cli-flags", "doc-levels-spec")
+
+
+def doc_files(root: pathlib.Path = REPO) -> List[pathlib.Path]:
+    """README.md plus every docs/*.md, the surface the docs rules scan."""
+    return [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+
+
+def seam_modules(root: pathlib.Path = REPO) -> List[pathlib.Path]:
+    """The public seam modules held to the docstring bar."""
+    return [
+        root / "src" / "repro" / "runtime" / "dist.py",
+        root / "src" / "repro" / "core" / "distributed.py",
+        root / "src" / "repro" / "core" / "topology.py",
+    ]
+
+
+# [text](target) — stop at the first unescaped closing paren; image paths
+# must resolve too, so the leading ! is not excluded.
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+_FENCE_RE = re.compile(r"```.*?\n(.*?)```", re.S)
+_FLAG_RE = re.compile(r"--[A-Za-z][A-Za-z0-9-]*")
+
+
+def _line_of(text: str, pos: int) -> int:
+    return text.count("\n", 0, pos) + 1
+
+
+def check_links(root: pathlib.Path = REPO) -> List[Finding]:
+    """doc-links: every relative markdown link resolves inside the repo
+    (http(s)/mailto/pure-anchor links skipped; `path#anchor` checks path)."""
+    findings: List[Finding] = []
+    for md in doc_files(root):
+        if not md.exists():
+            findings.append(Finding("doc-links", rel(md, root), 1, "file missing"))
+            continue
+        text = md.read_text()
+        # blank out fenced code blocks (command examples aren't links) while
+        # preserving offsets so line numbers stay right
+        def _blank(m: "re.Match[str]") -> str:
+            return re.sub(r"[^\n]", " ", m.group(0))
+
+        text_nofence = re.sub(r"```.*?```", _blank, text, flags=re.S)
+        for m in _LINK_RE.finditer(text_nofence):
+            target = m.group(1)
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                findings.append(Finding(
+                    "doc-links", rel(md, root), _line_of(text_nofence, m.start()),
+                    f"broken relative link '{target}' (-> {resolved})",
+                ))
+    return findings
+
+
+def _exported_names(tree: ast.Module) -> List[str]:
+    """Names in __all__ if the module defines one, else every public
+    top-level def/class name."""
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == "__all__":
+                    return [
+                        e.value
+                        for e in node.value.elts  # type: ignore[attr-defined]
+                        if isinstance(e, ast.Constant) and isinstance(e.value, str)
+                    ]
+    return [
+        n.name
+        for n in tree.body
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef))
+        and not n.name.startswith("_")
+    ]
+
+
+def check_docstrings(root: pathlib.Path = REPO) -> List[Finding]:
+    """doc-docstrings: module docstring + docstrings on every exported /
+    public top-level symbol and every public method of public classes of
+    the seam modules."""
+    findings: List[Finding] = []
+    for mod in seam_modules(root):
+        r = rel(mod, root)
+        tree = parse(mod)
+        exported = set(_exported_names(tree))
+        defined = {
+            n.name: n
+            for n in tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef))
+        }
+        if not ast.get_docstring(tree):
+            findings.append(Finding(
+                "doc-docstrings", r, 1, "module docstring missing"
+            ))
+        # __all__ entries that are re-exports (imported names) have no local
+        # definition — their docstring lives in the defining module.
+        for name in sorted(exported & set(defined)):
+            node = defined[name]
+            if not ast.get_docstring(node):
+                findings.append(Finding(
+                    "doc-docstrings", r, node.lineno,
+                    f"exported symbol '{name}' has no docstring",
+                ))
+        # public top-level defs/classes outside __all__ are still part of
+        # the seam surface for readers — hold them to the same bar.
+        for name, node in sorted(defined.items()):
+            if name.startswith("_") or name in exported:
+                continue
+            if not ast.get_docstring(node):
+                findings.append(Finding(
+                    "doc-docstrings", r, node.lineno,
+                    f"public symbol '{name}' has no docstring",
+                ))
+        # public methods of public classes
+        for cname, cnode in sorted(defined.items()):
+            if not isinstance(cnode, ast.ClassDef) or cname.startswith("_"):
+                continue
+            for meth in cnode.body:
+                if not isinstance(meth, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                if meth.name.startswith("_") and meth.name != "__init__":
+                    continue
+                if meth.name == "__init__" and not meth.body:
+                    continue
+                if not ast.get_docstring(meth):
+                    # __init__ may legitimately be documented by the class
+                    if meth.name == "__init__" and ast.get_docstring(cnode):
+                        continue
+                    findings.append(Finding(
+                        "doc-docstrings", r, meth.lineno,
+                        f"public method '{cname}.{meth.name}' has no docstring",
+                    ))
+    return findings
+
+
+def serve_cli_path(root: pathlib.Path = REPO) -> pathlib.Path:
+    """The CLI module whose argparse surface the doc examples must match."""
+    return root / "src" / "repro" / "launch" / "serve_dict.py"
+
+
+def serve_cli_flags(root: pathlib.Path = REPO) -> set:
+    """The `--flag` names `launch/serve_dict.py` actually accepts, read off
+    its `add_argument("--...")` calls by AST (never imported, so this runs
+    without jax installed)."""
+    tree = parse(serve_cli_path(root))
+    flags = set()
+    for node in ast.walk(tree):
+        if (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "add_argument"
+        ):
+            for arg in node.args:
+                if (
+                    isinstance(arg, ast.Constant)
+                    and isinstance(arg.value, str)
+                    and arg.value.startswith("--")
+                ):
+                    flags.add(arg.value)
+    return flags
+
+
+def _fenced_serve_lines(md: pathlib.Path) -> List[Tuple[int, str]]:
+    """(line number, logical command line) pairs for every serve_dict
+    invocation inside a fenced code block (backslash-continued lines joined
+    into one logical command; the reported line is the first physical
+    one)."""
+    text = md.read_text()
+    out: List[Tuple[int, str]] = []
+    for fm in _FENCE_RE.finditer(text):
+        block, base = fm.group(1), _line_of(text, fm.start(1))
+        phys = block.split("\n")
+        i = 0
+        while i < len(phys):
+            start, line = i, phys[i]
+            while line.endswith("\\") and i + 1 < len(phys):
+                i += 1
+                line = line[:-1] + " " + phys[i]
+            if "serve_dict" in line:
+                out.append((base + start, line))
+            i += 1
+    return out
+
+
+def check_serve_flags(root: pathlib.Path = REPO) -> List[Finding]:
+    """doc-cli-flags: every --flag on a serve_dict command line in a fenced
+    code block must be an argparse flag of launch/serve_dict.py.  Only
+    tokens AFTER the `serve_dict` module name count — env prefixes like
+    `XLA_FLAGS=--xla_...` are not CLI flags."""
+    known = serve_cli_flags(root)
+    findings: List[Finding] = []
+    for md in doc_files(root):
+        if not md.exists():
+            continue
+        for line_no, line in _fenced_serve_lines(md):
+            tail = line.split("serve_dict", 1)[1]
+            for m in _FLAG_RE.finditer(tail):
+                if m.group(0) not in known:
+                    findings.append(Finding(
+                        "doc-cli-flags", rel(md, root), line_no,
+                        f"fenced serve_dict example uses {m.group(0)!r}, "
+                        f"which is not an argparse flag of "
+                        f"launch/serve_dict.py",
+                    ))
+    return findings
+
+
+def topology_path(root: pathlib.Path = REPO) -> pathlib.Path:
+    """core/topology.py — source of the chain-spec vocabularies."""
+    return root / "src" / "repro" / "core" / "topology.py"
+
+
+def topology_vocab(root: pathlib.Path = REPO) -> Tuple[tuple, tuple]:
+    """(graph kinds, wire formats) accepted by the chain-spec grammar, read
+    off `core/topology.py`'s module-level `GRAPH_KINDS` / `LEVEL_WIRES`
+    tuple assignments by AST (never imported, so this runs without jax)."""
+    tree = parse(topology_path(root))
+    vocab = {}
+    for node in tree.body:
+        if not isinstance(node, ast.Assign):
+            continue
+        for t in node.targets:
+            if isinstance(t, ast.Name) and t.id in ("GRAPH_KINDS", "LEVEL_WIRES"):
+                vocab[t.id] = tuple(
+                    e.value
+                    for e in node.value.elts  # type: ignore[attr-defined]
+                    if isinstance(e, ast.Constant) and isinstance(e.value, str)
+                )
+    return vocab.get("GRAPH_KINDS", ()), vocab.get("LEVEL_WIRES", ())
+
+
+def levels_spec_problems(spec: str, kinds: tuple, wires: tuple) -> List[str]:
+    """Stdlib re-implementation of the `parse_level_specs` grammar: the
+    problems (empty if valid) with one comma-separated chain spec string."""
+    problems: List[str] = []
+    parts = spec.split(",")
+    for i, part in enumerate(parts):
+        tokens = [t.strip() for t in part.strip().split(":") if t.strip()]
+        if not tokens:
+            problems.append(f"empty level {i} in {spec!r}")
+            continue
+        if tokens[0] not in kinds:
+            problems.append(
+                f"unknown graph kind {tokens[0]!r} in level {i} of {spec!r} "
+                f"(options: {kinds})"
+            )
+        for tok in tokens[1:]:
+            if tok.lstrip("-").isdigit():
+                if int(tok) < 1:
+                    problems.append(f"stride {tok} < 1 in level {i} of {spec!r}")
+            elif tok == "stale":
+                if i != len(parts) - 1:
+                    problems.append(
+                        f"'stale' on non-outermost level {i} of {spec!r} "
+                        f"(one-step staleness is outermost-hop only)"
+                    )
+            elif tok not in wires:
+                problems.append(
+                    f"unknown token {tok!r} in level {i} of {spec!r} "
+                    f"(expected an integer stride, one of {wires}, or 'stale')"
+                )
+    return problems
+
+
+def check_levels_specs(root: pathlib.Path = REPO) -> List[Finding]:
+    """doc-levels-spec: every `--levels <spec>` in fenced serve_dict
+    examples must parse under the chain-spec grammar — a kind renamed in
+    `GRAPH_KINDS` or a malformed doc example fails HERE, not in a reader's
+    shell."""
+    kinds, wires = topology_vocab(root)
+    if not kinds or not wires:
+        return [Finding(
+            "doc-levels-spec", rel(topology_path(root), root), 1,
+            "GRAPH_KINDS/LEVEL_WIRES tuples not found (chain-spec check "
+            "cannot run)",
+        )]
+    findings: List[Finding] = []
+    for md in doc_files(root):
+        if not md.exists():
+            continue
+        for line_no, line in _fenced_serve_lines(md):
+            toks = line.split("serve_dict", 1)[1].split()
+            for flag, val in zip(toks, toks[1:] + [""]):
+                if flag != "--levels":
+                    continue
+                if not val or val.startswith("--"):
+                    findings.append(Finding(
+                        "doc-levels-spec", rel(md, root), line_no,
+                        "fenced serve_dict example has --levels with no "
+                        "spec value",
+                    ))
+                    continue
+                for p in levels_spec_problems(val, kinds, wires):
+                    findings.append(Finding(
+                        "doc-levels-spec", rel(md, root), line_no,
+                        f"fenced serve_dict example --levels spec invalid: {p}",
+                    ))
+    return findings
+
+
+def run(root: pathlib.Path = REPO) -> List[Finding]:
+    """All four docs rules over the repo."""
+    return (
+        check_links(root)
+        + check_docstrings(root)
+        + check_serve_flags(root)
+        + check_levels_specs(root)
+    )

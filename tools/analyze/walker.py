@@ -1,0 +1,97 @@
+"""Shared repo-walking utilities for `tools.analyze` rules.
+
+Pure stdlib: repo-root discovery, cached source/AST loading for the Python
+files a rule wants to scan, and the suppression filter.  Suppression
+syntax (documented in docs/ANALYSIS.md): a finding at line L of a file is
+suppressed iff line L or line L-1 carries the comment
+
+    # analyze: allow(<rule-id>)
+
+Multiple rule ids may be allowed on one line: `# analyze: allow(a, b)`.
+Suppressions are per-line and per-rule on purpose — there is no file-wide
+or rule-wide escape hatch, so every waiver is visible next to the code it
+excuses.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+from typing import Dict, Iterator, List, Sequence, Tuple
+
+from tools.analyze.report import Finding
+
+REPO = pathlib.Path(__file__).resolve().parents[2]
+
+_ALLOW_RE = re.compile(r"#\s*analyze:\s*allow\(([^)]*)\)")
+
+# (source lines, AST) caches keyed by absolute path — rules share parses.
+_SRC_CACHE: Dict[str, List[str]] = {}
+_AST_CACHE: Dict[str, ast.Module] = {}
+
+
+def rel(path: pathlib.Path, root: pathlib.Path = REPO) -> str:
+    """Repo-relative POSIX path string (the `Finding.file` convention)."""
+    return pathlib.Path(path).resolve().relative_to(root).as_posix()
+
+
+def source_lines(path: pathlib.Path) -> List[str]:
+    """Cached source lines of `path` (1-based access via index - 1)."""
+    key = str(pathlib.Path(path).resolve())
+    if key not in _SRC_CACHE:
+        _SRC_CACHE[key] = pathlib.Path(key).read_text().splitlines()
+    return _SRC_CACHE[key]
+
+
+def parse(path: pathlib.Path) -> ast.Module:
+    """Cached `ast.parse` of `path`."""
+    key = str(pathlib.Path(path).resolve())
+    if key not in _AST_CACHE:
+        _AST_CACHE[key] = ast.parse("\n".join(source_lines(path)))
+    return _AST_CACHE[key]
+
+
+def iter_py_files(
+    root: pathlib.Path, subdirs: Sequence[str]
+) -> Iterator[pathlib.Path]:
+    """Every .py file under `root/<subdir>` for each subdir, sorted —
+    deterministic rule output regardless of filesystem order."""
+    for sub in subdirs:
+        base = root / sub
+        if not base.exists():
+            continue
+        yield from sorted(base.rglob("*.py"))
+
+
+def allowed_rules_at(path: pathlib.Path, line: int) -> frozenset:
+    """Rule ids suppressed at `line` of `path`: the union of
+    `# analyze: allow(...)` comments on the line itself and the line above."""
+    lines = source_lines(path)
+    out: set = set()
+    for ln in (line, line - 1):
+        if 1 <= ln <= len(lines):
+            m = _ALLOW_RE.search(lines[ln - 1])
+            if m:
+                out.update(t.strip() for t in m.group(1).split(",") if t.strip())
+    return frozenset(out)
+
+
+def filter_suppressed(
+    findings: Sequence[Finding], root: pathlib.Path = REPO
+) -> Tuple[List[Finding], int]:
+    """Drop findings whose `file:line` carries a matching allow-comment;
+    returns (kept, n_suppressed)."""
+    kept: List[Finding] = []
+    dropped = 0
+    for f in findings:
+        path = root / f.file
+        try:
+            allowed = allowed_rules_at(path, f.line)
+        except OSError:
+            allowed = frozenset()
+        if f.rule in allowed:
+            dropped += 1
+        else:
+            kept.append(f)
+    return kept, dropped

@@ -1,308 +1,41 @@
 #!/usr/bin/env python
 """Docs health check (the CI `docs-check` lane).
 
-Three gates, zero third-party dependencies (pure stdlib, AST-based — it
-never imports the package, so it runs without jax installed):
+Thin shim: the four gates (relative-link resolution, seam-module
+docstrings, serve_dict CLI-flag cross-check, `--levels` chain-spec
+grammar) now live in `tools/analyze/rules_docs.py` as the doc-* rules of
+the unified static-analysis suite (docs/ANALYSIS.md has the catalog).
+This entry point keeps the historical CLI and output format:
 
-1. **Link check** — every relative markdown link in `README.md` and
-   `docs/*.md` must resolve to a file or directory in the repo (http(s)/
-   mailto/pure-anchor links are skipped; `path#anchor` checks the path).
-2. **Docstring check** — every exported symbol of the public seam modules
-   (`runtime/dist.py`, `core/distributed.py`, `core/topology.py`) must have
-   a docstring: top-level functions/classes (per `__all__` when present,
-   else every public name defined in the module) and the public methods of
-   public classes.
-3. **CLI-flag check** — every `--flag` on a `serve_dict` command line
-   inside a fenced code block of `README.md` / `docs/*.md` must exist in
-   `launch/serve_dict.py`'s argparse (catches doc drift: a flag renamed or
-   removed in the CLI fails HERE, not in a reader's shell).  Only tokens
-   AFTER the `serve_dict` module name count — env prefixes like
-   `XLA_FLAGS=--xla_...` on the same command line are not CLI flags.
-4. **Chain-spec check** — every value following `--levels` on those same
-   fenced serve_dict command lines must parse under the
-   `core/topology.parse_level_specs` grammar
-   (`kind[:stride][:wire][:stale]` per comma-separated level): known
-   graph kind, integer stride >= 1, known wire format, `stale` on the
-   outermost level only.  The kind and wire vocabularies are read off
-   `topology.py`'s `GRAPH_KINDS` / `LEVEL_WIRES` tuples by AST, so a kind
-   added or renamed there is picked up here without importing jax.
-
-Exit code 0 = clean; 1 = problems (each printed as `file: problem`).
+Exit code 0 = clean; 1 = problems (each printed as
+`DOCS-CHECK FAIL  file: problem`).  Pure stdlib — never imports the
+package, so it runs without jax installed.
 """
 
 from __future__ import annotations
 
-import ast
 import pathlib
-import re
 import sys
 
 REPO = pathlib.Path(__file__).resolve().parents[1]
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
 
-DOC_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
-
-SEAM_MODULES = [
-    REPO / "src" / "repro" / "runtime" / "dist.py",
-    REPO / "src" / "repro" / "core" / "distributed.py",
-    REPO / "src" / "repro" / "core" / "topology.py",
-]
-
-# [text](target) — excluding images' leading ! is unnecessary (image paths
-# must resolve too); stop at the first unescaped closing paren.
-_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
-_EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
-
-
-def check_links() -> list:
-    problems = []
-    for md in DOC_FILES:
-        if not md.exists():
-            problems.append(f"{md.relative_to(REPO)}: file missing")
-            continue
-        text = md.read_text()
-        # strip fenced code blocks: command examples aren't links
-        text = re.sub(r"```.*?```", "", text, flags=re.S)
-        for m in _LINK_RE.finditer(text):
-            target = m.group(1)
-            if target.startswith(_EXTERNAL) or target.startswith("#"):
-                continue
-            path = target.split("#", 1)[0]
-            if not path:
-                continue
-            resolved = (md.parent / path).resolve()
-            if not resolved.exists():
-                problems.append(
-                    f"{md.relative_to(REPO)}: broken relative link "
-                    f"'{target}' (-> {resolved})"
-                )
-    return problems
-
-
-def _exported_names(tree: ast.Module) -> list:
-    """Names in __all__ if the module defines one, else every public
-    top-level def/class name."""
-    for node in tree.body:
-        if isinstance(node, ast.Assign):
-            for t in node.targets:
-                if isinstance(t, ast.Name) and t.id == "__all__":
-                    return [
-                        e.value
-                        for e in node.value.elts  # type: ignore[attr-defined]
-                        if isinstance(e, ast.Constant) and isinstance(e.value, str)
-                    ]
-    return [
-        n.name
-        for n in tree.body
-        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef))
-        and not n.name.startswith("_")
-    ]
-
-
-def check_docstrings() -> list:
-    problems = []
-    for mod in SEAM_MODULES:
-        rel = mod.relative_to(REPO)
-        tree = ast.parse(mod.read_text())
-        exported = set(_exported_names(tree))
-        defined = {
-            n.name: n
-            for n in tree.body
-            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef))
-        }
-        if not ast.get_docstring(tree):
-            problems.append(f"{rel}: module docstring missing")
-        # __all__ entries that are re-exports (imported names) have no local
-        # definition — their docstring lives in the defining module.
-        for name in sorted(exported & set(defined)):
-            node = defined[name]
-            if not ast.get_docstring(node):
-                problems.append(f"{rel}: exported symbol '{name}' has no docstring")
-        # public top-level defs/classes outside __all__ are still part of
-        # the seam surface for readers — hold them to the same bar.
-        for name, node in sorted(defined.items()):
-            if name.startswith("_") or name in exported:
-                continue
-            if not ast.get_docstring(node):
-                problems.append(f"{rel}: public symbol '{name}' has no docstring")
-        # public methods of public classes
-        for cname, cnode in sorted(defined.items()):
-            if not isinstance(cnode, ast.ClassDef) or cname.startswith("_"):
-                continue
-            for meth in cnode.body:
-                if not isinstance(meth, (ast.FunctionDef, ast.AsyncFunctionDef)):
-                    continue
-                if meth.name.startswith("_") and meth.name != "__init__":
-                    continue
-                if meth.name == "__init__" and not meth.body:
-                    continue
-                if not ast.get_docstring(meth):
-                    # __init__ may legitimately be documented by the class
-                    if meth.name == "__init__" and ast.get_docstring(cnode):
-                        continue
-                    problems.append(
-                        f"{rel}: public method '{cname}.{meth.name}' has no docstring"
-                    )
-    return problems
-
-
-SERVE_CLI = REPO / "src" / "repro" / "launch" / "serve_dict.py"
-
-_FENCE_RE = re.compile(r"```.*?\n(.*?)```", re.S)
-_FLAG_RE = re.compile(r"--[A-Za-z][A-Za-z0-9-]*")
-
-
-def serve_cli_flags() -> set:
-    """The `--flag` names `launch/serve_dict.py` actually accepts, read off
-    its `add_argument("--...")` calls by AST (never imported, so this runs
-    without jax installed)."""
-    tree = ast.parse(SERVE_CLI.read_text())
-    flags = set()
-    for node in ast.walk(tree):
-        if (
-            isinstance(node, ast.Call)
-            and isinstance(node.func, ast.Attribute)
-            and node.func.attr == "add_argument"
-        ):
-            for arg in node.args:
-                if (
-                    isinstance(arg, ast.Constant)
-                    and isinstance(arg.value, str)
-                    and arg.value.startswith("--")
-                ):
-                    flags.add(arg.value)
-    return flags
-
-
-def check_serve_flags() -> list:
-    """Cross-check doc examples against the real CLI surface: every --flag
-    on a serve_dict command line in a fenced code block must be an argparse
-    flag of launch/serve_dict.py."""
-    known = serve_cli_flags()
-    problems = []
-    for md in DOC_FILES:
-        if not md.exists():
-            continue
-        for block in _FENCE_RE.findall(md.read_text()):
-            # join backslash-continued lines into one logical command, then
-            # look only at commands that invoke serve_dict
-            for line in block.replace("\\\n", " ").splitlines():
-                if "serve_dict" not in line:
-                    continue
-                # tokens BEFORE the module name (XLA_FLAGS=--... env
-                # prefixes, python -m) are not serve_dict flags
-                tail = line.split("serve_dict", 1)[1]
-                for m in _FLAG_RE.finditer(tail):
-                    if m.group(0) not in known:
-                        problems.append(
-                            f"{md.relative_to(REPO)}: fenced serve_dict "
-                            f"example uses {m.group(0)!r}, which is not an "
-                            f"argparse flag of launch/serve_dict.py"
-                        )
-    return problems
-
-
-TOPOLOGY_MOD = REPO / "src" / "repro" / "core" / "topology.py"
-
-
-def topology_vocab() -> tuple:
-    """(graph kinds, wire formats) accepted by the chain-spec grammar, read
-    off `core/topology.py`'s module-level `GRAPH_KINDS` / `LEVEL_WIRES`
-    tuple assignments by AST (never imported, so this runs without jax)."""
-    tree = ast.parse(TOPOLOGY_MOD.read_text())
-    vocab = {}
-    for node in tree.body:
-        if not isinstance(node, ast.Assign):
-            continue
-        for t in node.targets:
-            if isinstance(t, ast.Name) and t.id in ("GRAPH_KINDS", "LEVEL_WIRES"):
-                vocab[t.id] = tuple(
-                    e.value
-                    for e in node.value.elts  # type: ignore[attr-defined]
-                    if isinstance(e, ast.Constant) and isinstance(e.value, str)
-                )
-    return vocab.get("GRAPH_KINDS", ()), vocab.get("LEVEL_WIRES", ())
-
-
-def _levels_spec_problems(spec: str, kinds: tuple, wires: tuple) -> list:
-    """Stdlib re-implementation of the `parse_level_specs` grammar: the
-    problems (empty if valid) with one comma-separated chain spec string."""
-    problems = []
-    parts = spec.split(",")
-    for i, part in enumerate(parts):
-        tokens = [t.strip() for t in part.strip().split(":") if t.strip()]
-        if not tokens:
-            problems.append(f"empty level {i} in {spec!r}")
-            continue
-        if tokens[0] not in kinds:
-            problems.append(
-                f"unknown graph kind {tokens[0]!r} in level {i} of {spec!r} "
-                f"(options: {kinds})"
-            )
-        for tok in tokens[1:]:
-            if tok.lstrip("-").isdigit():
-                if int(tok) < 1:
-                    problems.append(f"stride {tok} < 1 in level {i} of {spec!r}")
-            elif tok == "stale":
-                if i != len(parts) - 1:
-                    problems.append(
-                        f"'stale' on non-outermost level {i} of {spec!r} "
-                        f"(one-step staleness is outermost-hop only)"
-                    )
-            elif tok not in wires:
-                problems.append(
-                    f"unknown token {tok!r} in level {i} of {spec!r} "
-                    f"(expected an integer stride, one of {wires}, or 'stale')"
-                )
-    return problems
-
-
-def check_levels_specs() -> list:
-    """Cross-check every `--levels <spec>` in fenced serve_dict examples
-    against the chain-spec grammar — a kind renamed in `GRAPH_KINDS` or a
-    malformed doc example fails HERE, not in a reader's shell."""
-    kinds, wires = topology_vocab()
-    problems = []
-    if not kinds or not wires:
-        return [f"{TOPOLOGY_MOD.relative_to(REPO)}: GRAPH_KINDS/LEVEL_WIRES "
-                f"tuples not found (chain-spec check cannot run)"]
-    for md in DOC_FILES:
-        if not md.exists():
-            continue
-        for block in _FENCE_RE.findall(md.read_text()):
-            for line in block.replace("\\\n", " ").splitlines():
-                if "serve_dict" not in line:
-                    continue
-                toks = line.split("serve_dict", 1)[1].split()
-                for flag, val in zip(toks, toks[1:] + [""]):
-                    if flag != "--levels":
-                        continue
-                    if not val or val.startswith("--"):
-                        problems.append(
-                            f"{md.relative_to(REPO)}: fenced serve_dict "
-                            f"example has --levels with no spec value"
-                        )
-                        continue
-                    for p in _levels_spec_problems(val, kinds, wires):
-                        problems.append(
-                            f"{md.relative_to(REPO)}: fenced serve_dict "
-                            f"example --levels spec invalid: {p}"
-                        )
-    return problems
+from tools.analyze import rules_docs  # noqa: E402
 
 
 def main() -> int:
-    problems = (check_links() + check_docstrings() + check_serve_flags()
-                + check_levels_specs())
-    for p in problems:
-        print(f"DOCS-CHECK FAIL  {p}")
-    if problems:
-        print(f"\n{len(problems)} problem(s).")
+    findings = rules_docs.run(REPO)
+    for f in findings:
+        print(f"DOCS-CHECK FAIL  {f.file}: {f.message}")
+    if findings:
+        print(f"\n{len(findings)} problem(s).")
         return 1
-    n_links = len(DOC_FILES)
-    kinds, wires = topology_vocab()
-    print(f"docs-check OK: {n_links} markdown files, "
-          f"{len(SEAM_MODULES)} seam modules clean, "
-          f"{len(serve_cli_flags())} serve_dict flags cross-checked, "
+    kinds, wires = rules_docs.topology_vocab(REPO)
+    print(f"docs-check OK: {len(rules_docs.doc_files(REPO))} markdown files, "
+          f"{len(rules_docs.seam_modules(REPO))} seam modules clean, "
+          f"{len(rules_docs.serve_cli_flags(REPO))} serve_dict flags "
+          f"cross-checked, "
           f"--levels specs validated against {len(kinds)} kinds / "
           f"{len(wires)} wire formats")
     return 0

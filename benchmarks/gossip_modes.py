@@ -22,7 +22,13 @@ keys (model-axis / pod-axis) as aliases of levels 0 / 1.  The 3-level chain
 row (strides 1/2/4, q8 on both outer hops) runs on a (2, 2, 1, 2) debug
 mesh and is included in smoke mode so CI exercises the chain path.
 
-The output schema of the saved JSON is documented in docs/BENCHMARKS.md.
+Each row also reports the solve body's one-time XLA compile seconds and
+its optimized-HLO FLOPs per gossip iteration (`launch/hlo_cost.
+analyze_compiled` on the AOT-compiled first sweep point) — the
+benchmark-scale companion of the probe-scale pins tools/analyze's
+cost-budget gate enforces — saved as a side table to compile_cost.json.
+
+The output schema of the saved JSONs is documented in docs/BENCHMARKS.md.
 
 Reduced-size mode: set BENCH_SMOKE=1 (the CI benchmark smoke job does) for
 a smaller problem, shorter sweep, a lower SNR target, and a single
@@ -40,11 +46,12 @@ import sys
 from benchmarks.common import ROOT, emit, save_json
 
 SCRIPT = r"""
-import dataclasses, json, sys
+import dataclasses, json, sys, time
 import jax, jax.numpy as jnp
 from repro.core.conjugates import make_task
 from repro.core.distributed import DistributedSparseCoder, DistConfig, make_debug_mesh
 from repro.core.inference import fista_infer, snr_db
+from repro.launch.hlo_cost import analyze_compiled
 
 P = json.loads(sys.argv[1])
 
@@ -110,6 +117,8 @@ for name, base_cfg in ROWS.items():
     per_level = None
     period = 1
     pod_every = 1
+    compile_s = None
+    flops_per_iter = None
     for iters in P["sweep"]:
         cfg = dataclasses.replace(base_cfg, iters=iters)
         coder = DistributedSparseCoder(row_mesh, res, reg, cfg)
@@ -136,6 +145,17 @@ for name, base_cfg in ROWS.items():
                     # legacy per-axis aliases for the two-level rows
                     per_model, per_pod = per_level
         Ws, xs = coder.shard(W, x)
+        if compile_s is None:
+            # AOT-compile the solve body once (the first sweep point) and
+            # price its optimized HLO — the same analyze_compiled numbers
+            # tools/analyze's cost-budget gate pins in budgets.json, here
+            # at benchmark scale and normalized per gossip iteration.
+            t0c = time.perf_counter()
+            compiled = coder._solve.lower(
+                Ws, xs, jnp.asarray(0, jnp.int32)).compile()
+            compile_s = time.perf_counter() - t0c
+            costs = analyze_compiled(compiled)
+            flops_per_iter = float(costs.flops) / iters
         nu, _ = coder.solve(Ws, xs)
         if float(snr_db(nu_ref, nu)) >= P["target_db"]:
             reached = iters
@@ -150,6 +170,8 @@ for name, base_cfg in ROWS.items():
         "wire_bytes_per_iter_pod_axis": per_pod,
         "wire_bytes_per_iter_per_level": per_level,
         "wire_bytes_to_target": (reached * per_iter) if reached else None,
+        "compile_s": round(compile_s, 3),
+        "flops_per_iter": flops_per_iter,
     }
 print(json.dumps(out))
 """
@@ -198,7 +220,16 @@ def run(smoke: bool | None = None):
             emit(f"gossip/{mode}/wire_bytes_to_{params['target_db']:.0f}db",
                  r["wire_bytes_to_target"],
                  f"{base / r['wire_bytes_to_target']:.1f}x fewer than exact" if base else "")
+        emit(f"gossip/{mode}/compile_s", r["compile_s"])
+        emit(f"gossip/{mode}/flops_per_iter", f"{r['flops_per_iter']:.0f}")
     save_json("gossip_modes", out)
+    # compile-cost side table (schema: docs/BENCHMARKS.md) — the benchmark-
+    # scale companion of tools/analyze/budgets.json's probe-scale pins
+    save_json("compile_cost", {
+        mode: {"compile_s": r["compile_s"],
+               "flops_per_iter": r["flops_per_iter"]}
+        for mode, r in out.items()
+    })
     return out
 
 

@@ -90,7 +90,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -425,6 +425,32 @@ def _safe_mu_exact(res: Residual, reg: Regularizer, W_loc: Array, axis: str) -> 
     return 1.0 / (c_f + sig2_sum / reg.delta)
 
 
+@dataclasses.dataclass(frozen=True)
+class OutSpecInfo:
+    """Replication contract of ONE shard_map output, machine-checkable.
+
+    `spec` mirrors the PartitionSpec handed to shard_map (entries are
+    None, an axis name, or a tuple of axis names).  Every mesh axis NOT
+    mentioned in `spec` is declared replicated: the compiled program
+    places the same bytes on every device along that axis, so the
+    per-device body must provably produce a value that does not vary
+    along it (tools/analyze rule: out-spec-replication).  The engine runs
+    its shard_maps with check_vma=False, so XLA does NOT verify this —
+    without the static proof, a forgotten psum/pmax silently ships
+    device-dependent garbage as if it were replicated.
+
+    `consensus=True` exempts the AGENT axes only: the output is an
+    approximate-consensus estimate that intentionally differs per agent
+    (nu/y leave the solve un-replicated along the agent axes — each
+    agent holds its own estimate; that is the documented check_vma=False
+    rationale, not a bug).  Non-agent axes are still checked.
+    """
+
+    name: str
+    spec: Tuple
+    consensus: bool = False
+
+
 class DistributedSparseCoder:
     """Dual-domain sparse coder over an atom-sharded dictionary on a mesh.
 
@@ -640,6 +666,23 @@ class DistributedSparseCoder:
                 check_vma=False,
             )
         )
+        # The replication contract of every public program, one OutSpecInfo
+        # per output, mirroring the out_specs above.  tools/analyze's
+        # layer-3 verifier (rules_replication) traces each body and PROVES
+        # every axis a spec omits non-varying — with check_vma=False these
+        # declarations are otherwise unchecked.  nu and the novelty score
+        # are per-agent consensus estimates (consensus=True: agent axes
+        # exempt by design); W after fit and the step size mu must be
+        # bit-identical wherever their specs say "replicated".
+        self.out_spec_meta: Dict[str, Tuple[OutSpecInfo, ...]] = {
+            "solve": (
+                OutSpecInfo("nu", (da, None), consensus=True),
+                OutSpecInfo("y", (da, agent_spec)),
+            ),
+            "fit": (OutSpecInfo("W", (None, agent_spec)),),
+            "score": (OutSpecInfo("novelty", (da,), consensus=True),),
+            "mu": (OutSpecInfo("mu", (agent_spec,)),),
+        }
 
     # -- solver body (runs per device) -------------------------------------
 
@@ -1315,7 +1358,7 @@ class DistributedSparseCoder:
                 parts.append(
                     np.concatenate([W_host[:, i, :], np.asarray(fresh)], axis=1)
                 )
-            W2 = jnp.asarray(np.concatenate(parts, axis=1))
+            W2 = jnp.asarray(np.concatenate(parts, axis=1), W_host.dtype)
         else:
             if k % n_old:
                 raise ValueError(f"K={k} not divisible by model={n_old}")
@@ -1339,11 +1382,17 @@ class TraceCase:
     """One abstractly-traceable engine configuration: `axis_sizes` is the
     ordered mesh (outermost axis first), `cfg` the mode under test.  The
     default catalog (`mode_trace_cases`) covers every MODE_REGISTRY mode,
-    so the static analyzer's coverage check is `{case.cfg.mode} >= MODES`."""
+    so the static analyzer's coverage check is `{case.cfg.mode} >= MODES`.
+
+    `programs` lists the shard_map bodies to verify for this case — the
+    keys of `DistributedSparseCoder.out_spec_meta`, i.e. the out-spec'd
+    programs whose replication contracts the layer-3 verifier must prove
+    (`abstract_trace(..., program=p)` traces each one)."""
 
     name: str
     cfg: DistConfig
     axis_sizes: Tuple[Tuple[str, int], ...]
+    programs: Tuple[str, ...] = ("solve", "fit", "score", "mu")
 
 
 def mode_trace_cases() -> Tuple[TraceCase, ...]:
@@ -1405,20 +1454,26 @@ def abstract_trace(
     kb: int = 4,
     task: str = "nmf",
     fit: bool = False,
+    program: Optional[str] = None,
 ):
     """Trace one engine body abstractly: build the coder on a device-free
     `dist.abstract_mesh` with the given (outermost-first) axis sizes and
-    `jax.make_jaxpr` its per-device solve (or fit) body with every mesh
-    axis bound in the trace's axis env.
+    `jax.make_jaxpr` one of its per-device bodies with every mesh axis
+    bound in the trace's axis env.  `program` selects the body by its
+    `out_spec_meta` key — "solve" (default), "fit", "score", or "mu";
+    the legacy `fit=True` flag is shorthand for program="fit".
 
     Returns (coder, closed_jaxpr).  The jaxpr is the per-DEVICE program —
     exactly what shard_map stages — with psum/ppermute/pmax equations
     carrying their axis names, so protocol checks (collective parity
     across cond branches, permutation-table validity, wire-byte
-    accounting) run without any devices.  `kb` is the per-agent atom
-    count and `batch` the GLOBAL batch (divided over the data axes)."""
+    accounting, out-spec replication proofs) run without any devices.
+    `kb` is the per-agent atom count and `batch` the GLOBAL batch
+    (divided over the data axes)."""
     from repro.core.conjugates import make_task
 
+    if program is None:
+        program = "fit" if fit else "solve"
     names = tuple(n for n, _ in axis_sizes)
     sizes = tuple(s for _, s in axis_sizes)
     mesh = dist.abstract_mesh(sizes, names)
@@ -1432,14 +1487,25 @@ def abstract_trace(
     x_loc = jax.ShapeDtypeStruct((b_loc, m), jnp.float32)
     t0 = jax.ShapeDtypeStruct((), jnp.int32)
     axis_env = [(n, s) for n, s in axis_sizes]
-    if fit:
+    if program == "fit":
         mu_w = jax.ShapeDtypeStruct((), jnp.float32)
         jaxpr = jax.make_jaxpr(coder._fit_body, axis_env=axis_env)(
             W_loc, x_loc, mu_w, t0
         )
-    else:
+    elif program == "score":
+        jaxpr = jax.make_jaxpr(coder._score_body, axis_env=axis_env)(
+            W_loc, x_loc, t0
+        )
+    elif program == "mu":
+        jaxpr = jax.make_jaxpr(coder._mu_body, axis_env=axis_env)(W_loc)
+    elif program == "solve":
         jaxpr = jax.make_jaxpr(coder._solve_body, axis_env=axis_env)(
             W_loc, x_loc, t0
+        )
+    else:
+        raise ValueError(
+            f"unknown program {program!r}; expected one of "
+            f"('solve', 'fit', 'score', 'mu')"
         )
     return coder, jaxpr
 

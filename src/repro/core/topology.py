@@ -346,7 +346,7 @@ class TopologySchedule:
         form (t may be a traced iteration index inside `lax.scan`)."""
         import jax.numpy as jnp
 
-        stack = jnp.asarray(self.stacked())
+        stack = jnp.asarray(self.stacked(), jnp.float32)
         period = self.period
         return lambda t: stack[jnp.mod(t, period)]
 
@@ -666,7 +666,8 @@ class KroneckerChain:
         import jax.numpy as jnp
 
         stack = jnp.asarray(
-            np.stack([np.asarray(a, np.float32) for a in self.sequence()])
+            np.stack([np.asarray(a, np.float32) for a in self.sequence()]),
+            jnp.float32,
         )
         period = self.period
         return lambda t: stack[jnp.mod(t, period)]

@@ -342,7 +342,7 @@ def torus_schedule(rows: int, cols: int, A: np.ndarray) -> GraphSchedule:
 def _rank_weight(weights: Tuple[float, ...], axis_name: str) -> Array:
     """This rank's entry of a static per-rank weight table (replicated
     constant indexed by axis_index — stays inside the shard_map body)."""
-    return jnp.asarray(weights)[jax.lax.axis_index(axis_name)]
+    return jnp.asarray(weights, jnp.float32)[jax.lax.axis_index(axis_name)]
 
 
 def graph_shift(x, axis_name: str, sched: GraphSchedule) -> Tuple:

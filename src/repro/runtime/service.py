@@ -254,7 +254,7 @@ class DictionaryService:
         b = xb.shape[0]
         with self._exec_lock:
             t0 = self._advance_schedule(coder)
-            nu, y = coder.solve(snap, jnp.asarray(self._pad_rows(xb)), t0)
+            nu, y = coder.solve(snap, jnp.asarray(self._pad_rows(xb), jnp.float32), t0)
             nu, y = np.asarray(nu), np.asarray(y)
         return nu[:b], y[:b]
 
@@ -495,7 +495,9 @@ class DictionaryService:
                 with self._exec_lock:
                     t0 = self._advance_schedule(coder)
                     try:
-                        live2 = coder.fit_batch(live, jnp.asarray(xb), mu_w_eff, t0)
+                        live2 = coder.fit_batch(
+                            live, jnp.asarray(xb, jnp.float32), mu_w_eff, t0
+                        )
                         jax.block_until_ready(live2)
                     except Exception:
                         # the claimed window never ran: hand it back so the

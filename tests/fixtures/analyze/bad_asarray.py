@@ -1,0 +1,13 @@
+"""Known-bad fixture: jnp.asarray with no explicit dtype.
+
+Host-side floats become weak-type f32 (or f64 under x64) depending on
+input, so the same call site can produce avals that differ between
+processes or runs — every asarray at a jit boundary must pin its dtype.
+`asarray-dtype` must fire exactly once.
+"""
+
+import jax.numpy as jnp
+
+
+def to_device(weights):
+    return jnp.asarray(weights)

@@ -1,0 +1,12 @@
+"""Known-bad fixture: jax.jit applied and immediately called.
+
+`jax.jit(lambda ...)(x)` builds a fresh jitted callable per invocation,
+so its compile cache can never be hit — every call retraces.
+`jit-cache-discipline` must fire exactly once.
+"""
+
+import jax
+
+
+def double(x):
+    return jax.jit(lambda v: v * 2.0)(x)

@@ -1,0 +1,19 @@
+"""Known-bad fixture: an int8 ppermute with no float companion.
+
+Quantized gossip ships int8 payloads alongside a float32 scale (or
+reference) ppermute with the SAME permutation — an int8 hop on its own
+means the receiver has bytes it cannot dequantize consistently.
+`quant-scale-pairing` must fire exactly once.
+"""
+
+import jax
+import jax.numpy as jnp
+
+AXIS_ENV = (("model", 2),)
+AGENT_AXES = ("model",)
+
+
+def fn(x):
+    q = jnp.asarray(x * 127.0, jnp.int8)
+    q_in = jax.lax.ppermute(q, "model", [(0, 1), (1, 0)])
+    return q_in.astype(jnp.float32) / 127.0

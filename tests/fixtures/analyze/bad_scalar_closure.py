@@ -1,0 +1,20 @@
+"""Known-bad fixture: a Python scalar closed over in a hot-path body.
+
+`mu = float(cfg_mu)` is a host Python float; the scan body closes over
+it, so every distinct mu value bakes a new constant into the jaxpr and
+forces a retrace of the enclosing jit.  `scalar-closure` must fire
+exactly once.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def run(cfg_mu, xs):
+    mu = float(cfg_mu)
+
+    def body(c, x):
+        return c + mu * jnp.sum(x), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0), xs)
+    return total

@@ -1,0 +1,18 @@
+"""Known-bad fixture: a weak-typed Python literal as a scan carry init.
+
+`0.0` enters the scan as a weak-type f32 scalar; the first body iteration
+promotes it against the strongly-typed xs and the carry changes dtype
+between trace-time and steady state — a classic silent-retrace trigger.
+`weak-literal-carry` must fire exactly once.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def accumulate(xs):
+    def body(c, x):
+        return c + jnp.sum(x), None
+
+    total, _ = jax.lax.scan(body, 0.0, xs)
+    return total

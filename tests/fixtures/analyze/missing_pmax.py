@@ -1,0 +1,26 @@
+"""Known-bad fixture: an un-pmax'd per-shard step size (the PR 2 mu bug).
+
+The local curvature bound is never reduced over the agent axis, so every
+rank computes a mu safe only for its own shard and the gossip iterates
+silently diverge — `step-size-replication` must fire exactly once.
+"""
+
+import jax.numpy as jnp
+
+AXIS_ENV = (("model", 4),)
+AGENT_AXES = ("model",)
+PROGRAM = "mu"
+
+
+class _MuMeta:
+    name = "mu"
+    spec = ("model",)
+    consensus = False
+
+
+OUT_META = (_MuMeta,)
+
+
+def fn(W_loc):
+    sig2 = jnp.max(jnp.sum(W_loc * W_loc, axis=0))  # local bound, NO pmax
+    return (0.9 / (1.0 + sig2))[None]

@@ -1,0 +1,23 @@
+"""Known-bad fixture: a fit-style body whose out_spec declares the data
+axis replicated but whose gradient is never psum'd over it — the
+compiled program would ship each data shard's private gradient as if it
+were the reduced one.  `out-spec-replication` must fire exactly once.
+"""
+
+AXIS_ENV = (("data", 2), ("model", 2))
+AGENT_AXES = ("model",)
+PROGRAM = "fit"
+
+
+class _WMeta:
+    name = "W"
+    spec = (None, "model")
+    consensus = False
+
+
+OUT_META = (_WMeta,)
+
+
+def fn(W_loc, x_loc):
+    g = x_loc.T @ x_loc  # varies over "data"; the psum is missing
+    return W_loc + 0.1 * g[: W_loc.shape[0], : W_loc.shape[1]]

@@ -1,0 +1,15 @@
+"""Known-bad fixture: a jit whose static arg changes between calls.
+
+`scale` is declared static, so calling with two different scales yields
+two cache entries — exactly the drift `assert_no_retrace` exists to
+catch.  Driven directly by tests/test_analyze.py (works on 1 device).
+"""
+
+import jax
+
+
+def make():
+    def f(x, scale):
+        return x * scale
+
+    return jax.jit(f, static_argnums=1)

@@ -1,0 +1,27 @@
+"""Known-bad fixture: a cond gated on a rank-varying predicate.
+
+Both branches are collective-free, so `cond-collective-parity` stays
+silent (no deadlock) — but devices still follow different update rules
+in the same step and drift deterministically apart.  `varying-gate`
+must fire exactly once.
+"""
+
+import jax
+
+AXIS_ENV = (("model", 2),)
+AGENT_AXES = ("model",)
+PROGRAM = "solve"
+
+
+class _YMeta:
+    name = "y"
+    spec = ("model",)
+    consensus = False
+
+
+OUT_META = (_YMeta,)
+
+
+def fn(x):
+    sel = jax.lax.axis_index("model") == 0
+    return jax.lax.cond(sel, lambda v: v * 2.0, lambda v: v + 1.0, x)

@@ -15,7 +15,13 @@ if str(ROOT) not in sys.path:
     sys.path.insert(0, str(ROOT))
 
 from tools.analyze import all_rules, run_repo  # noqa: E402
-from tools.analyze import rules_ast, rules_jaxpr  # noqa: E402
+from tools.analyze import (  # noqa: E402
+    rules_ast,
+    rules_budget,
+    rules_jaxpr,
+    rules_recompile,
+    rules_replication,
+)
 from tools.analyze.report import Finding, render_github, render_json  # noqa: E402
 from tools.analyze.walker import filter_suppressed  # noqa: E402
 
@@ -213,8 +219,15 @@ def test_repo_is_clean_jaxpr():
 
 def test_all_rules_registered():
     rules = all_rules(with_jaxpr=True)
-    assert len(rules) == len(set(rules)) >= 13
+    assert len(rules) == len(set(rules)) >= 23
     assert "cond-collective-parity" in rules and "doc-links" in rules
+    for r in rules_replication.RULES + rules_recompile.RULES + rules_budget.RULES:
+        assert r in rules
+    # the stdlib-only subset drops the jax layers but keeps the recompile
+    # AST rules (they need no jax import)
+    lite = all_rules(with_jaxpr=False)
+    assert "weak-literal-carry" in lite
+    assert "out-spec-replication" not in lite
 
 
 def test_report_formats():
@@ -274,3 +287,305 @@ def test_mode_trace_cases_cover_registry():
 
     covered = {c.cfg.mode for c in D.mode_trace_cases()}
     assert covered == set(D.MODES)
+
+
+# ---------------------------------------------------------------------------
+# layer 3: replication-soundness rules on known-bad fixtures
+# ---------------------------------------------------------------------------
+
+
+def _replication_findings(name, args, in_varying):
+    mod = _load_fixture(name)
+    jaxpr, findings = rules_jaxpr.trace_check(
+        mod.fn, args, mod.AXIS_ENV, file="tests/fixtures/analyze"
+    )
+    assert not findings
+    return rules_replication.check_program(
+        jaxpr, dict(mod.AXIS_ENV),
+        out_meta=mod.OUT_META, in_varying=in_varying,
+        agent_axes=mod.AGENT_AXES, program=mod.PROGRAM,
+        label=name, file="tests/fixtures/analyze", root=ROOT,
+    )
+
+
+def test_missing_pmax_fires_step_size_once():
+    import jax.numpy as jnp
+
+    fs = _replication_findings(
+        "missing_pmax", (jnp.zeros((8, 4), jnp.float32),),
+        [frozenset({"model"})],
+    )
+    assert [f.rule for f in fs] == ["step-size-replication"]
+    assert "pmax" in fs[0].message
+
+
+def test_missing_psum_fires_out_spec_once():
+    import jax.numpy as jnp
+
+    fs = _replication_findings(
+        "missing_psum_outspec",
+        (jnp.zeros((8, 4), jnp.float32), jnp.zeros((2, 8), jnp.float32)),
+        [frozenset({"model"}), frozenset({"data"})],
+    )
+    assert [f.rule for f in fs] == ["out-spec-replication"]
+    assert "'W'" in fs[0].message and "data" in fs[0].message
+
+
+def test_varying_gate_fires_once():
+    import jax.numpy as jnp
+
+    # both branches are collective-free, so layer 1's
+    # cond-collective-parity stays silent — only varying-gate catches it
+    fs = _replication_findings(
+        "varying_gate", (jnp.zeros((2, 4), jnp.float32),), [frozenset()]
+    )
+    assert [f.rule for f in fs] == ["varying-gate"]
+
+
+def test_bad_q8_pairing_fires_once():
+    import jax
+    import jax.numpy as jnp
+
+    mod = _load_fixture("bad_q8_pairing")
+    jaxpr, findings = _trace_fixture(mod)
+    assert not findings
+    fs = rules_replication.check_quant_pairing(
+        jaxpr, label="bad_q8_pairing", file="tests/fixtures/analyze",
+        root=ROOT,
+    )
+    assert [f.rule for f in fs] == ["quant-scale-pairing"]
+
+    # paired payload+scale under the identical table is clean
+    def good(x):
+        q = jnp.asarray(x * 127.0, jnp.int8)
+        table = [(0, 1), (1, 0)]
+        q_in = jax.lax.ppermute(q, "model", table)
+        s_in = jax.lax.ppermute(jnp.max(jnp.abs(x)), "model", table)
+        return q_in.astype(jnp.float32) * s_in / 127.0
+
+    jaxpr2, findings2 = rules_jaxpr.trace_check(
+        good, (jnp.zeros((2, 4), jnp.float32),), (("model", 2),), file="t"
+    )
+    assert not findings2
+    assert not rules_replication.check_quant_pairing(
+        jaxpr2, label="good", file="t", root=ROOT
+    )
+
+
+def test_unreduced_mu_regression_is_caught(monkeypatch):
+    # THE acceptance criterion: re-introducing the PR 2 bug (dropping the
+    # pmax from _safe_mu_local) must be statically impossible — every
+    # adaptive gossip mode's mu program flags step-size-replication.
+    import jax
+    import jax.numpy as jnp
+    from repro.core import distributed as D
+    from repro.core.inference import power_sigma2
+
+    def bad_mu(res, reg, W_loc, axis):
+        c_f = res.grad_fstar(jnp.ones((1,), W_loc.dtype))[0]
+        n_agents = jax.lax.psum(1, axis)
+        sig2_local = power_sigma2(W_loc)  # NO pmax — the PR 2 regression
+        return 0.9 / (c_f / n_agents + sig2_local / reg.delta)
+
+    monkeypatch.setattr(D, "_safe_mu_local", bad_mu)
+    findings = rules_replication.run(ROOT)
+    assert {f.rule for f in findings} == {"step-size-replication"}
+    # all 12 non-exact trace cases (exact/exact_fista use _safe_mu_exact)
+    assert len(findings) == 12
+
+
+def test_repo_is_clean_replication():
+    kept, _ = filter_suppressed(rules_replication.run(ROOT), ROOT)
+    assert kept == [], "\n".join(f.location() + " " + f.message for f in kept)
+
+
+# ---------------------------------------------------------------------------
+# layer 3: recompile-hazard AST rules on known-bad fixtures
+# ---------------------------------------------------------------------------
+
+
+def _recompile_ast_findings(name):
+    p = FIXTURES / f"{name}.py"
+    fs = []
+    fs += rules_recompile.check_weak_literal_carry(p, ROOT)
+    fs += rules_recompile.check_asarray_dtype(p, ROOT)
+    fs += rules_recompile.check_jit_cache_discipline(p, ROOT)
+    fs += rules_recompile.check_scalar_closure(p, ROOT)
+    return fs
+
+
+def test_bad_weak_carry_fires_once():
+    fs = _recompile_ast_findings("bad_weak_carry")
+    assert [f.rule for f in fs] == ["weak-literal-carry"]
+
+
+def test_bad_asarray_fires_once():
+    fs = _recompile_ast_findings("bad_asarray")
+    assert [f.rule for f in fs] == ["asarray-dtype"]
+
+
+def test_bad_jit_hot_fires_once():
+    fs = _recompile_ast_findings("bad_jit_hot")
+    assert [f.rule for f in fs] == ["jit-cache-discipline"]
+
+
+def test_bad_scalar_closure_fires_once():
+    fs = _recompile_ast_findings("bad_scalar_closure")
+    assert [f.rule for f in fs] == ["scalar-closure"]
+    assert "mu" in fs[0].message
+
+
+def test_repo_is_clean_recompile_ast():
+    fs = rules_recompile.run_ast(ROOT)
+    assert fs == [], "\n".join(f.location() + " " + f.message for f in fs)
+
+
+def test_retrace_on_second_trace_fires_once():
+    import jax
+    import jax.numpy as jnp
+
+    mod = _load_fixture("retrace_on_second_trace")
+    f = mod.make()
+    x = jnp.zeros((2,), jnp.float32)
+    fs = rules_recompile.assert_no_retrace(
+        f, (x, 2), (x, 3), label="fixture",
+        file="tests/fixtures/analyze", root=ROOT,
+    )
+    assert [g.rule for g in fs] == ["recompile-budget"]
+    assert "2 compile-cache" in fs[0].message
+
+    # value-varied traced inputs on a well-behaved jit stay at one entry
+    g = jax.jit(lambda v: v * 2.0)
+    assert rules_recompile.assert_no_retrace(
+        g, (x,), (x + 1.0,), label="clean", file="t", root=ROOT
+    ) == []
+
+
+# ---------------------------------------------------------------------------
+# layer 3: cost-budget gate (pure compare logic; devices not needed)
+# ---------------------------------------------------------------------------
+
+
+def test_budget_drift_fires_once():
+    import json
+
+    budgets = json.loads((FIXTURES / "budget_drift.json").read_text())
+    measured = {
+        "ring": {"flops": 26471.0, "collective_bytes": 4104.0,
+                 "compile_count": 1},
+    }
+    fs = rules_budget.compare(
+        measured, budgets, file="tools/analyze/budgets.json", root=ROOT
+    )
+    assert [f.rule for f in fs] == ["cost-budget"]
+    assert "flops" in fs[0].message and "--update-budgets" in fs[0].message
+
+
+def test_budget_missing_and_stale_modes():
+    budgets = {"modes": {"ring": {"flops": 1.0, "collective_bytes": 1.0,
+                                  "compile_count": 1}}}
+    rec = {"flops": 1.0, "collective_bytes": 1.0, "compile_count": 1}
+    # unpinned measured mode -> missing-budget finding
+    fs = rules_budget.compare(
+        {"ring": rec, "new_mode": rec}, budgets, file="b", root=ROOT
+    )
+    assert [f.rule for f in fs] == ["cost-budget"]
+    assert "new_mode" in fs[0].message
+    # pinned mode the trace matrix no longer produces -> stale finding
+    fs = rules_budget.compare({}, budgets, file="b", root=ROOT)
+    assert [f.rule for f in fs] == ["cost-budget"]
+    assert "stale" in fs[0].message
+
+
+def test_budget_compile_count_is_exact():
+    budgets = {"modes": {"ring": {"flops": 100.0, "collective_bytes": 8.0,
+                                  "compile_count": 1}}}
+    # 1% flops drift is inside REL_TOL; compile_count has NO tolerance
+    fs = rules_budget.compare(
+        {"ring": {"flops": 101.0, "collective_bytes": 8.0,
+                  "compile_count": 2}},
+        budgets, file="b", root=ROOT,
+    )
+    assert [f.rule for f in fs] == ["cost-budget"]
+    assert "compile_count" in fs[0].message
+
+
+def test_budgets_json_covers_trace_matrix():
+    from repro.core import distributed as D
+
+    budgets = rules_budget.load_budgets(ROOT)
+    assert budgets, "tools/analyze/budgets.json must be committed"
+    assert set(budgets["modes"]) == {c.name for c in D.mode_trace_cases()}
+    for name, rec in budgets["modes"].items():
+        # the ONE-compiled-program invariant is pinned for every mode
+        assert rec["compile_count"] == 1, name
+
+
+# ---------------------------------------------------------------------------
+# suppression: allow(rule: reason) + bare-allow rejection for layer 3
+# ---------------------------------------------------------------------------
+
+
+def test_layer3_suppression_requires_reason(tmp_path):
+    src = tmp_path / "m.py"
+    src.write_text(
+        "x = 1  # analyze: allow(cost-budget)\n"
+        "y = 2  # analyze: allow(cost-budget: probe intentionally re-pinned)\n"
+        "z = 3  # analyze: allow(ppermute-table)\n"
+    )
+    fs = [
+        Finding("cost-budget", "m.py", 1, "bare allow must NOT suppress"),
+        Finding("cost-budget", "m.py", 2, "reasoned allow suppresses"),
+        Finding("ppermute-table", "m.py", 3, "legacy rule: bare is fine"),
+    ]
+    kept, suppressed = filter_suppressed(fs, tmp_path)
+    assert [f.line for f in kept] == [1]
+    assert [f.line for f in suppressed] == [2, 3]
+
+
+def test_suppression_comma_list_with_reasons(tmp_path):
+    src = tmp_path / "m.py"
+    src.write_text(
+        "# analyze: allow(axis-literal, scalar-closure: probe helper)\n"
+        "x = 1\n"
+    )
+    fs = [
+        Finding("axis-literal", "m.py", 2, "bare, legacy -> suppressed"),
+        Finding("scalar-closure", "m.py", 2, "reasoned, layer 3 -> suppressed"),
+        Finding("asarray-dtype", "m.py", 2, "not listed -> kept"),
+    ]
+    kept, suppressed = filter_suppressed(fs, tmp_path)
+    assert [f.rule for f in kept] == ["asarray-dtype"]
+    assert {f.rule for f in suppressed} == {"axis-literal", "scalar-closure"}
+
+
+def test_render_json_reports_suppression_counts():
+    import json
+
+    sup = [Finding("cost-budget", "a.py", 1, "m"),
+           Finding("cost-budget", "a.py", 9, "m")]
+    data = json.loads(render_json([], ("cost-budget",), sup))
+    assert data["ok"] is True
+    assert data["suppressed"] == {"total": 2, "by_rule": {"cost-budget": 2}}
+
+
+# ---------------------------------------------------------------------------
+# full CLI: the committed repo analyzes clean, including the dynamic
+# recompile/cost gates (the "0 retraces across all registry modes"
+# acceptance run) — subprocess so jax gets 8 forced host devices
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_analyze_cli_clean_including_dynamic_gates():
+    import json
+    import subprocess
+
+    r = subprocess.run(
+        [sys.executable, "-m", "tools.analyze", "--json"],
+        cwd=ROOT, capture_output=True, text=True, timeout=600,
+    )
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    data = json.loads(r.stdout)
+    assert data["ok"] is True and data["findings"] == []
+    assert len(data["rules"]) >= 23

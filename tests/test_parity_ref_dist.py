@@ -377,45 +377,71 @@ def test_hier_parity_with_reference_engine():
     assert "OK" in out
 
 
+# Every registry mode, pinned here so pytest can parametrize without
+# importing jax at collection time; test_mu_modes_cover_registry asserts
+# this tuple tracks MODE_REGISTRY.
+_ALL_MODES = (
+    "chain", "exact", "exact_fista", "graph", "graph_async", "graph_q8",
+    "graph_tv", "graph_tv_q8", "hier", "hier_q8", "ring", "ring_async",
+    "ring_q8",
+)
+
+
+def test_mu_modes_cover_registry():
+    from repro.core.distributed import MODES
+
+    assert tuple(sorted(MODES)) == _ALL_MODES
+
+
 @pytest.mark.slow
-def test_adaptive_mu_identical_across_ranks_all_modes():
-    """The mu regression across every adaptive mode: exact modes psum a
-    shared bound, ring/graph modes pmax the per-shard bounds, hier modes
-    pmax over BOTH the pod and model axes — all ranks agree."""
-    out = _run("""
+@pytest.mark.parametrize("mode", _ALL_MODES)
+def test_adaptive_mu_identical_across_ranks(mode):
+    """The mu regression, per registry mode: exact modes psum a shared
+    bound, ring/graph modes pmax the per-shard bounds, hier/chain modes
+    pmax over ALL agent axes of the multi-level network — every rank
+    reports the identical adaptive step size.  (The static counterpart is
+    tools/analyze's step-size-replication rule, which proves this on the
+    jaxpr for any mesh; this test confirms it numerically on a real 4-way
+    mesh for the mode under test.)"""
+    flat = mode not in ("hier", "hier_q8", "chain")
+    if flat:
+        setup = """
+        mesh = make_debug_mesh(model=4, data=1)
+        cfg = DistConfig(mode=MODE, iters=10, mu=-1.0)
+        spec = jax.sharding.PartitionSpec(None, "model")
+        """
+    elif mode == "chain":
+        # two-level Kronecker chain (pod x model) with a q8 outer hop:
+        # the mu reduction must span both levels regardless of wire format
+        setup = """
+        mesh = make_debug_mesh(model=2, data=1, pods=2)
+        cfg = DistConfig(mode=MODE, iters=10, mu=-1.0, topology_seed=7,
+                         levels="ring_metropolis,ring_metropolis:2:q8")
+        spec = jax.sharding.PartitionSpec(None, ("pod", "model"))
+        """
+    else:
+        setup = """
+        mesh = make_debug_mesh(model=2, data=1, pods=2)
+        cfg = DistConfig(mode=MODE, iters=10, mu=-1.0,
+                         pod_topology="ring_metropolis", pod_gossip_every=2)
+        spec = jax.sharding.PartitionSpec(None, ("pod", "model"))
+        """
+    out = _run(f"""
         import numpy as np, jax, jax.numpy as jnp
         from repro.core.conjugates import make_task
         from repro.core.distributed import DistributedSparseCoder, DistConfig, make_debug_mesh
 
+        MODE = {mode!r}
         res, reg = make_task("nmf", gamma=0.05, delta=0.1)
-        mesh = make_debug_mesh(model=4, data=1)
         W = jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (24, 32)))
         W = W / jnp.linalg.norm(W, axis=0)
-        for mode in ["exact", "exact_fista", "ring", "ring_q8", "ring_async",
-                     "graph", "graph_q8", "graph_async",
-                     "graph_tv", "graph_tv_q8"]:
-            coder = DistributedSparseCoder(
-                mesh, res, reg, DistConfig(mode=mode, iters=10, mu=-1.0))
-            Ws = jax.device_put(W, jax.sharding.NamedSharding(
-                mesh, jax.sharding.PartitionSpec(None, "model")))
-            mus = np.asarray(coder.adaptive_mu(Ws))
-            print(mode, mus)
-            assert float(np.ptp(mus)) == 0.0, (mode, mus)
-
-        # hier modes: the same four agents arranged as 2 pods x 2, the mu
-        # pmax'd over both axes
-        hmesh = make_debug_mesh(model=2, data=1, pods=2)
-        for mode in ["hier", "hier_q8"]:
-            coder = DistributedSparseCoder(
-                hmesh, res, reg,
-                DistConfig(mode=mode, iters=10, mu=-1.0,
-                           pod_topology="ring_metropolis", pod_gossip_every=2))
-            Ws = jax.device_put(W, jax.sharding.NamedSharding(
-                hmesh, jax.sharding.PartitionSpec(None, ("pod", "model"))))
-            mus = np.asarray(coder.adaptive_mu(Ws))
-            print(mode, mus)
-            assert mus.shape == (4,)
-            assert float(np.ptp(mus)) == 0.0, (mode, mus)
+{textwrap.indent(textwrap.dedent(setup), "        ")}
+        coder = DistributedSparseCoder(mesh, res, reg, cfg)
+        Ws = jax.device_put(W, jax.sharding.NamedSharding(mesh, spec))
+        mus = np.asarray(coder.adaptive_mu(Ws))
+        print(MODE, mus)
+        assert mus.shape == (4,), mus.shape
+        assert float(np.ptp(mus)) == 0.0, (MODE, mus)
         print("OK")
     """)
     assert "OK" in out

@@ -1,15 +1,21 @@
 """Static analysis for the distributed dictionary-learning engine.
 
-Two layers (docs/ANALYSIS.md has the full rule catalog):
+Three layers (docs/ANALYSIS.md has the full rule catalog):
 
   AST rules (stdlib-only, always available)   tools.analyze.rules_ast
+  Retrace-hazard AST rules (stdlib-only)      tools.analyze.rules_recompile
   Docs rules (stdlib-only)                    tools.analyze.rules_docs
   Jaxpr rules (need jax, no devices)          tools.analyze.rules_jaxpr
+  Replication proofs (need jax, no devices)   tools.analyze.rules_replication
+  Recompile/cost gates (jax + devices)        tools.analyze.rules_recompile
+                                              tools.analyze.rules_budget
 
-Run everything:  python -m tools.analyze   (add --json / --github / --no-jaxpr)
+Run everything:  python -m tools.analyze   (add --json / --github /
+--no-jaxpr / --update-budgets)
 
-Suppression: append `# analyze: allow(<rule-id>)` on the finding's line or
-the line directly above (comma-separate several rule ids).
+Suppression: append `# analyze: allow(<rule-id>)` — or, mandatory for the
+layer-3 rules, `# analyze: allow(<rule-id>: <reason>)` — on the finding's
+line or the line directly above (comma-separate several entries).
 """
 
 from __future__ import annotations
@@ -22,28 +28,41 @@ from tools.analyze.walker import REPO, filter_suppressed
 
 
 def all_rules(with_jaxpr: bool = True) -> Tuple[str, ...]:
-    from tools.analyze import rules_ast, rules_docs
+    from tools.analyze import rules_ast, rules_docs, rules_recompile
 
-    rules = rules_docs.RULES + rules_ast.RULES
+    rules = rules_docs.RULES + rules_ast.RULES + rules_recompile.AST_RULES
     if with_jaxpr:
-        from tools.analyze import rules_jaxpr
+        from tools.analyze import rules_budget, rules_jaxpr, rules_replication
 
-        rules = rules + rules_jaxpr.RULES
+        rules = (
+            rules
+            + rules_jaxpr.RULES
+            + rules_replication.RULES
+            + rules_recompile.DYNAMIC_RULES
+            + rules_budget.RULES
+        )
     return rules
 
 
 def run_repo(
     root: pathlib.Path = REPO, *, with_jaxpr: bool = True
-) -> Tuple[List[Finding], Tuple[str, ...], int]:
-    """Run every layer; returns (findings, active rules, n_suppressed)."""
-    from tools.analyze import rules_ast, rules_docs
+) -> Tuple[List[Finding], Tuple[str, ...], List[Finding]]:
+    """Run every layer; returns (findings, active rules, suppressed
+    findings).  The jax layers include the device-backed recompile/cost
+    gates, which no-op (the CLI prints why) when the host exposes fewer
+    devices than the trace matrix needs."""
+    from tools.analyze import rules_ast, rules_docs, rules_recompile
 
     findings: List[Finding] = []
     findings.extend(rules_docs.run(root))
     findings.extend(rules_ast.run(root))
+    findings.extend(rules_recompile.run_ast(root))
     if with_jaxpr:
-        from tools.analyze import rules_jaxpr
+        from tools.analyze import rules_budget, rules_jaxpr, rules_replication
 
         findings.extend(rules_jaxpr.run(root))
-    kept, n_suppressed = filter_suppressed(findings, root)
-    return kept, all_rules(with_jaxpr), n_suppressed
+        findings.extend(rules_replication.run(root))
+        findings.extend(rules_recompile.run_dynamic(root))
+        findings.extend(rules_budget.run(root))
+    kept, suppressed = filter_suppressed(findings, root)
+    return kept, all_rules(with_jaxpr), suppressed

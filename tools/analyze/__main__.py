@@ -1,15 +1,36 @@
-"""CLI: python -m tools.analyze [--json] [--github] [--no-jaxpr] [--root DIR]
+"""CLI: python -m tools.analyze [--json] [--github] [--no-jaxpr]
+[--update-budgets] [--root DIR]
 
 Exit code 0 when the repo is clean, 1 when any finding survives
 suppression filtering.  --github emits ::error workflow annotations IN
-ADDITION to the chosen report format.
+ADDITION to the chosen report format.  --update-budgets re-measures the
+per-mode compiled-cost budgets and rewrites tools/analyze/budgets.json
+instead of analyzing (commit the diff — that is the review surface for
+intended cost changes).
+
+The dynamic layer-3 gates (recompile-budget, cost-budget) execute every
+registry mode on a real mesh, so when jax has not been imported yet this
+module forces --xla_force_host_platform_device_count=8 (a no-op for
+non-CPU backends) — the same trick the multi-device tests and benchmarks
+use via subprocess env.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import pathlib
 import sys
+
+
+def _force_host_devices() -> None:
+    if "jax" in sys.modules:
+        return  # too late to influence backend init; gates may skip
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8"
+        ).strip()
 
 
 def main(argv=None) -> int:
@@ -18,7 +39,10 @@ def main(argv=None) -> int:
     ap.add_argument("--github", action="store_true",
                     help="also emit GitHub workflow ::error annotations")
     ap.add_argument("--no-jaxpr", action="store_true",
-                    help="skip the jaxpr layer (runs without jax installed)")
+                    help="skip the jax layers (runs without jax installed)")
+    ap.add_argument("--update-budgets", action="store_true",
+                    help="re-measure and rewrite tools/analyze/budgets.json "
+                         "(the cost-budget re-pin workflow), then exit")
     ap.add_argument("--root", type=pathlib.Path, default=None,
                     help="repo root (default: auto-detected)")
     args = ap.parse_args(argv)
@@ -31,18 +55,34 @@ def main(argv=None) -> int:
         if p not in sys.path:
             sys.path.insert(0, p)
 
+    if not args.no_jaxpr:
+        _force_host_devices()
+
+    if args.update_budgets:
+        from tools.analyze.rules_budget import update_budgets
+
+        path = update_budgets(root)
+        print(f"budgets re-pinned: {path}")
+        return 0
+
     from tools.analyze import run_repo
     from tools.analyze.report import render_github, render_json, render_text
 
-    findings, rules, n_suppressed = run_repo(root, with_jaxpr=not args.no_jaxpr)
+    findings, rules, suppressed = run_repo(root, with_jaxpr=not args.no_jaxpr)
 
     if args.json:
-        print(render_json(findings, rules))
+        print(render_json(findings, rules, suppressed))
     else:
         print(render_text(findings, rules))
-        if n_suppressed:
-            print(f"({n_suppressed} finding(s) suppressed via "
+        if suppressed:
+            print(f"({len(suppressed)} finding(s) suppressed via "
                   f"'# analyze: allow(...)')")
+        if not args.no_jaxpr:
+            from tools.analyze.rules_recompile import collect_compiled
+
+            _, _, skipped = collect_compiled(root)
+            if skipped:
+                print(f"note: dynamic recompile/cost gates skipped — {skipped}")
     if args.github and findings:
         print(render_github(findings))
     return 1 if findings else 0

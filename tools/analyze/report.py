@@ -46,14 +46,23 @@ def render_text(findings: Sequence[Finding], rules: Sequence[str]) -> str:
     return "\n".join(lines)
 
 
-def render_json(findings: Sequence[Finding], rules: Sequence[str]) -> str:
+def render_json(
+    findings: Sequence[Finding],
+    rules: Sequence[str],
+    suppressed: Sequence[Finding] = (),
+) -> str:
     """Machine-readable report (the `--json` CI artifact): active rules,
-    findings, and an `ok` verdict."""
+    findings, an `ok` verdict, and suppression counts (total + per rule)
+    so `# analyze: allow(...)` accumulation is visible to tooling."""
     return json.dumps(
         {
             "ok": not findings,
             "rules": list(rules),
             "findings": [dataclasses.asdict(f) for f in findings],
+            "suppressed": {
+                "total": len(suppressed),
+                "by_rule": counts_by_rule(suppressed),
+            },
         },
         indent=2,
     )

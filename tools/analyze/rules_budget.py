@@ -1,0 +1,159 @@
+"""Cost-budget gate (analyze layer 3): pin each mode's compiled cost.
+
+`launch/hlo_cost.py` has been able to price a compiled program (FLOPs,
+bytes moved, collective bytes, trip-count-aware) since PR 4 — but nothing
+GATED on it, so a quadratic blow-up in a combine, a collective that grew
+a redundant all-gather, or a schedule change that doubled wire traffic
+would land silently as long as numerics stayed right.  This rule pins,
+per `mode_trace_cases()` entry, the AOT-compiled solve body's
+
+  flops               optimized-HLO floating-point operations
+  collective_bytes    bytes entering cross-device collectives
+  compile_count       jit cache entries after two value-varied calls
+                      (must be 1 — the recompile-budget invariant)
+
+against `tools/analyze/budgets.json`.  Numeric drift beyond the
+tolerance (or ANY compile-count change) is a finding: intended changes
+re-pin with `python -m tools.analyze --update-budgets` and commit the
+diff — which makes cost changes reviewable, the same workflow as a
+lockfile.  The measurements come from `rules_recompile.collect_compiled`
+(one shared compile pass) and are skipped when the host exposes too few
+devices; the probe sizes are fixed in rules_recompile, so budget numbers
+are comparable across machines running the same pinned jax.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List
+
+from tools.analyze.report import Finding
+from tools.analyze.walker import REPO, rel
+
+RULES = ("cost-budget",)
+
+# Relative slack on flops/collective_bytes before drift becomes a
+# finding.  Collective bytes are protocol-determined and flops come from
+# the same pinned jax/XLA on the same (CPU) platform, so real drift shows
+# up far above this; the slack only absorbs patch-level codegen jitter.
+REL_TOL = 0.02
+
+_BUDGET_KEYS = ("flops", "collective_bytes", "compile_count")
+
+
+def budgets_path(root: pathlib.Path = REPO) -> pathlib.Path:
+    return pathlib.Path(root) / "tools" / "analyze" / "budgets.json"
+
+
+def load_budgets(root: pathlib.Path = REPO) -> Dict:
+    path = budgets_path(root)
+    if not path.exists():
+        return {}
+    return json.loads(path.read_text())
+
+
+def compare(measured: Dict[str, dict], budgets: Dict, *,
+            file: str, root: pathlib.Path = REPO) -> List[Finding]:
+    """Pure comparison of a measurement dict against a budgets dict —
+    the drift logic, separated so tests can drive it without devices."""
+    findings: List[Finding] = []
+    modes = budgets.get("modes", {})
+    for name in sorted(set(measured) | set(modes)):
+        if name not in modes:
+            findings.append(Finding(
+                "cost-budget", file, 1,
+                f"[{name}] no pinned cost budget: run `python -m "
+                f"tools.analyze --update-budgets` and commit "
+                f"budgets.json so this mode's FLOPs/collective-bytes/"
+                f"compile-count are gated like every other mode's",
+            ))
+            continue
+        if name not in measured:
+            findings.append(Finding(
+                "cost-budget", file, 1,
+                f"[{name}] budgets.json pins a mode the trace matrix no "
+                f"longer produces — stale entry; re-pin with "
+                f"--update-budgets",
+            ))
+            continue
+        got, want = measured[name], modes[name]
+        for key in _BUDGET_KEYS:
+            g, w = float(got[key]), float(want[key])
+            if key == "compile_count":
+                ok = g == w
+            else:
+                ok = abs(g - w) <= REL_TOL * max(abs(w), 1.0)
+            if not ok:
+                findings.append(Finding(
+                    "cost-budget", file, 1,
+                    f"[{name}] {key} drifted: measured {g:g} vs pinned "
+                    f"{w:g} (tolerance {REL_TOL:.0%}"
+                    f"{', exact' if key == 'compile_count' else ''}) — "
+                    f"if intended, re-pin with `python -m tools.analyze "
+                    f"--update-budgets` and commit the budgets.json diff "
+                    f"so the cost change is reviewed; if not, a combine/"
+                    f"collective/retrace regression landed",
+                ))
+    return findings
+
+
+def measure(root: pathlib.Path = REPO) -> Dict[str, dict]:
+    """Per-mode budget measurements (subset of collect_compiled records);
+    {} when devices are insufficient."""
+    from tools.analyze import rules_recompile
+
+    records, _, skipped = rules_recompile.collect_compiled(root)
+    if skipped:
+        return {}
+    return {
+        name: {k: rec[k] for k in _BUDGET_KEYS}
+        for name, rec in records.items()
+    }
+
+
+def update_budgets(root: pathlib.Path = REPO) -> pathlib.Path:
+    """Re-pin budgets.json from a fresh measurement (the --update-budgets
+    CLI path).  Raises RuntimeError when devices are insufficient."""
+    import jax
+
+    from tools.analyze import rules_recompile
+
+    _, _, skipped = rules_recompile.collect_compiled(root)
+    if skipped:
+        raise RuntimeError(f"cannot measure budgets: {skipped}")
+    measured = measure(root)
+    path = budgets_path(root)
+    payload = {
+        "_comment": (
+            "Per-mode compiled-cost budgets for tools/analyze's "
+            "cost-budget gate: AOT-compiled solve-body FLOPs and "
+            "collective bytes (launch/hlo_cost.analyze_compiled on the "
+            "rules_recompile probe: M=32, kb=4, B=8, iters=2) plus the "
+            "jit cache-entry count after two value-varied calls.  "
+            "Re-pin intentionally with "
+            "`python -m tools.analyze --update-budgets`."
+        ),
+        "jax": jax.__version__,
+        "modes": {name: measured[name] for name in sorted(measured)},
+    }
+    path.write_text(json.dumps(payload, indent=2, sort_keys=False) + "\n")
+    return path
+
+
+def run(root: pathlib.Path = REPO) -> List[Finding]:
+    """The gate: measured costs vs committed budgets.json ([] when
+    devices are insufficient to measure)."""
+    measured = measure(root)
+    if not measured:
+        return []
+    file = rel(budgets_path(root), root)
+    budgets = load_budgets(root)
+    if not budgets:
+        return [Finding(
+            "cost-budget", file, 1,
+            "tools/analyze/budgets.json is missing — run `python -m "
+            "tools.analyze --update-budgets` and commit it so compiled "
+            "cost drift is gated",
+        )]
+    return compare(measured, budgets, file=file, root=root)

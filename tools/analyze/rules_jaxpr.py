@@ -156,6 +156,9 @@ class _JaxprChecker:
         self.root = pathlib.Path(root)
         self.findings: List[Finding] = []
         self.bytes_by_axis: Dict[str, float] = {}
+        # per-output varying-axes sets of the last run() — the replication
+        # layer reads these to prove out-spec contracts
+        self.out_varying: List[frozenset] = []
 
     # -- helpers ----------------------------------------------------------
 
@@ -201,7 +204,7 @@ class _JaxprChecker:
         jaxpr = closed_jaxpr.jaxpr
         vary = [frozenset(v) for v in in_varying]
         vary += [frozenset()] * (len(jaxpr.invars) - len(vary))
-        self._interp(
+        self.out_varying, _ = self._interp(
             jaxpr, vary, [None] * len(jaxpr.invars),
             record=True, in_scan=False, bytes_acc=self.bytes_by_axis,
         )

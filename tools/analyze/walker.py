@@ -6,11 +6,16 @@ syntax (documented in docs/ANALYSIS.md): a finding at line L of a file is
 suppressed iff line L or line L-1 carries the comment
 
     # analyze: allow(<rule-id>)
+    # analyze: allow(<rule-id>: <reason>)
 
-Multiple rule ids may be allowed on one line: `# analyze: allow(a, b)`.
-Suppressions are per-line and per-rule on purpose — there is no file-wide
-or rule-wide escape hatch, so every waiver is visible next to the code it
-excuses.
+Multiple entries may share one comment: `# analyze: allow(a, b: why)`
+(reasons therefore must not contain commas).  Layer-3 rules — the
+replication/recompile/cost gates in `REASON_REQUIRED_RULES` — REJECT the
+bare form: waiving a soundness proof without a recorded reason is how
+silent drift re-enters, so a bare allow for those rules does not
+suppress.  Suppressions are per-line and per-rule on purpose — there is
+no file-wide or rule-wide escape hatch, so every waiver is visible next
+to the code it excuses.
 """
 
 from __future__ import annotations
@@ -25,6 +30,17 @@ from tools.analyze.report import Finding
 REPO = pathlib.Path(__file__).resolve().parents[2]
 
 _ALLOW_RE = re.compile(r"#\s*analyze:\s*allow\(([^)]*)\)")
+
+# Layer-3 rule ids whose suppressions must carry a reason
+# (`allow(rule: reason)`): these rules gate soundness proofs and cost
+# budgets, so an unexplained waiver is itself a hazard.  Kept here (not in
+# the rule modules) so the stdlib-only filter needs no jax import.
+REASON_REQUIRED_RULES = frozenset({
+    "out-spec-replication", "step-size-replication", "varying-gate",
+    "quant-scale-pairing", "recompile-budget", "weak-literal-carry",
+    "asarray-dtype", "jit-cache-discipline", "scalar-closure",
+    "cost-budget",
+})
 
 # (source lines, AST) caches keyed by absolute path — rules share parses.
 _SRC_CACHE: Dict[str, List[str]] = {}
@@ -64,34 +80,48 @@ def iter_py_files(
         yield from sorted(base.rglob("*.py"))
 
 
-def allowed_rules_at(path: pathlib.Path, line: int) -> frozenset:
-    """Rule ids suppressed at `line` of `path`: the union of
-    `# analyze: allow(...)` comments on the line itself and the line above."""
+def allowed_rules_at(path: pathlib.Path, line: int) -> Dict[str, str]:
+    """{rule id: reason} suppressed at `line` of `path`: the union of
+    `# analyze: allow(...)` comments on the line itself and the line
+    above.  A bare `allow(rule)` maps to an empty reason string."""
     lines = source_lines(path)
-    out: set = set()
+    out: Dict[str, str] = {}
     for ln in (line, line - 1):
         if 1 <= ln <= len(lines):
             m = _ALLOW_RE.search(lines[ln - 1])
             if m:
-                out.update(t.strip() for t in m.group(1).split(",") if t.strip())
-    return frozenset(out)
+                for token in m.group(1).split(","):
+                    token = token.strip()
+                    if not token:
+                        continue
+                    rule, _, reason = token.partition(":")
+                    rule, reason = rule.strip(), reason.strip()
+                    # when the own-line and above-line comments both name a
+                    # rule, keep the reasoned entry (it satisfies
+                    # REASON_REQUIRED_RULES; a bare one may not)
+                    if reason or rule not in out:
+                        out[rule] = reason
+    return out
 
 
 def filter_suppressed(
     findings: Sequence[Finding], root: pathlib.Path = REPO
-) -> Tuple[List[Finding], int]:
+) -> Tuple[List[Finding], List[Finding]]:
     """Drop findings whose `file:line` carries a matching allow-comment;
-    returns (kept, n_suppressed)."""
+    returns (kept, suppressed).  For rules in `REASON_REQUIRED_RULES` a
+    bare (reason-less) allow does NOT suppress — the finding stays."""
     kept: List[Finding] = []
-    dropped = 0
+    suppressed: List[Finding] = []
     for f in findings:
         path = root / f.file
         try:
             allowed = allowed_rules_at(path, f.line)
         except OSError:
-            allowed = frozenset()
-        if f.rule in allowed:
-            dropped += 1
+            allowed = {}
+        if f.rule in allowed and (
+            allowed[f.rule] or f.rule not in REASON_REQUIRED_RULES
+        ):
+            suppressed.append(f)
         else:
             kept.append(f)
-    return kept, dropped
+    return kept, suppressed

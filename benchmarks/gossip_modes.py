@@ -88,6 +88,19 @@ ROWS["graph_tv:alternating"] = DistConfig(
 ROWS["graph_tv:erdos_resampled"] = DistConfig(
     mode="graph_tv", iters=1, topology_schedule="erdos_resampled",
     schedule_period=4)
+# graph_tv under seeded link failures: the alternating base degraded by a
+# 30% per-step Bernoulli edge dropout (Metropolis-renormalized survivors).
+# Read against graph_tv:alternating, the row prices CHURN: same base
+# network, mixing_rate becomes the windowed rate of the realized failure
+# trace and iters_to_target the convergence cost of the degradation.
+ROWS["graph_tv:linkfail"] = DistConfig(
+    mode="graph_tv", iters=1,
+    topology_schedule="alternating:ring_metropolis,torus",
+    failure_p=0.3, failure_seed=5, failure_steps=4)
+# push-sum (ratio consensus) over the row-stochastic-only directed star:
+# the weight channel adds 4 bytes per message next to the payload — the
+# wire price of surviving directed-only communication windows.
+ROWS["push:distar"] = DistConfig(mode="push", iters=1, topology="distar")
 # hier: the pure Kronecker composition (pod hop every iteration);
 # hier_q8: the full bandwidth-saving configuration — int8 wire format on
 # the inter-pod hop AND a pod_gossip_every=2 sparse stride.

@@ -50,6 +50,23 @@ Modes (gossip schedules):
               stream can keep advancing the network across micro-batches.
   graph_tv_q8 graph_tv over the int8 wire format (one quantization per
               iteration + error feedback, same as ring_q8/graph_q8).
+              Both graph_tv modes accept DistConfig.failure_p > 0: the
+              schedule is then wrapped in `topology.link_failure_schedule`
+              — a seeded per-step Bernoulli link-dropout realization with
+              Metropolis renormalization, compiled through the SAME
+              lax.switch machinery (a failure trace is still one program).
+  push        push-sum (ratio-consensus) diffusion: each agent carries a
+              scalar weight w (w0 = 1) next to nu; per iteration the pair
+              (w*psi, w) ships through the combiner schedule and the dual
+              update divides by the combined weight.  Mass conservation
+              then only needs A ROW stochastic, so DistConfig.topology may
+              also name a DIRECTED kind ("dicycle", "distar") — the
+              digraph regime of Daneshmand et al.  With a doubly-
+              stochastic A, w stays identically 1 and the iterates equal
+              mode="graph" exactly.
+  push_q8     push with the int8 wire format on the payload channel (in
+              the v = w*psi coordinates, error feedback as in graph_q8);
+              the scalar weight channel stays fp32.
   chain       HIERARCHICAL (N-level, graph-of-graphs) diffusion for
               multi-hop meshes: the network of agents is the device grid
               of every level axis (outermost-major) and the combiner is
@@ -138,6 +155,8 @@ MODE_REGISTRY = {
     "graph_async": ModeCaps(family="graph", stale=True),
     "graph_tv": ModeCaps(family="tv", time_varying=True),
     "graph_tv_q8": ModeCaps(family="tv", quantized=True, time_varying=True),
+    "push": ModeCaps(family="push"),
+    "push_q8": ModeCaps(family="push", quantized=True),
     "hier": ModeCaps(family="chain", hierarchical=True),
     "hier_q8": ModeCaps(family="chain", quantized=True, hierarchical=True),
     "chain": ModeCaps(family="chain", hierarchical=True),
@@ -149,6 +168,7 @@ MODE_REGISTRY = {
 RING_MODES = tuple(m for m, c in MODE_REGISTRY.items() if c.family == "ring")
 GRAPH_MODES = tuple(m for m, c in MODE_REGISTRY.items() if c.family == "graph")
 TV_MODES = tuple(m for m, c in MODE_REGISTRY.items() if c.family == "tv")
+PUSH_MODES = tuple(m for m, c in MODE_REGISTRY.items() if c.family == "push")
 HIER_MODES = ("hier", "hier_q8")
 CHAIN_MODES = tuple(m for m, c in MODE_REGISTRY.items() if c.family == "chain")
 MODES = tuple(MODE_REGISTRY)
@@ -187,6 +207,21 @@ class DistConfig:
                        construction (there is no sequence to run).
       schedule_period  period of the "erdos_resampled" spec (number of
                        distinct graphs before the sequence repeats).
+      failure_p        time-varying modes only: per-step, per-edge link
+                       dropout probability in [0, 1).  > 0 wraps the
+                       schedule in `core/topology.link_failure_schedule`
+                       (seeded Bernoulli realizations, Metropolis-
+                       renormalized per step so every realized A_t stays
+                       doubly stochastic).  Correctness under failures is
+                       gated on the realization's WINDOWED mixing rate.
+      failure_seed     seed of the per-step failure draws (independent of
+                       topology_seed: the same network can replay
+                       different failure traces).
+      failure_steps    number of distinct failure realizations before the
+                       trace repeats (the realized schedule period).
+                       0 = the base schedule's own period; raise it so a
+                       short-period base network does not replay the same
+                       dropped links forever.
       pod_topology     hier modes only: the INTER-POD combiner kind over
                        the pod axis (any `make_topology` kind; typically a
                        sparse one — the pod links are the slow long-haul
@@ -236,6 +271,11 @@ class DistConfig:
     # time-varying modes: core/topology.make_topology_schedule spec + period.
     topology_schedule: str = "alternating:ring_metropolis,torus"
     schedule_period: int = 2  # erdos_resampled period
+    # link-failure injection (time-varying modes): per-edge drop probability,
+    # failure-stream seed, and realized-trace period (0 = base period).
+    failure_p: float = 0.0
+    failure_seed: int = 0
+    failure_steps: int = 0
     # hier modes: inter-pod combiner kind (required) + sparse-gossip stride.
     pod_topology: str = ""  # e.g. "ring_metropolis"; "" = not configured
     pod_gossip_every: int = 1  # inter-pod hop every k iterations
@@ -308,6 +348,25 @@ class DistConfig:
             raise ValueError(
                 f"pod_gossip_every must be >= 1 (the inter-pod hop fires "
                 f"every k-th iteration), got {self.pod_gossip_every}"
+            )
+        if not 0.0 <= self.failure_p < 1.0:
+            raise ValueError(
+                f"failure_p must be in [0, 1) (a per-edge dropout "
+                f"probability; 1 would sever every link), got "
+                f"{self.failure_p}"
+            )
+        if self.failure_p > 0 and (caps is None or not caps.time_varying):
+            raise ValueError(
+                f"failure_p > 0 injects a per-step failure REALIZATION "
+                f"sequence, which only the time-varying family can run as "
+                f"one program (got mode={self.mode!r}); use mode='graph_tv'"
+                f"/'graph_tv_q8', e.g. with topology_schedule="
+                f"'fixed:<kind>' to degrade a static network"
+            )
+        if self.failure_steps < 0:
+            raise ValueError(
+                f"failure_steps must be >= 0 (0 = the base schedule's own "
+                f"period), got {self.failure_steps}"
             )
 
     def chain_levels(self) -> Tuple[topo.LevelSpec, ...]:
@@ -467,6 +526,9 @@ class DistributedSparseCoder:
         reg: Regularizer,
         cfg: DistConfig,
         grown_from: Optional["DistributedSparseCoder"] = None,
+        shrunk_from: Optional[
+            Tuple["DistributedSparseCoder", Tuple[int, ...]]
+        ] = None,
     ):
         """Build the coder's combiner state and compile its mesh programs.
 
@@ -478,7 +540,18 @@ class DistributedSparseCoder:
         their neighborhoods; only new-agent edges are sampled) instead of
         resampled wholesale.  Hierarchical coders additionally carry their
         inter-pod combiner verbatim (growth is model-axis only).
+
+        `shrunk_from` is the drain hook (`shrunk()` passes (old_coder,
+        survivors)): erdos-backed topologies are then RESTRICTED to the
+        survivor-induced subgraph via `topology.shrink_adjacency`
+        (survivors keep every edge among themselves, deterministic ring
+        repair if departures disconnected the graph); structured kinds
+        re-derive at the smaller size.  Mutually exclusive with
+        `grown_from`.
         """
+        if grown_from is not None and shrunk_from is not None:
+            raise ValueError("grown_from and shrunk_from are mutually "
+                             "exclusive construction hooks")
         if cfg.mode not in MODES:
             raise KeyError(f"unknown mode {cfg.mode!r}; options: {MODES}")
         if not 0.0 <= cfg.beta <= 0.5:
@@ -512,7 +585,7 @@ class DistributedSparseCoder:
         self._level_axes: Tuple[str, ...] = ()
         caps = MODE_REGISTRY[cfg.mode]
         n_model = dist.axis_sizes(mesh)[ax]
-        if cfg.mode in GRAPH_MODES:
+        if cfg.mode in GRAPH_MODES or caps.family == "push":
             if cfg.topology == "erdos":
                 if grown_from is not None and grown_from._adj is not None:
                     # seed stream (seed, step=0, n_new): IDENTICAL to the one
@@ -522,6 +595,12 @@ class DistributedSparseCoder:
                     self._adj = topo.erdos_renyi_grow(
                         grown_from._adj, n_model, p=cfg.topology_p,
                         seed=topo.derive_seed(cfg.topology_seed, 0, n_model),
+                    )
+                elif shrunk_from is not None and shrunk_from[0]._adj is not None:
+                    # Survivors keep every edge among themselves (ring repair
+                    # only if the departures disconnected the graph).
+                    self._adj = topo.shrink_adjacency(
+                        shrunk_from[0]._adj, shrunk_from[1]
                     )
                 else:
                     self._adj = topo.erdos_renyi_adjacency(
@@ -533,14 +612,23 @@ class DistributedSparseCoder:
                     cfg.topology, n_model, p=cfg.topology_p,
                     seed=cfg.topology_seed, beta=cfg.beta,
                 )
-            if cfg.topology == "torus":
+            if caps.family == "push":
+                # Push-sum rides directed, row-stochastic-only combiners: the
+                # weight channel absorbs the non-uniform column sums, so only
+                # row stochasticity is required of A here.
+                self._gsched = dist.graph_schedule(self._A, row_stochastic=True)
+            elif cfg.topology == "torus":
                 rows, cols = topo.torus_dims(n_model)
                 self._gsched = dist.torus_schedule(rows, cols, self._A)
             else:
                 self._gsched = dist.graph_schedule(self._A)
         elif cfg.mode in TV_MODES:
             if grown_from is not None and grown_from._tsched is not None:
+                # A LinkFailureSchedule re-applies its dropout to the grown
+                # base here, so failure_p survives elastic growth too.
                 self._tsched = grown_from._tsched.grown(n_model)
+            elif shrunk_from is not None and shrunk_from[0]._tsched is not None:
+                self._tsched = shrunk_from[0]._tsched.shrunk(shrunk_from[1])
             else:
                 spec = cfg.topology_schedule or "fixed"
                 if spec == "fixed":
@@ -549,6 +637,12 @@ class DistributedSparseCoder:
                     spec, n_model, p=cfg.topology_p, seed=cfg.topology_seed,
                     beta=cfg.beta, period=cfg.schedule_period,
                 )
+                if cfg.failure_p > 0:
+                    self._tsched = topo.link_failure_schedule(
+                        self._tsched, cfg.failure_p,
+                        failure_seed=cfg.failure_seed,
+                        steps=cfg.failure_steps or None,
+                    )
             self._gscheds = dist.graph_schedule_sequence(
                 self._tsched.combiners, self._tsched.kinds
             )
@@ -573,6 +667,10 @@ class DistributedSparseCoder:
                 # verbatim, the innermost one re-derived (erdos grown
                 # neighborhood-preservingly) at the larger size.
                 self._chain = grown_from._chain.grown(n_model)
+            elif shrunk_from is not None and shrunk_from[0]._chain is not None:
+                # drain is model-axis only too: outer factors verbatim, the
+                # innermost restricted to the survivor subgraph.
+                self._chain = shrunk_from[0]._chain.shrunk(shrunk_from[1])
             else:
                 self._chain = topo.make_kronecker_chain(
                     level_specs, level_ns,
@@ -846,6 +944,54 @@ class DistributedSparseCoder:
                     length=cfg.iters,
                 )
 
+        elif cfg.mode in PUSH_MODES:  # push-sum ratio consensus (directed A)
+            mu = self._mu_for(W_loc)
+            sched = self._gsched
+            local_grad = self._local_grad_fn(W_loc, x_loc, theta, n_inf, n_model)
+            # Ratio consensus (push-sum): a scalar weight w rides the wire
+            # next to the weighted dual v = w*psi and the update divides by
+            # the combined weight, so ONLY row stochasticity of A is needed
+            # (mass is conserved; each rank's bias cancels in the ratio).
+            # On a doubly stochastic A the weight channel stays exactly 1
+            # and the iteration reduces to plain ATC diffusion.
+            w0 = jnp.ones((), x_loc.dtype)
+
+            if cfg.mode == "push":
+
+                def step(carry, _):
+                    nu, w = carry
+                    psi = nu - mu * local_grad(nu)
+                    v, w = dist.push_graph_combine(psi, w, ax, sched)
+                    nu = res.project_dual(v / w.astype(v.dtype))
+                    return (nu, w), None
+
+                (nu, _), _ = jax.lax.scan(
+                    step, (nu0, w0), None, length=cfg.iters
+                )
+
+            else:  # push_q8: int8 wire format on the weighted dual channel
+
+                def step(carry, _):
+                    nu, w, err = carry
+                    psi = nu - mu * local_grad(nu)
+                    # error feedback on the WEIGHTED message v = w*psi (the
+                    # quantity that actually crosses the wire); the scalar
+                    # weight channel stays full precision — it costs 4 bytes
+                    # and the ratio is too sensitive to quantize it.
+                    v = w.astype(psi.dtype) * psi
+                    q, s = _quantize_q8(v + err)
+                    err = (v + err) - _dequantize_q8(q, s)
+                    v_new, w = dist.push_graph_combine_quantized(
+                        v, q, s, w, ax, sched
+                    )
+                    nu = res.project_dual(v_new / w.astype(v_new.dtype))
+                    return (nu, w, err), None
+
+                (nu, _, _), _ = jax.lax.scan(
+                    step, (nu0, w0, jnp.zeros_like(nu0)), None,
+                    length=cfg.iters,
+                )
+
         elif MODE_REGISTRY[cfg.mode].hierarchical:  # N-level chain gossip
             mu = self._mu_for(W_loc)
             cs = self._csched
@@ -1085,7 +1231,7 @@ class DistributedSparseCoder:
         caps = MODE_REGISTRY[self.cfg.mode]
         if caps.family == "tv":
             kind = f"tv:{self._tsched.spec}"
-        elif caps.family == "graph":
+        elif caps.family in ("graph", "push"):
             kind = self.cfg.topology
         elif caps.family == "ring":
             kind = "ring"
@@ -1146,7 +1292,10 @@ class DistributedSparseCoder:
                 "pod_gossip_every": 1,
                 "levels": self._levels_info(),
             }
-        if caps.family == "graph":
+        if caps.family in ("graph", "push"):
+            # For push the combiner may be row-stochastic only; sigma_2 is
+            # still the reported contraction proxy (exact on the doubly
+            # stochastic subfamily, where push-sum IS plain diffusion).
             label = self.cfg.topology
         elif caps.family == "ring":
             label = "ring"
@@ -1255,7 +1404,8 @@ class DistributedSparseCoder:
         payload + one fp32 scale per row); exact modes count their psum
         all-reduce at 2x the operand (reduce-scatter + all-gather);
         time-varying modes average over the schedule period and strided
-        levels over their gossip stride."""
+        levels over their gossip stride; push-sum modes add 4 bytes per
+        round for the scalar fp32 weight riding next to the message."""
         caps = MODE_REGISTRY[self.cfg.mode]
         ax = self.cfg.model_axis
         fp32 = 4 * b_loc * m
@@ -1265,10 +1415,13 @@ class DistributedSparseCoder:
         if caps.family == "ring":
             # ring_shift: one ppermute to each neighbor per iteration
             return ((ax, 2.0 * (q8 if caps.quantized else fp32)),)
-        if caps.family in ("graph", "tv"):
+        if caps.family in ("graph", "tv", "push"):
             scheds = self.gossip_schedules
             rounds = sum(s.messages_per_iter for s in scheds) / len(scheds)
-            return ((ax, rounds * (q8 if caps.quantized else fp32)),)
+            msg = float(q8 if caps.quantized else fp32)
+            if caps.family == "push":
+                msg += 4.0  # the scalar fp32 weight channel, per round
+            return ((ax, rounds * msg),)
         # hierarchical family: one entry per chain level, innermost-first
         per_level = dist.wire_bytes_per_level(self._csched, b_loc, m)
         return tuple(
@@ -1369,6 +1522,84 @@ class DistributedSparseCoder:
             W2 = jnp.concatenate([jax.device_get(W), fresh], axis=1)
         return new_coder, new_coder.snapshot(W2)
 
+    def shrunk(
+        self, W: Array, departing_ranks: Sequence[int]
+    ) -> Tuple["DistributedSparseCoder", Array]:
+        """Agent drain: the inverse of `grown()` — `departing_ranks` leave
+        the network and the surviving atoms are re-sharded onto a smaller
+        mesh WITHOUT restart.
+
+        Returns (new_coder, W2): a coder whose `model` axis shrank by
+        len(departing_ranks) devices, and the dictionary restricted to the
+        survivors' atom shards — each surviving agent keeps exactly the
+        shard it already owned, bit for bit (no re-init, no renorm).
+
+        Shrink is topology-aware and deterministic: erdos combiners (static
+        and every erdos step of a time-varying schedule) are RESTRICTED to
+        the survivor-induced subgraph via `topology.shrink_adjacency`
+        (survivors keep every edge among themselves; a deterministic ring
+        repair kicks in only if the departures disconnected the graph),
+        while structured kinds re-derive at the smaller size.  A
+        `LinkFailureSchedule` re-applies its seeded dropout over the shrunk
+        base, so a drained network keeps the same failure trace law.
+
+        Hierarchical coders drain on the innermost MODEL level only (same
+        contract as growth): every outer-level group loses the SAME model
+        ranks, outer combiners are carried verbatim, and the outermost-major
+        atom layout means each group's surviving shards stay contiguous with
+        their owners.
+        """
+        sizes = dist.axis_sizes(self.mesh)
+        n_old = sizes[self.cfg.model_axis]
+        departing = sorted(set(int(r) for r in departing_ranks))
+        if not departing:
+            raise ValueError("departing_ranks is empty: nothing to drain")
+        if departing[0] < 0 or departing[-1] >= n_old:
+            raise ValueError(
+                f"departing_ranks {departing} out of range for model axis "
+                f"of size {n_old}"
+            )
+        survivors = tuple(r for r in range(n_old) if r not in set(departing))
+        if not survivors:
+            raise ValueError(
+                f"cannot drain all {n_old} model ranks: at least one "
+                f"survivor is required"
+            )
+        n_new = len(survivors)
+        names = tuple(self.mesh.axis_names)
+        shape = tuple(
+            n_new if nm == self.cfg.model_axis else sizes[nm] for nm in names
+        )
+        new_mesh = dist.make_mesh(shape, names)
+        new_coder = DistributedSparseCoder(
+            new_mesh, self.res, self.reg, self.cfg,
+            shrunk_from=(self, survivors),
+        )
+        m, k = W.shape
+        sel = np.asarray(survivors, dtype=np.int64)
+        if self._chain is not None:
+            outer = int(np.prod(self._chain.ns[1:])) if self._chain.n_levels > 1 else 1
+            shards = outer * n_old
+            if k % shards:
+                raise ValueError(
+                    f"K={k} not divisible by outer*model={shards}"
+                )
+            kb = k // shards
+            W_host = np.asarray(jax.device_get(W)).reshape(m, outer, n_old, kb)
+            W2 = jnp.asarray(
+                W_host[:, :, sel, :].reshape(m, outer * n_new * kb),
+                W_host.dtype,
+            )
+        else:
+            if k % n_old:
+                raise ValueError(f"K={k} not divisible by model={n_old}")
+            kb = k // n_old
+            W_host = np.asarray(jax.device_get(W)).reshape(m, n_old, kb)
+            W2 = jnp.asarray(
+                W_host[:, sel, :].reshape(m, n_new * kb), W_host.dtype
+            )
+        return new_coder, new_coder.snapshot(W2)
+
 
 # ---------------------------------------------------------------------------
 # Abstract-trace hooks: device-free tracing of the shard_map bodies, the
@@ -1413,7 +1644,19 @@ def mode_trace_cases() -> Tuple[TraceCase, ...]:
     for mode, caps in MODE_REGISTRY.items():
         if caps.hierarchical:
             continue
-        cases.append(TraceCase(mode, DistConfig(mode=mode, iters=2), flat))
+        if caps.family == "push":
+            # the acceptance combiner: genuinely row-stochastic-only, so
+            # the trace exercises the weight channel doing real work.
+            cfg = DistConfig(mode=mode, iters=2, topology="distar")
+        else:
+            cfg = DistConfig(mode=mode, iters=2)
+        cases.append(TraceCase(mode, cfg, flat))
+    cases.append(TraceCase(
+        "graph_tv:linkfail",
+        DistConfig(mode="graph_tv", iters=2, failure_p=0.3, failure_seed=5,
+                   failure_steps=4),
+        flat,
+    ))
     cases.append(TraceCase(
         "hier",
         DistConfig(mode="hier", iters=2, topology="torus",

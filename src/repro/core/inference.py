@@ -198,6 +198,74 @@ def _diffusion_infer_impl(
     return nu, y, traj
 
 
+def push_sum_infer(
+    res: Residual,
+    reg: Regularizer,
+    W_blocks: Array,  # (N, M, Kb)
+    x: Array,  # (..., M)
+    A,  # (N, N) ROW stochastic (directed ok); or callable t -> (N, N)
+    informed: Array,  # (N,) 0/1 mask of N_I
+    cfg: DiffusionConfig = DiffusionConfig(),
+    nu0: Optional[Array] = None,  # (N, ..., M)
+    mu: Optional[Array] = None,  # overrides cfg.mu (may be traced)
+) -> Tuple[Array, Array, Array]:
+    """Push-sum (ratio-consensus) ATC diffusion over a ROW-stochastic A.
+
+    The single-host reference the `mode="push"` production engine is
+    parity-tested against.  Each agent carries (nu_k, w_k) with w_k(0) = 1;
+    per iteration
+
+        psi_k = nu_k - mu * grad J_k(nu_k)
+        v_k   = sum_l a_{lk} (w_l psi_l)      (the weighted payload)
+        w_k  <- sum_l a_{lk} w_l              (the scalar weight channel)
+        nu_k <- project(v_k / w_k)
+
+    Row stochasticity of A is mass conservation (sum_k w_k = N for all t);
+    the RATIO corrects the per-agent drift, so consensus only needs the
+    directed support strongly connected — not column sums of 1.  When A is
+    doubly stochastic, every column sums to 1 so w stays identically 1 and
+    the iteration reduces EXACTLY to `diffusion_infer` — the invariant the
+    push parity tests pin.  Returns (nu_agents, y_agents, w_agents).
+    """
+    if cfg.mode == "penalty":
+        raise ValueError(
+            "push_sum_infer supports the projection combine only (the "
+            "penalty form's extra gradient is not mass-linear, so it does "
+            "not commute with the push-sum ratio)"
+        )
+    A_fn = A if callable(A) else (lambda t, _A=A: _A)
+    n_agents = W_blocks.shape[0]
+    n_informed = jnp.maximum(informed.sum(), 1.0).astype(x.dtype)
+    if mu is None:
+        mu = jnp.asarray(cfg.mu, x.dtype)
+    if nu0 is None:
+        nu0 = jnp.zeros((n_agents,) + x.shape, x.dtype)
+
+    grad_all = jax.vmap(
+        lambda W_k, nu_k, theta: agent_grad(
+            res, reg, W_k, nu_k, x, theta, n_agents, n_informed
+        )
+    )
+    w_shape = (n_agents,) + (1,) * x.ndim
+
+    def step(carry, _):
+        nu, w, t = carry
+        g = grad_all(W_blocks, nu, informed.astype(x.dtype))
+        psi = nu - mu * g
+        At = A_fn(t).T.astype(psi.dtype)
+        v = jnp.tensordot(At, w * psi, axes=1)
+        w_next = jnp.tensordot(At, w.reshape(n_agents), axes=1).reshape(w_shape)
+        nu_next = v / w_next.astype(v.dtype)
+        if res.bounded_dual:
+            nu_next = res.project_dual(nu_next)
+        return (nu_next, w_next, t + 1), None
+
+    carry0 = (nu0, jnp.ones(w_shape, x.dtype), jnp.asarray(0, jnp.int32))
+    (nu, w, _), _ = jax.lax.scan(step, carry0, None, length=cfg.iters)
+    y = jax.vmap(lambda W_k, nu_k: reg.ystar(nu_k @ W_k))(W_blocks, nu)
+    return nu, y, w.reshape(n_agents)
+
+
 # ---------------------------------------------------------------------------
 # Centralized dual solvers (baseline + beyond-paper accelerated)
 # ---------------------------------------------------------------------------

@@ -29,7 +29,22 @@ Three regimes live here:
 Elastic growth is topology-aware: `erdos_renyi_grow` enlarges a random
 graph WITHOUT resampling the edges between existing agents, so growth
 never rewires the neighborhoods the old agents already use
-(`TopologySchedule.grown` applies it per schedule step).
+(`TopologySchedule.grown` applies it per schedule step).  The inverse,
+`TopologySchedule.shrunk` / `KroneckerChain.shrunk`, restricts the
+network to a surviving agent subset (drain/decommission) with a
+deterministic ring repair if the induced subgraph disconnects.
+
+Churn additions on top of the three regimes:
+
+* **directed** combiners — `make_topology` also builds row-stochastic-only
+  directed kinds ("dicycle", "distar") for the push-sum (ratio-consensus)
+  modes, which only need row stochasticity plus strong connectivity
+  (Daneshmand et al., time-varying digraphs);
+* **link failure** — `link_failure_schedule` wraps any schedule (or chain)
+  in a seeded per-step Bernoulli link-dropout transform with per-step
+  Metropolis renormalization, so every realized A_t stays doubly
+  stochastic and the windowed mixing rate of the realization is the
+  correctness gate.
 """
 
 from __future__ import annotations
@@ -166,6 +181,43 @@ def is_doubly_stochastic(a: np.ndarray, tol: float = 1e-9) -> bool:
     )
 
 
+def is_row_stochastic(a: np.ndarray, tol: float = 1e-9) -> bool:
+    """Whether (n, n) A is nonnegative with rows summing to 1.
+
+    Under the engine's combine convention nu_k = sum_l A[l, k] psi_l, row
+    stochasticity is exactly mass conservation (each sender distributes
+    unit weight over its out-neighbors) — the only stochasticity the
+    push-sum (ratio-consensus) modes need, which is what unlocks directed
+    combiners whose columns do NOT sum to one."""
+    return (
+        bool(np.all(a >= -tol))
+        and bool(np.allclose(a.sum(axis=1), 1.0, atol=1e-7))
+    )
+
+
+def is_strongly_connected(adj: np.ndarray) -> bool:
+    """Whether the (n, n) bool DIRECTED adjacency is strongly connected
+    (every agent reaches every agent along directed edges) — the
+    connectivity condition for push-sum consensus on a digraph."""
+    adj = np.asarray(adj, dtype=bool)
+    n = adj.shape[0]
+    if n == 1:
+        return True
+
+    def _reaches_all(a: np.ndarray) -> bool:
+        seen = {0}
+        frontier = [0]
+        while frontier:
+            i = frontier.pop()
+            for j in np.nonzero(a[i])[0]:
+                if int(j) not in seen:
+                    seen.add(int(j))
+                    frontier.append(int(j))
+        return len(seen) == n
+
+    return _reaches_all(adj) and _reaches_all(adj.T)
+
+
 def mixing_rate(a: np.ndarray) -> float:
     """Second-largest singular value of A — governs gossip contraction."""
     s = np.linalg.svd(a, compute_uv=False)
@@ -182,12 +234,51 @@ def torus_dims(n: int) -> tuple:
     return rows, n // rows
 
 
+DIRECTED_KINDS = ("dicycle", "distar")
+
+
+def dicycle_weights(n: int) -> np.ndarray:
+    """Directed cycle: row i keeps weight 1/2 and ships 1/2 to (i+1) % n.
+
+    Asymmetric (messages only flow one way around the ring) yet still
+    doubly stochastic — the cheapest directed combiner, one send per agent
+    per iteration."""
+    if n == 1:
+        return np.ones((1, 1))
+    a = np.zeros((n, n))
+    for i in range(n):
+        a[i, i] = 0.5
+        a[i, (i + 1) % n] += 0.5
+    return a
+
+
+def distar_weights(n: int) -> np.ndarray:
+    """Directed star: hub row 0 averages uniformly over all n agents; leaf
+    row i >= 1 keeps 1/2 and ships 1/2 to the hub.
+
+    Row stochastic but NOT doubly stochastic for n >= 3 (column 0 sums to
+    1/n + (n-1)/2): plain diffusion under it drifts mass toward the hub,
+    so it is only usable through the push-sum (ratio-consensus) modes —
+    the canonical row-stochastic-only combiner the directed-mode parity
+    tests exercise."""
+    if n == 1:
+        return np.ones((1, 1))
+    a = np.zeros((n, n))
+    a[0, :] = 1.0 / n
+    for i in range(1, n):
+        a[i, i] = 0.5
+        a[i, 0] = 0.5
+    return a
+
+
 def make_topology(kind: str, n: int, *, p: float = 0.5, seed: int = 0,
                   beta: float = 1.0 / 3.0) -> np.ndarray:
-    """Build a doubly-stochastic (n, n) combiner for `n` agents.
+    """Build an (n, n) combiner for `n` agents.
 
-    kinds: "ring" (constant-weight), "ring_metropolis", "torus", "erdos",
-    "full".
+    Doubly-stochastic kinds (valid for every mode): "ring"
+    (constant-weight), "ring_metropolis", "torus", "erdos", "full".
+    Directed kinds (row stochastic + strongly connected — push-sum modes
+    only): "dicycle", "distar".
     """
     if kind == "ring":
         return ring_weights(n, beta)
@@ -199,6 +290,14 @@ def make_topology(kind: str, n: int, *, p: float = 0.5, seed: int = 0,
         return metropolis_weights(erdos_renyi_adjacency(n, p=p, seed=seed))
     if kind == "full":
         return uniform_weights(n)
+    if kind in DIRECTED_KINDS:
+        a = dicycle_weights(n) if kind == "dicycle" else distar_weights(n)
+        # Directed kinds promise exactly what push-sum needs: mass
+        # conservation (row stochasticity) and strong connectivity of the
+        # directed support graph.
+        assert is_row_stochastic(a)
+        assert is_strongly_connected(a > 1e-12)
+        return a
     raise KeyError(f"unknown topology kind {kind!r}")
 
 
@@ -251,6 +350,33 @@ def erdos_renyi_grow(
     raise RuntimeError(
         f"could not grow a connected G({n_new},{p}) graph from {n_old} agents"
     )
+
+
+def shrink_adjacency(adj: np.ndarray, survivors: Sequence[int]) -> np.ndarray:
+    """Restrict an adjacency to a surviving agent subset (drain/SHRINK).
+
+    Returns the survivor-induced subgraph — every edge between two
+    survivors is preserved verbatim, the neighborhood-preserving inverse
+    of `erdos_renyi_grow`.  If the induced subgraph is disconnected (the
+    departing agents were cut vertices), the ring over the survivors is
+    unioned in as a DETERMINISTIC repair: survivors keep all their old
+    edges and gain at most two, and the result is connected again.
+    """
+    survivors = tuple(sorted(int(r) for r in survivors))
+    if len(set(survivors)) != len(survivors):
+        raise ValueError(f"duplicate survivor ranks in {survivors}")
+    adj = np.asarray(adj, dtype=bool)
+    if not survivors:
+        raise ValueError("cannot shrink to zero survivors")
+    if survivors[0] < 0 or survivors[-1] >= adj.shape[0]:
+        raise ValueError(
+            f"survivor ranks {survivors} out of range for {adj.shape[0]} agents"
+        )
+    sub = adj[np.ix_(survivors, survivors)].copy()
+    if not is_connected(sub):
+        sub |= ring_adjacency(len(survivors))
+    np.fill_diagonal(sub, False)
+    return sub
 
 
 def _window_product(combiners: Sequence[np.ndarray]) -> np.ndarray:
@@ -400,6 +526,51 @@ class TopologySchedule:
                     f"wraps an explicit combiner matrix with no generator; "
                     f"build the schedule via make_topology_schedule("
                     f"'fixed:<kind>', ...) so growth can re-derive it"
+                )
+            kinds.append(kind)
+        return TopologySchedule(
+            spec=self.spec, n=n_new, kinds=tuple(kinds),
+            combiners=tuple(combiners), adjacencies=tuple(adjs),
+            p=self.p, seed=self.seed, beta=self.beta,
+        )
+
+    def shrunk(self, survivors: Sequence[int]) -> "TopologySchedule":
+        """Re-derive the schedule for a surviving agent subset (drain).
+
+        The inverse of `grown`, deterministic in (schedule, survivors).
+        Erdos-backed steps restrict to the survivor-induced subgraph via
+        `shrink_adjacency` — surviving agents keep every edge they had to
+        other survivors (with the deterministic ring repair if departures
+        disconnected the graph); structured kinds (ring / torus / full)
+        are re-derived at the smaller size, their natural restriction."""
+        survivors = tuple(sorted(int(r) for r in survivors))
+        if not survivors:
+            raise ValueError("cannot shrink a schedule to zero survivors")
+        if len(set(survivors)) != len(survivors):
+            raise ValueError(f"duplicate survivor ranks in {survivors}")
+        if survivors[0] < 0 or survivors[-1] >= self.n:
+            raise ValueError(
+                f"survivor ranks {survivors} out of range for {self.n} agents"
+            )
+        n_new = len(survivors)
+        kinds, combiners, adjs = [], [], []
+        for i, kind in enumerate(self.kinds):
+            if kind == "erdos" and self.adjacencies[i] is not None:
+                adj = shrink_adjacency(self.adjacencies[i], survivors)
+                combiners.append(metropolis_weights(adj))
+                adjs.append(adj)
+            elif kind in GRAPH_KINDS and kind != "erdos":
+                combiners.append(
+                    make_topology(kind, n_new, p=self.p, seed=self.seed,
+                                  beta=self.beta)
+                )
+                adjs.append(_adjacency_for(kind, n_new))
+            else:
+                raise ValueError(
+                    f"cannot shrink schedule step {i} of kind {kind!r}: it "
+                    f"wraps an explicit combiner matrix with no generator; "
+                    f"build the schedule via make_topology_schedule("
+                    f"'fixed:<kind>', ...) so drain can re-derive it"
                 )
             kinds.append(kind)
         return TopologySchedule(
@@ -701,6 +872,42 @@ class KroneckerChain:
             adj0 = _adjacency_for(spec0.kind, n_model_new)
         return KroneckerChain(
             specs=self.specs, ns=(n_model_new,) + self.ns[1:],
+            combiners=(A0,) + self.combiners[1:],
+            adjacencies=(adj0,) + self.adjacencies[1:],
+            p=self.p, seed=self.seed, beta=self.beta,
+        )
+
+    def shrunk(self, survivors: Sequence[int]) -> "KroneckerChain":
+        """Re-derive the chain for a surviving INNERMOST (model) subset.
+
+        The inverse of `grown`: drain, like growth, happens on the model
+        level only (outer-level counts are physical), so every outer
+        factor is carried verbatim.  An erdos model level restricts to
+        the survivor-induced subgraph via `shrink_adjacency` (surviving
+        agents keep their neighborhoods, deterministic ring repair if
+        disconnected); structured kinds re-derive at the smaller size.
+        Deterministic in (chain, survivors)."""
+        survivors = tuple(sorted(int(r) for r in survivors))
+        if not survivors:
+            raise ValueError("cannot shrink the model level to zero agents")
+        if len(set(survivors)) != len(survivors):
+            raise ValueError(f"duplicate survivor ranks in {survivors}")
+        if survivors[0] < 0 or survivors[-1] >= self.ns[0]:
+            raise ValueError(
+                f"survivor ranks {survivors} out of range for model level "
+                f"of {self.ns[0]} agents"
+            )
+        n_new = len(survivors)
+        spec0 = self.specs[0]
+        if spec0.kind == "erdos" and self.adjacencies[0] is not None:
+            adj0 = shrink_adjacency(self.adjacencies[0], survivors)
+            A0 = metropolis_weights(adj0)
+        else:
+            A0 = make_topology(spec0.kind, n_new, p=self.p,
+                               seed=self.seed, beta=self.beta)
+            adj0 = _adjacency_for(spec0.kind, n_new)
+        return KroneckerChain(
+            specs=self.specs, ns=(n_new,) + self.ns[1:],
             combiners=(A0,) + self.combiners[1:],
             adjacencies=(adj0,) + self.adjacencies[1:],
             p=self.p, seed=self.seed, beta=self.beta,
@@ -1067,4 +1274,131 @@ def make_topology_schedule(
     raise KeyError(
         f"unknown topology schedule spec {spec!r} (expected 'fixed:<kind>', "
         f"'alternating:<k1>,<k2>,...', or 'erdos_resampled')"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Link-failure injection: seeded Bernoulli link dropout over any schedule,
+# renormalized per step so every realized A_t stays doubly stochastic
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class LinkFailureSchedule(TopologySchedule):
+    """A `TopologySchedule` whose steps are seeded link-failure REALIZATIONS.
+
+    Built by `link_failure_schedule`: each step t drops every undirected
+    edge of the base schedule's step-t adjacency independently with
+    probability `fail_p` (seeded `derive_seed(failure_seed, t)`), then
+    renormalizes the survivors with Metropolis weights.  Metropolis weights
+    are doubly stochastic for ANY adjacency — even a disconnected one — so
+    every realized A_t is still a valid diffusion combiner and the whole
+    realization compiles through the ordinary time-varying (`lax.switch`)
+    machinery as ONE program.  What failures degrade is connectivity per
+    step; correctness is therefore gated on the WINDOWED mixing rate of the
+    realization (`windowed_mixing_rate` < 1 iff the window product still
+    mixes), not on per-step connectivity.
+
+    Extra fields over the base class:
+      fail_p        per-step, per-edge drop probability in [0, 1)
+      failure_seed  base seed of the per-step drop streams
+      base          the un-failed generator schedule (carried so `grown` /
+                    `shrunk` can re-derive the base network and re-apply
+                    the SAME failure streams at the new size)
+    """
+
+    fail_p: float = 0.0
+    failure_seed: int = 0
+    base: Optional[TopologySchedule] = None
+
+    def _rederived(self, new_base) -> "LinkFailureSchedule":
+        return link_failure_schedule(
+            new_base, self.fail_p, failure_seed=self.failure_seed,
+            steps=self.period,
+        )
+
+    def grown(self, n_new: int) -> "LinkFailureSchedule":
+        """Grow the BASE schedule, then re-apply the same failure streams
+        (deterministic in (base, failure_seed, n_new))."""
+        if self.base is None:
+            raise ValueError(
+                "cannot grow a LinkFailureSchedule with no stored base "
+                "schedule; build it via link_failure_schedule(base, ...)"
+            )
+        return self._rederived(self.base.grown(n_new))
+
+    def shrunk(self, survivors: Sequence[int]) -> "LinkFailureSchedule":
+        """Shrink the BASE schedule to the survivors, then re-apply the
+        same failure streams (deterministic in (base, failure_seed,
+        survivors))."""
+        if self.base is None:
+            raise ValueError(
+                "cannot shrink a LinkFailureSchedule with no stored base "
+                "schedule; build it via link_failure_schedule(base, ...)"
+            )
+        return self._rederived(self.base.shrunk(survivors))
+
+
+def link_failure_schedule(
+    base,
+    fail_p: float,
+    *,
+    failure_seed: int = 0,
+    steps: Optional[int] = None,
+) -> LinkFailureSchedule:
+    """Wrap a schedule (or chain) in seeded Bernoulli link failures.
+
+    `base` is a `TopologySchedule` or a `KroneckerChain` (a chain is
+    flattened through its dense per-iteration sequence).  The result is a
+    `steps`-periodic `LinkFailureSchedule` (default: the base period) whose
+    step t is the Metropolis renormalization of the base step-t support
+    graph after dropping each undirected edge independently with
+    probability `fail_p`, seeded `derive_seed(failure_seed, t)` — a pure
+    function of (base, fail_p, failure_seed, steps), so the engine and the
+    host reference replay the IDENTICAL realized A_t trace.
+
+    Note `steps` > base.period is usually what a failure trace wants: the
+    base network repeats, but the failure realizations should not.
+    """
+    if not 0.0 <= float(fail_p) < 1.0:
+        raise ValueError(f"fail_p must be in [0, 1), got {fail_p}")
+    if isinstance(base, KroneckerChain):
+        # Flatten the chain to its dense per-iteration sequence (the
+        # host-reference form).  The flattened base carries no generator
+        # (kinds "explicit"), so a chain-backed realization cannot grow or
+        # shrink — re-wrap the chain's own grown()/shrunk() result instead.
+        chain = base
+        base = TopologySchedule(
+            spec="chain:" + ",".join(s.kind for s in chain.specs),
+            n=chain.n_agents, kinds=("explicit",) * chain.period,
+            combiners=chain.sequence(),
+            adjacencies=(None,) * chain.period,
+            p=chain.p, seed=chain.seed, beta=chain.beta,
+        )
+    if not isinstance(base, TopologySchedule):
+        raise TypeError(
+            f"link_failure_schedule needs a TopologySchedule or "
+            f"KroneckerChain base, got {type(base).__name__}"
+        )
+    n = base.n
+    steps = int(steps) if steps else base.period
+    if steps < 1:
+        raise ValueError(f"steps must be >= 1, got {steps}")
+    kinds, combiners, adjs = [], [], []
+    for t in range(steps):
+        a_base = np.asarray(base.at(t), np.float64)
+        adj = a_base > 1e-12
+        np.fill_diagonal(adj, False)
+        adj = adj | adj.T  # undirected support (base combiners are symmetric)
+        rng = np.random.default_rng(derive_seed(failure_seed, t))
+        drop = np.triu(rng.random((n, n)) < float(fail_p), 1)
+        alive = adj & ~(drop | drop.T)
+        kinds.append("linkfail")
+        combiners.append(metropolis_weights(alive))
+        adjs.append(alive)
+    return LinkFailureSchedule(
+        spec=f"linkfail:{float(fail_p):g}:{base.spec}", n=n,
+        kinds=tuple(kinds), combiners=tuple(combiners),
+        adjacencies=tuple(adjs), p=base.p, seed=base.seed, beta=base.beta,
+        fail_p=float(fail_p), failure_seed=int(failure_seed), base=base,
     )

@@ -2,12 +2,23 @@
 
 Streams synthetic samples through the continuously-learning dictionary
 service (repro.runtime.service): micro-batched coding against a
-double-buffered snapshot, online `fit_batch` on the live copy, and one
-optional mid-stream elastic growth of the `model` axis.
+double-buffered snapshot, online `fit_batch` on the live copy, one
+optional mid-stream elastic growth of the `model` axis, and one optional
+mid-stream agent DRAIN (the inverse: departing ranks leave, survivors
+keep their atom shards).
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
   PYTHONPATH=src python -m repro.launch.serve_dict \\
       --samples 600 --mesh 1x2 --grow-at 300 --grow-model 2
+
+Churn drills compose: a time-varying run with seeded link failures that
+drains agent 1 mid-stream (push-sum directed gossip works the same way
+via --mode push --topology distar):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  PYTHONPATH=src python -m repro.launch.serve_dict \\
+      --mode graph_tv --mesh 1x4 --fail-p 0.25 --fail-steps 6 \\
+      --grow-at 0 --drain-at 300 --drain 1
 
 Hierarchical (multi-pod) gossip takes a 3-D mesh 'PxDxM' plus the
 inter-pod combiner kind and optional sparse-gossip stride:
@@ -58,12 +69,15 @@ def main() -> None:
     ap.add_argument("--mode", type=str, default="exact_fista",
                     choices=["exact", "exact_fista", "ring", "ring_q8", "ring_async",
                              "graph", "graph_q8", "graph_async",
-                             "graph_tv", "graph_tv_q8", "hier", "hier_q8",
-                             "chain"])
+                             "graph_tv", "graph_tv_q8", "push", "push_q8",
+                             "hier", "hier_q8", "chain"])
     ap.add_argument("--topology", type=str, default="ring_metropolis",
-                    choices=["ring", "ring_metropolis", "torus", "erdos", "full"],
+                    choices=["ring", "ring_metropolis", "torus", "erdos", "full",
+                             "dicycle", "distar"],
                     help="graph-mode combiner kind (core/topology.make_topology); "
-                         "the INTRA-POD kind for the hier modes")
+                         "the INTRA-POD kind for the hier modes; the directed "
+                         "row-stochastic-only kinds (dicycle, distar) are for "
+                         "the push-sum modes")
     ap.add_argument("--pod-topology", type=str, default="",
                     choices=["", "ring", "ring_metropolis", "torus", "erdos", "full"],
                     help="hier modes: INTER-POD combiner kind over the pod axis "
@@ -88,6 +102,16 @@ def main() -> None:
                          "'erdos_resampled')")
     ap.add_argument("--schedule-period", type=int, default=2,
                     help="period of the erdos_resampled schedule")
+    ap.add_argument("--fail-p", type=float, default=0.0,
+                    help="graph_tv modes: per-step per-edge link-failure "
+                         "probability; every realized step is Metropolis-"
+                         "renormalized over the surviving links "
+                         "(core/topology.link_failure_schedule)")
+    ap.add_argument("--fail-seed", type=int, default=0,
+                    help="seed of the per-step failure draws")
+    ap.add_argument("--fail-steps", type=int, default=0,
+                    help="distinct failure realizations before the trace "
+                         "repeats (0 = the base schedule's own period)")
     ap.add_argument("--iters", type=int, default=150, help="dual iterations per solve")
     ap.add_argument("--m", type=int, default=32, help="data dimension")
     ap.add_argument("--atoms-per-agent", type=int, default=8)
@@ -104,6 +128,11 @@ def main() -> None:
                     help="sample index of the elastic growth event (0 = never)")
     ap.add_argument("--grow-model", type=int, default=2,
                     help="extra model-axis agents added at --grow-at")
+    ap.add_argument("--drain-at", type=int, default=0,
+                    help="sample index of the agent-drain event (0 = never)")
+    ap.add_argument("--drain", type=str, default="",
+                    help="comma-separated model ranks decommissioned at "
+                         "--drain-at (survivors keep their atom shards)")
     ap.add_argument("--rate", type=float, default=0.0,
                     help="submit rate in samples/s (0 = as fast as possible)")
     ap.add_argument("--no-learn", action="store_true")
@@ -142,6 +171,14 @@ def main() -> None:
         outer *= v
     if args.grow_at >= args.samples:
         args.grow_at = 0  # growth point past the stream: never fires
+    drain_ranks = [int(v) for v in args.drain.split(",") if v.strip()]
+    if args.drain_at >= args.samples:
+        args.drain_at = 0  # drain point past the stream: never fires
+    if bool(args.drain_at) != bool(drain_ranks):
+        raise SystemExit("--drain-at and --drain must be given together")
+    if args.drain_at and args.grow_at and args.drain_at <= args.grow_at:
+        raise SystemExit("--drain-at must come after --grow-at (the drain "
+                         "ranks refer to the then-current model axis)")
     need = outer * d * (m_axis + (args.grow_model if args.grow_at else 0))
     if jax.device_count() < need:
         raise SystemExit(
@@ -172,6 +209,8 @@ def main() -> None:
             topology_p=args.topology_p, topology_seed=args.topology_seed,
             topology_schedule=args.topology_schedule,
             schedule_period=args.schedule_period,
+            failure_p=args.fail_p, failure_seed=args.fail_seed,
+            failure_steps=args.fail_steps,
             pod_topology=args.pod_topology,
             pod_gossip_every=args.pod_gossip_every,
             levels=args.levels,
@@ -200,6 +239,7 @@ def main() -> None:
 
     futures = []
     grow_fut = None
+    drain_fut = None
     t0 = time.perf_counter()
     with DictionaryService(coder, W0, svc_cfg) as svc:
         for i in range(args.samples):
@@ -209,6 +249,11 @@ def main() -> None:
                 # until the new coder/snapshot pair is published)
                 futures[-1].result(timeout=600)
                 grow_fut = svc.grow(args.grow_model, jax.random.PRNGKey(args.seed + 2))
+            if args.drain_at and i == args.drain_at:
+                # same mid-stream discipline for the decommission: drain is
+                # a learner-thread swap, coding never stalls
+                futures[-1].result(timeout=600)
+                drain_fut = svc.drain(drain_ranks)
             if grow_fut is not None and i == args.samples - args.micro_batch:
                 # overlap growth with the stream, but make sure the final
                 # micro-batch is coded by the grown network
@@ -220,6 +265,9 @@ def main() -> None:
         if grow_fut is not None:
             grow_info = grow_fut.result(timeout=600)
             print(f"growth applied: {grow_info}")
+        if drain_fut is not None:
+            drain_info = drain_fut.result(timeout=600)
+            print(f"drain applied: {drain_info}")
         stats = svc.stats()
     wall_s = time.perf_counter() - t0
 
@@ -237,7 +285,8 @@ def main() -> None:
           f"p95 {lat.get('p95', float('nan')):.1f}  "
           f"p99 {lat.get('p99', float('nan')):.1f}")
     print(f"fit_steps {stats['fit_steps']}  published {stats['published']}  "
-          f"grow_events {len(stats['grow_events'])}  y dims seen {k_dims}")
+          f"grow_events {len(stats['grow_events'])}  "
+          f"drain_events {len(stats['drain_events'])}  y dims seen {k_dims}")
     print(f"mean ||nu||: first batch {pre:.4f} -> last batch {post:.4f}")
 
     if args.json:
@@ -257,6 +306,7 @@ def main() -> None:
             "fit_steps": stats["fit_steps"],
             "published": stats["published"],
             "grow_events": stats["grow_events"],
+            "drain_events": stats["drain_events"],
             "y_dims": k_dims,
             "residual_first": float(pre),
             "residual_last": float(post),

@@ -25,6 +25,16 @@ Mode -> collective mapping (core/distributed.py consumes these):
   graph_q8             graph_combine_     same schedule over the int8 wire
                        quantized          format (quantize_q8 scales ride
                                           along each shift)
+  push                 push_graph_        push-sum (ratio consensus): a
+                       combine            scalar weight channel rides every
+                                          shift next to psi and the dual
+                                          update divides by it — only needs
+                                          A ROW stochastic, so DIRECTED
+                                          combiners (make_topology's
+                                          "dicycle"/"distar") are admissible
+  push_q8              push_graph_        the same ratio consensus over the
+                       combine_quantized  int8 payload format (the scalar
+                                          weight channel stays fp32)
   graph_tv             graph_combine_     TIME-VARYING combiner sequence
                        switch over        (core/topology.TopologySchedule):
                        (graph_schedule_   every A_t pre-compiled to its own
@@ -124,6 +134,8 @@ __all__ = [
     "graph_combine_quantized",
     "graph_combine_switch",
     "graph_combine_quantized_switch",
+    "push_graph_combine",
+    "push_graph_combine_quantized",
     "LevelPlan",
     "ChainSchedule",
     "chain_schedule",
@@ -260,13 +272,24 @@ class GraphSchedule:
         return len(self.steps)
 
 
-def _check_combiner(A: np.ndarray) -> np.ndarray:
-    from repro.core.topology import is_doubly_stochastic  # numpy-only leaf
+def _check_combiner(A: np.ndarray, row_stochastic: bool = False) -> np.ndarray:
+    from repro.core.topology import (  # numpy-only leaves
+        is_doubly_stochastic,
+        is_row_stochastic,
+    )
 
     A = np.asarray(A, np.float64)
     if A.ndim != 2 or A.shape[0] != A.shape[1]:
         raise ValueError(f"combiner must be square, got shape {A.shape}")
-    if not is_doubly_stochastic(A):
+    if row_stochastic:
+        if not is_row_stochastic(A):
+            raise ValueError(
+                "push-sum combiner A must be row stochastic (nonnegative, "
+                "rows summing to 1 — mass conservation under the combine "
+                "convention nu_k = sum_l A[l, k] psi_l) — see "
+                "core/topology.make_topology's directed kinds"
+            )
+    elif not is_doubly_stochastic(A):
         raise ValueError(
             "combiner A must be doubly stochastic (nonnegative, rows and "
             "columns summing to 1) — see core/topology.make_topology"
@@ -274,7 +297,9 @@ def _check_combiner(A: np.ndarray) -> np.ndarray:
     return A
 
 
-def graph_schedule(A: np.ndarray, tol: float = 0.0) -> GraphSchedule:
+def graph_schedule(
+    A: np.ndarray, tol: float = 0.0, *, row_stochastic: bool = False
+) -> GraphSchedule:
     """Compile a doubly-stochastic combiner into a ppermute schedule.
 
     Decomposes A by flat edge-offset: round d (1 <= d < n) shifts psi by d
@@ -282,8 +307,13 @@ def graph_schedule(A: np.ndarray, tol: float = 0.0) -> GraphSchedule:
     A[(k - d) % n, k].  Offsets with an all-zero weight table are dropped, so
     a sparse graph costs exactly its number of distinct edge-offsets per
     iteration (ring combiners reduce to the familiar two shifts).
+
+    `row_stochastic=True` relaxes the admission check to row stochasticity
+    only — the push-sum (ratio-consensus) contract, which is what lets the
+    push modes run DIRECTED combiners whose columns do not sum to one.
+    The offset decomposition itself is combiner-agnostic.
     """
-    A = _check_combiner(A)
+    A = _check_combiner(A, row_stochastic=row_stochastic)
     n = A.shape[0]
     steps = []
     for d in range(1, n):
@@ -468,6 +498,63 @@ def graph_combine_quantized(
         w = _rank_weight(weights, axis_name)
         out = out + w.astype(x_self.dtype) * dequantize_q8(ql, sl, x_self.dtype)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Push-sum (ratio-consensus) gossip: a second scalar weight channel rides
+# the wire next to psi, and the caller divides by it — which relaxes the
+# combiner requirement from doubly stochastic to ROW stochastic (mass
+# conservation only), unlocking directed combiners (Daneshmand et al.,
+# time-varying digraphs; Kempe-Dobra-Gehrke push-sum)
+# ---------------------------------------------------------------------------
+
+
+def push_graph_combine(
+    x: Array, w: Array, axis_name: str, sched: GraphSchedule
+) -> Tuple[Array, Array]:
+    """One push-sum gossip round: ship (w * x, w) through the schedule.
+
+    `w` is this rank's scalar push-sum weight (initialized to 1.0 at the
+    start of a solve).  Returns (v_new, w_new) = (A^T (w x), A^T w); the
+    caller's dual estimate is the RATIO v_new / w_new, which is what
+    corrects the mass drift a merely-row-stochastic A introduces.  When A
+    is doubly stochastic, column sums are 1 so w stays identically 1 and
+    the ratio reduces EXACTLY to the plain diffusion combine — the parity
+    invariant the push tests pin.
+
+    Both channels ride the SAME ppermute rounds (one pytree through
+    `graph_combine`), so the weight channel can never desynchronize from
+    the payload — tools/analyze's push-weight-pairing rule proves this
+    pairing on the compiled jaxpr.
+    """
+    v = w.astype(x.dtype) * x
+    return graph_combine((v, w), axis_name, sched)
+
+
+def push_graph_combine_quantized(
+    v_self: Array, q: Array, s: Array, w: Array, axis_name: str,
+    sched: GraphSchedule,
+) -> Tuple[Array, Array]:
+    """`push_graph_combine` over the int8 wire format.
+
+    The caller forms v = w * psi, quantizes it ONCE with error feedback
+    ((q, s) = quantize_q8(v + err)), and passes the full-precision v as
+    `v_self` for the self term — exactly the graph_combine_quantized
+    contract, applied in the v = w * psi coordinates where push-sum's
+    linearity lives.  The scalar weight channel ships full precision (it
+    is 4 bytes; quantizing the DIVISOR would amplify the payload's
+    quantization error).  Returns (v_new, w_new).
+    """
+    out = _rank_weight(sched.diag, axis_name).astype(v_self.dtype) * v_self
+    w_out = _rank_weight(sched.diag, axis_name).astype(w.dtype) * w
+    for perm, weights in sched.steps:
+        ql = jax.lax.ppermute(q, axis_name, list(perm))
+        sl = jax.lax.ppermute(s, axis_name, list(perm))
+        wl = jax.lax.ppermute(w, axis_name, list(perm))
+        wt = _rank_weight(weights, axis_name)
+        out = out + wt.astype(v_self.dtype) * dequantize_q8(ql, sl, v_self.dtype)
+        w_out = w_out + wt.astype(w.dtype) * wl
+    return out, w_out
 
 
 # ---------------------------------------------------------------------------

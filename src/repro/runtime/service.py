@@ -42,7 +42,22 @@ exactly that contract:
     + the uniform per-level `levels` rows (kind/axis/n/stride/wire/stale).
     Growth is applied by the learner thread at a step boundary; the batcher
     keeps coding against the old (coder, snapshot) pair until the new pair
-    is published.  One caveat on
+    is published.
+  * **agent drain** — `drain(departing_ranks)` is the inverse event:
+    agents leave the network mid-stream and the LIVE dictionary is
+    restricted to the survivors' atom shards (bit for bit — no re-init)
+    on a mesh whose `model` axis is smaller
+    (`DistributedSparseCoder.shrunk`).  Erdos combiners restrict to the
+    survivor-induced subgraph (deterministic ring repair only if the
+    departures disconnected it); a `LinkFailureSchedule` re-applies its
+    seeded dropout over the shrunk base.  The handoff is
+    schedule-clock-consistent: the drained coder inherits the stream's
+    schedule clock (reduced mod its own period at the next claim), so
+    the survivors continue ONE time-varying network rather than
+    restarting at A_0.  Same swap mechanics and caveats as growth
+    (applied at a learner step boundary, warmup off the serving path
+    under the exec lock, stats + a drain event with the new identity).
+    One caveat on
     jax 0.4.x: the new coder's programs can only be compiled via their
     first execution, which must hold the exec lock (collectives from two
     programs must not interleave on shared devices) — so an elastic-growth
@@ -121,6 +136,7 @@ class DictionaryService:
         with DictionaryService(coder, W0, ServiceConfig()) as svc:
             futs = [svc.submit(x_i) for x_i in stream]
             svc.grow(extra_model=2, key=key)         # mid-stream, optional
+            svc.drain([1, 3])                        # decommission, optional
             results = [f.result() for f in futs]     # (nu_i, y_i) each
     """
 
@@ -133,7 +149,8 @@ class DictionaryService:
     # interleave).  Extending the service = extending these tuples.
     _GUARDED_BY_LOCK = (
         "submitted", "coded", "fit_steps", "fit_failures", "learn_dropped",
-        "fit_first_error", "published", "grow_events", "_latencies",
+        "fit_first_error", "published", "grow_events", "drain_events",
+        "_latencies",
         "_sched_t", "_coder", "_live", "_snap", "_comb_info",
     )
     _EXEC_GUARDED_CALLS = (
@@ -167,6 +184,7 @@ class DictionaryService:
         self._queue: "queue.Queue[_Item]" = queue.Queue(maxsize=cfg.queue_capacity)
         self._learn_q: "queue.Queue[np.ndarray]" = queue.Queue(maxsize=cfg.learn_queue_cap)
         self._grow_q: "queue.Queue[Tuple[int, jax.Array, Future]]" = queue.Queue()
+        self._drain_q: "queue.Queue[Tuple[Tuple[int, ...], Future]]" = queue.Queue()
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
         self._t_start: Optional[float] = None
@@ -193,6 +211,7 @@ class DictionaryService:
         self.fit_first_error: Optional[str] = None
         self.published = 0
         self.grow_events: List[Dict] = []
+        self.drain_events: List[Dict] = []
         self._latencies = collections.deque(maxlen=cfg.latency_window)
 
     # -- helpers ----------------------------------------------------------
@@ -312,6 +331,11 @@ class DictionaryService:
                     _resolve(self._grow_q.get_nowait()[2], exc=err)
                 except queue.Empty:
                     break
+            while True:
+                try:
+                    _resolve(self._drain_q.get_nowait()[1], exc=err)
+                except queue.Empty:
+                    break
 
     def __enter__(self) -> "DictionaryService":
         return self.start()
@@ -352,6 +376,23 @@ class DictionaryService:
             self._grow_q.put((int(extra_model), key, fut))
         return fut
 
+    def drain(self, departing_ranks: Sequence[int]) -> Future:
+        """Request decommission of `departing_ranks` model agents (the
+        inverse of grow()).  Applied by the learner thread at the next step
+        boundary; the Future resolves to an info dict once the shrunk
+        (coder, snapshot) pair is live.  Surviving agents keep their atom
+        shards bit for bit, and the stream's schedule clock carries over
+        (the survivors continue ONE time-varying network)."""
+        departing = tuple(sorted(set(int(r) for r in departing_ranks)))
+        if not departing:
+            raise ValueError("departing_ranks is empty: nothing to drain")
+        fut: Future = Future()
+        with self._submit_lock:
+            if self._stop.is_set() or not self._threads:
+                raise RuntimeError("service is not running; cannot drain")
+            self._drain_q.put((departing, fut))
+        return fut
+
     def dictionary(self) -> np.ndarray:
         """Host copy of the currently *published* dictionary snapshot."""
         with self._lock:
@@ -378,6 +419,7 @@ class DictionaryService:
                 "learn_dropped": self.learn_dropped,
                 "published": self.published,
                 "grow_events": [dict(ev) for ev in self.grow_events],
+                "drain_events": [dict(ev) for ev in self.drain_events],
                 "topology": self._comb_info["topology"],
                 "mixing_rate": self._comb_info["mixing_rate"],
                 # Time-varying schedule identity: the spec (None when
@@ -470,6 +512,7 @@ class DictionaryService:
     def _learner_loop(self) -> None:
         while True:
             self._maybe_grow()
+            self._maybe_drain()
             try:
                 xb = self._learn_q.get(timeout=0.02)
             except queue.Empty:
@@ -562,6 +605,54 @@ class DictionaryService:
                     "levels": new_info.get("levels"),
                 }
                 self.grow_events.append(info)
+            _resolve(fut, info)
+        except Exception as e:
+            _resolve(fut, exc=e)
+
+    def _maybe_drain(self) -> None:
+        try:
+            departing, fut = self._drain_q.get_nowait()
+        except queue.Empty:
+            return
+        try:
+            with self._lock:
+                coder, live = self._coder, self._live
+            k_old = int(live.shape[1])
+            new_coder, W2 = coder.shrunk(live, departing)
+            if self.cfg.warmup:
+                # compile the shrunk coder OFF the serving path: readers keep
+                # coding on the old (coder, snapshot) pair until the swap.
+                # The warmup executes on devices shared with in-flight
+                # old-coder programs, so it takes the exec lock too.
+                with self._exec_lock:
+                    self._warmup(new_coder, W2)
+            # The shrunk coder restricted (or re-derived) its combiner for
+            # the survivor network, so the topology identity changes with
+            # the swap.  The schedule clock is NOT reset: _advance_schedule
+            # reduces it mod the new coder's period at the next claim, so
+            # the survivors continue one continuous time-varying network.
+            new_info = new_coder.combiner_info()
+            with self._lock:
+                self._coder, self._live, self._snap = new_coder, W2, W2
+                self._comb_info = new_info
+                self.published += 1
+                info = {
+                    "at_coded": self.coded,
+                    "departed": list(departing),
+                    "k_old": k_old,
+                    "k_new": int(W2.shape[1]),
+                    "model_old": dist.axis_sizes(coder.mesh)[coder.cfg.model_axis],
+                    "model_new": dist.axis_sizes(new_coder.mesh)[new_coder.cfg.model_axis],
+                    "sched_t": self._sched_t,
+                    "topology": new_info["topology"],
+                    "mixing_rate": new_info["mixing_rate"],
+                    "schedule": new_info.get("schedule"),
+                    "schedule_period": new_info.get("schedule_period", 1),
+                    "pod_topology": new_info.get("pod_topology"),
+                    "pod_gossip_every": new_info.get("pod_gossip_every", 1),
+                    "levels": new_info.get("levels"),
+                }
+                self.drain_events.append(info)
             _resolve(fut, info)
         except Exception as e:
             _resolve(fut, exc=e)

@@ -1,0 +1,194 @@
+"""Fault-injection harness for the churn tests (tests/test_churn.py).
+
+Wraps any engine configuration in a seeded failure trace — per-step link
+dropout (DistConfig.failure_p -> topology.LinkFailureSchedule), directed
+row-stochastic-only windows (the push family), mid-stream agent departure
+(DictionaryService.drain) — and gates correctness exactly the way the
+healthy path has been gated since the first parity PRs:
+
+  * host-reference parity under the IDENTICAL realized combiner sequence
+    (`diffusion_infer` for the doubly stochastic families, `push_sum_infer`
+    for the push family), and
+  * the WINDOWED mixing-rate bound: the one-period window product of the
+    realized sequence must still contract (rate < 1), which is the
+    B-window joint-connectivity condition of the time-varying-digraph
+    convergence results this PR leans on.
+
+The module is importable both from pytest (the tests dir is on sys.path)
+and from the subprocess scripts the slow tests spawn with cwd = repo root
+(`from tests.faults import ...` resolves the namespace package) — so the
+harness itself is exercised in CI, not just the tests that use it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topology as topo
+from repro.core.dictionary import blocks_from_full
+from repro.core.distributed import (
+    MODE_REGISTRY, DistConfig, DistributedSparseCoder)
+from repro.core.inference import (
+    DiffusionConfig, diffusion_infer, push_sum_infer, safe_diffusion_mu)
+from repro.runtime import dist
+
+
+def with_link_failures(
+    cfg: DistConfig, fail_p: float, *, failure_seed: int = 0,
+    failure_steps: int = 0,
+) -> DistConfig:
+    """A copy of `cfg` with a seeded Bernoulli link-failure trace injected
+    (time-varying modes only — DistConfig.__post_init__ enforces it)."""
+    return dataclasses.replace(
+        cfg, failure_p=float(fail_p), failure_seed=int(failure_seed),
+        failure_steps=int(failure_steps),
+    )
+
+
+def realized_schedule(coder: DistributedSparseCoder) -> topo.TopologySchedule:
+    """The realized per-step combiner sequence of a time-varying coder —
+    for a failure-injected coder this IS the failure trace (every step a
+    Metropolis renormalization of the surviving links)."""
+    ts = coder.topology_schedule
+    if ts is None:
+        raise ValueError(
+            f"mode {coder.cfg.mode!r} is not schedule-driven; the realized "
+            f"combiner is the static coder.combiner()"
+        )
+    return ts
+
+
+def assert_window_contracts(
+    tsched: topo.TopologySchedule, *, bound: float = 1.0
+) -> float:
+    """Gate a (possibly degraded) schedule on its windowed mixing rate:
+    sigma_2(A_{P-1} ... A_0)^(1/P) < bound.  Returns the rate."""
+    rate = float(tsched.windowed_mixing_rate())
+    assert rate < bound, (
+        f"window product does not contract: windowed rate {rate} >= {bound} "
+        f"for spec {tsched.spec!r} (the realized failure trace lost "
+        f"B-window joint connectivity)"
+    )
+    return rate
+
+
+def host_reference(
+    coder: DistributedSparseCoder,
+    W: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    t0: int = 0,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(nu, y) per agent from the paper-faithful host engine run under the
+    coder's REALIZED combiner trace: `push_sum_infer` for the push family
+    (ratio consensus over the directed, row-stochastic-only A),
+    `diffusion_infer` under the schedule callable (offset by t0) for the
+    time-varying families, and under the static dense A otherwise."""
+    n = dist.axis_sizes(coder.mesh)[coder.cfg.model_axis]
+    W_blocks = blocks_from_full(W, n)
+    if coder.cfg.mu > 0:
+        mu = float(coder.cfg.mu)
+    else:
+        mu = float(safe_diffusion_mu(coder.res, coder.reg, W_blocks))
+    ones = jnp.ones((n,), jnp.float32)
+    dcfg = DiffusionConfig(iters=coder.cfg.iters)
+    ts = coder.topology_schedule
+    if ts is not None:
+        fn = ts.as_callable()
+        A = fn if t0 == 0 else (lambda t: fn(t + t0))
+    else:
+        A = jnp.asarray(coder.combiner(), jnp.float32)
+    mu_j = jnp.asarray(mu, x.dtype)
+    if MODE_REGISTRY[coder.cfg.mode].family == "push":
+        nu, y, _ = push_sum_infer(
+            coder.res, coder.reg, W_blocks, x, A, ones, dcfg, mu=mu_j)
+    else:
+        nu, y, _ = diffusion_infer(
+            coder.res, coder.reg, W_blocks, x, A, ones, dcfg, mu=mu_j)
+    return nu, y
+
+
+def assert_parity_under_faults(
+    coder: DistributedSparseCoder,
+    W: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    t0: int = 0,
+    tol: float = 1e-4,
+) -> Dict[str, float]:
+    """Run the compiled engine and the host reference under the identical
+    realized trace and assert per-agent (nu, y) parity to `tol`."""
+    nu_ref, y_ref = host_reference(coder, W, x, t0=t0)
+    Ws, xs = coder.shard(W, x)
+    nu_d, y_d = coder.solve_per_agent(Ws, xs, t0=t0)
+    nu_err = float(jnp.max(jnp.abs(jnp.asarray(nu_d) - nu_ref)))
+    y_err = float(jnp.max(jnp.abs(jnp.asarray(y_d) - y_ref)))
+    assert nu_err < tol, f"nu parity under faults: {nu_err} >= {tol} (t0={t0})"
+    assert y_err < tol, f"y parity under faults: {y_err} >= {tol} (t0={t0})"
+    return {"nu_err": nu_err, "y_err": y_err}
+
+
+def chaos_stream(
+    svc,
+    X: np.ndarray,
+    *,
+    depart_ranks: Sequence[int] = (),
+    depart_after: Optional[int] = None,
+    timeout: float = 600.0,
+):
+    """Feed `X` through a RUNNING DictionaryService one micro-batch at a
+    time with synchronized learning — submit a batch, await its futures,
+    then wait for the learner to consume it — firing a drain of
+    `depart_ranks` at the first batch boundary past `depart_after` coded
+    samples.  Synchronized submission makes the soak deterministic: no
+    learn batch is ever dropped, the drain lands at an exact sample
+    boundary, and the schedule clock advance per batch is fixed.
+
+    Returns (results, drain_info, clock_trace, handoff): the per-sample
+    (nu, y) list, the drain event dict (None if no drain fired), the
+    sampled `_sched_t` values (one per batch boundary — monotonicity is
+    the no-deadlock/no-rollback invariant the soak asserts), and the
+    handoff dict captured right after the drain — the drained dictionary
+    (survivor shards, bit for bit), the schedule clock it inherits, and
+    the index of the first post-drain sample — everything a clean replay
+    of the surviving sub-network needs."""
+    import time as _time
+
+    results = []
+    drain_info = None
+    handoff = None
+    clock_trace = []
+    mb = svc.cfg.micro_batch
+    for start in range(0, len(X), mb):
+        if (
+            drain_info is None
+            and depart_ranks
+            and depart_after is not None
+            and start >= depart_after
+        ):
+            drain_info = svc.drain(depart_ranks).result(timeout=timeout)
+            handoff = {
+                "W": svc.dictionary(),
+                "sched_t": drain_info["sched_t"],
+                "next_sample": start,
+            }
+        futs = [svc.submit(x) for x in X[start:start + mb]]
+        results.extend(f.result(timeout=timeout) for f in futs)
+        # wait for the learner to consume this batch so no learn step is
+        # dropped and the post-drain replay sees the identical fit stream
+        target = len(results) // mb
+        deadline = _time.perf_counter() + timeout
+        while svc.stats()["fit_steps"] < target:
+            if _time.perf_counter() > deadline:
+                raise TimeoutError(
+                    f"learner stalled: fit_steps "
+                    f"{svc.stats()['fit_steps']} < {target}"
+                )
+            _time.sleep(0.002)
+        with svc._lock:
+            clock_trace.append(svc._sched_t)
+    return results, drain_info, clock_trace, handoff

@@ -1,0 +1,19 @@
+"""Known-bad fixture: a push-sum payload ppermute with no scalar weight
+companion.
+
+Push-sum ships the weighted dual v = w*psi alongside a SCALAR weight
+ppermute with the SAME permutation — a payload hop that strands its
+weight at home divides a mixed numerator by an unmixed denominator in
+the v/w ratio, silently biasing the consensus on any row-stochastic-only
+combiner.  `push-weight-pairing` must fire exactly once.
+"""
+
+import jax
+
+AXIS_ENV = (("model", 2),)
+AGENT_AXES = ("model",)
+
+
+def fn(x):
+    v_in = jax.lax.ppermute(x, "model", [(0, 1), (1, 0)])
+    return 0.5 * x + 0.5 * v_in

@@ -219,7 +219,8 @@ def test_repo_is_clean_jaxpr():
 
 def test_all_rules_registered():
     rules = all_rules(with_jaxpr=True)
-    assert len(rules) == len(set(rules)) >= 23
+    assert len(rules) == len(set(rules)) >= 24
+    assert "push-weight-pairing" in rules
     assert "cond-collective-parity" in rules and "doc-links" in rules
     for r in rules_replication.RULES + rules_recompile.RULES + rules_budget.RULES:
         assert r in rules
@@ -372,6 +373,37 @@ def test_bad_q8_pairing_fires_once():
     )
 
 
+def test_bad_push_unpaired_fires_once():
+    import jax
+    import jax.numpy as jnp
+
+    mod = _load_fixture("bad_push_unpaired")
+    jaxpr, findings = _trace_fixture(mod)
+    assert not findings
+    fs = rules_replication.check_push_pairing(
+        jaxpr, label="bad_push_unpaired", file="tests/fixtures/analyze",
+        root=ROOT,
+    )
+    assert [f.rule for f in fs] == ["push-weight-pairing"]
+    assert "weight" in fs[0].message
+
+    # payload + scalar weight under the identical table is clean
+    def good(x):
+        table = [(0, 1), (1, 0)]
+        w = jnp.ones((), jnp.float32)
+        v_in = jax.lax.ppermute(w * x, "model", table)
+        w_in = jax.lax.ppermute(w, "model", table)
+        return v_in / w_in
+
+    jaxpr2, findings2 = rules_jaxpr.trace_check(
+        good, (jnp.zeros((2, 4), jnp.float32),), (("model", 2),), file="t"
+    )
+    assert not findings2
+    assert not rules_replication.check_push_pairing(
+        jaxpr2, label="good", file="t", root=ROOT
+    )
+
+
 def test_unreduced_mu_regression_is_caught(monkeypatch):
     # THE acceptance criterion: re-introducing the PR 2 bug (dropping the
     # pmax from _safe_mu_local) must be statically impossible — every
@@ -390,8 +422,13 @@ def test_unreduced_mu_regression_is_caught(monkeypatch):
     monkeypatch.setattr(D, "_safe_mu_local", bad_mu)
     findings = rules_replication.run(ROOT)
     assert {f.rule for f in findings} == {"step-size-replication"}
-    # all 12 non-exact trace cases (exact/exact_fista use _safe_mu_exact)
-    assert len(findings) == 12
+    # every non-exact trace case (exact/exact_fista use _safe_mu_exact)
+    expected = sum(
+        1 for c in D.mode_trace_cases()
+        if c.cfg.mode not in ("exact", "exact_fista")
+    )
+    assert expected >= 15  # grew with push/push_q8 + the linkfail case
+    assert len(findings) == expected
 
 
 def test_repo_is_clean_replication():

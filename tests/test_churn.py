@@ -1,0 +1,457 @@
+"""Churn: the degraded-network counterpart of the healthy-path parity
+tests, gated through the fault-injection harness (tests/faults.py).
+
+Three fault classes, each held to the same reference-parity discipline
+PRs 3-6 established:
+
+  * directed-only windows — mode="push"/"push_q8" run ratio consensus
+    over row-stochastic-only combiners ("distar"); the compiled engine
+    must match the host `push_sum_infer` reference, and must REDUCE to
+    plain diffusion when the combiner happens to be doubly stochastic;
+  * link failures — DistConfig.failure_p injects a seeded Bernoulli
+    per-step link-dropout trace (topology.LinkFailureSchedule, Metropolis
+    renormalized so every realized A_t stays doubly stochastic); the
+    graph_tv engine must match `diffusion_infer` run under the IDENTICAL
+    realized sequence, and the realized window must still contract;
+  * agent departure — `DistributedSparseCoder.shrunk` drains ranks
+    without restart: survivors keep their atom shards bit for bit and
+    the survivor topology is restricted deterministically; the chaos
+    soak drives departure + link failures through a live
+    DictionaryService stream and replays the surviving sub-network.
+"""
+
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from conftest import REPO, subprocess_env
+
+
+def _run(code: str, n_devices: int = 4, timeout: int = 900):
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        env=subprocess_env(n_devices), cwd=str(REPO),
+        capture_output=True, text=True, timeout=timeout,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-4000:]}"
+    return proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# fast host-side checks: config validation + harness + host references
+# ---------------------------------------------------------------------------
+
+
+def test_failure_p_requires_time_varying_family():
+    from repro.core.distributed import DistConfig
+
+    with pytest.raises(ValueError, match="failure_p"):
+        DistConfig(mode="graph", failure_p=0.3)
+    with pytest.raises(ValueError, match="failure_p"):
+        DistConfig(mode="push", failure_p=0.3)
+    with pytest.raises(ValueError, match="failure_p"):
+        DistConfig(mode="graph_tv", failure_p=1.0)
+    with pytest.raises(ValueError, match="failure_steps"):
+        DistConfig(mode="graph_tv", failure_p=0.3, failure_steps=-1)
+    # the harness transform produces a valid failure-injected config
+    from faults import with_link_failures
+
+    cfg = with_link_failures(
+        DistConfig(mode="graph_tv", iters=4), 0.3, failure_seed=7,
+        failure_steps=6,
+    )
+    assert cfg.failure_p == 0.3 and cfg.failure_seed == 7
+    assert cfg.failure_steps == 6
+
+
+def test_push_sum_host_reference_properties():
+    """push_sum_infer: exact reduction to diffusion_infer on a doubly
+    stochastic A (weights pinned at 1), mass conservation of the weight
+    channel on a row-stochastic-only A (sum w == n), and rejection of
+    the penalty variant (ratio consensus is ATC-only)."""
+    import jax.numpy as jnp
+
+    from repro.core import topology as topo
+    from repro.core.conjugates import make_task
+    from repro.core.dictionary import blocks_from_full
+    from repro.core.inference import (
+        DiffusionConfig, diffusion_infer, push_sum_infer)
+
+    res, reg = make_task("sparse_svd", gamma=0.05, delta=0.1)
+    n, M, K, B = 4, 16, 32, 4
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(rng.standard_normal((M, K)) / 4.0, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((B, M)), jnp.float32)
+    W_blocks = blocks_from_full(W, n)
+    ones = jnp.ones((n,), jnp.float32)
+    dcfg = DiffusionConfig(iters=40)
+    mu = jnp.asarray(0.05, jnp.float32)
+
+    A_ds = jnp.asarray(topo.make_topology("ring_metropolis", n), jnp.float32)
+    nu_p, y_p, w_p = push_sum_infer(
+        res, reg, W_blocks, x, A_ds, ones, dcfg, mu=mu)
+    nu_d, y_d, _ = diffusion_infer(
+        res, reg, W_blocks, x, A_ds, ones, dcfg, mu=mu)
+    np.testing.assert_allclose(np.asarray(nu_p), np.asarray(nu_d), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(w_p), 1.0, atol=1e-6)
+
+    A_dir = jnp.asarray(topo.distar_weights(n), jnp.float32)
+    _, _, w_dir = push_sum_infer(
+        res, reg, W_blocks, x, A_dir, ones, dcfg, mu=mu)
+    w_dir = np.asarray(w_dir)
+    assert float(np.ptp(w_dir)) > 1e-3  # the weight channel did real work
+    np.testing.assert_allclose(w_dir.sum(), float(n), rtol=1e-5)
+
+    with pytest.raises(ValueError, match="penalty"):
+        push_sum_infer(
+            res, reg, W_blocks, x, A_dir, ones,
+            DiffusionConfig(iters=4, mode="penalty"), mu=mu)
+
+
+def test_link_failure_realizations_and_windowed_gate():
+    """The harness gates: every realized A_t of a failure trace is doubly
+    stochastic, the trace is seed-deterministic, different seeds give
+    different traces, and the windowed mixing rate passes the contraction
+    gate whenever the window product stays connected."""
+    from repro.core import topology as topo
+    from faults import assert_window_contracts
+
+    base = topo.make_topology_schedule(
+        "alternating:ring_metropolis,torus", 8, seed=3)
+    lf = topo.link_failure_schedule(base, 0.3, failure_seed=11, steps=6)
+    assert isinstance(lf, topo.LinkFailureSchedule)
+    assert lf.period == 6
+    for t in range(lf.period):
+        assert topo.is_doubly_stochastic(lf.at(t)), t
+    lf2 = topo.link_failure_schedule(base, 0.3, failure_seed=11, steps=6)
+    for a, b in zip(lf.combiners, lf2.combiners):
+        np.testing.assert_array_equal(a, b)
+    lf3 = topo.link_failure_schedule(base, 0.3, failure_seed=12, steps=6)
+    assert any(
+        not np.array_equal(a, b)
+        for a, b in zip(lf.combiners, lf3.combiners)
+    )
+    rate = assert_window_contracts(lf)
+    assert 0.0 <= rate < 1.0
+    # grown/shrunk keep the failure law (type + fail_p + seed) over the
+    # re-derived base
+    g = lf.grown(10)
+    assert isinstance(g, topo.LinkFailureSchedule) and g.n == 10
+    assert g.fail_p == lf.fail_p and g.failure_seed == lf.failure_seed
+    s = lf.shrunk((0, 2, 3, 5, 6, 7))
+    assert isinstance(s, topo.LinkFailureSchedule) and s.n == 6
+    for t in range(s.period):
+        assert topo.is_doubly_stochastic(s.at(t)), t
+
+
+def test_harness_rejects_static_mode_for_realized_schedule():
+    from faults import realized_schedule, with_link_failures
+    from repro.core.distributed import DistConfig
+
+    class _FakeCoder:
+        topology_schedule = None
+        cfg = DistConfig(mode="graph")
+
+    with pytest.raises(ValueError, match="schedule-driven"):
+        realized_schedule(_FakeCoder())
+    with pytest.raises(ValueError, match="failure_p"):
+        with_link_failures(DistConfig(mode="ring"), 0.5)
+
+
+# ---------------------------------------------------------------------------
+# engine parity under faults (forced multi-device meshes, slow lane)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_push_sum_parity_directed_combiner():
+    """Acceptance: mode="push" on the row-stochastic-only "distar"
+    combiner matches the host push-sum reference to 1e-4 on the 1x4 mesh;
+    on a doubly stochastic combiner push reduces to plain diffusion; and
+    push_q8 stays in a quantization-sized neighborhood of the fp32 run."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import topology as topo
+        from repro.core.conjugates import make_task
+        from repro.core.distributed import DistConfig, DistributedSparseCoder, make_debug_mesh
+        from tests.faults import assert_parity_under_faults, host_reference
+
+        res, reg = make_task("sparse_svd", gamma=0.05, delta=0.1)
+        mesh = make_debug_mesh(model=4, data=1)
+        M, K, B, ITERS = 16, 32, 4, 300
+        W = jax.random.normal(jax.random.PRNGKey(1), (M, K))
+        W = W / jnp.linalg.norm(W, axis=0)
+        x = jax.random.normal(jax.random.PRNGKey(2), (B, M))
+
+        # distar really is the acceptance regime: row stochastic, NOT
+        # doubly stochastic, strongly connected
+        A = topo.distar_weights(4)
+        assert topo.is_row_stochastic(A)
+        assert not topo.is_doubly_stochastic(A)
+        assert topo.is_strongly_connected(A > 1e-12)
+
+        cfg = DistConfig(mode="push", iters=ITERS, mu=-1.0, topology="distar")
+        coder = DistributedSparseCoder(mesh, res, reg, cfg)
+        np.testing.assert_allclose(coder.combiner(), A, atol=1e-12)
+        errs = assert_parity_under_faults(coder, W, x, tol=1e-4)
+        print("push distar", errs)
+
+        # doubly stochastic combiner: push-sum IS diffusion (the weight
+        # channel stays exactly 1), so the diffusion host reference of the
+        # graph coder applies verbatim
+        cfg_ds = DistConfig(mode="push", iters=ITERS, mu=-1.0,
+                            topology="ring_metropolis")
+        coder_ds = DistributedSparseCoder(mesh, res, reg, cfg_ds)
+        cfg_g = DistConfig(mode="graph", iters=ITERS, mu=-1.0,
+                           topology="ring_metropolis")
+        coder_g = DistributedSparseCoder(mesh, res, reg, cfg_g)
+        nu_ref, _ = host_reference(coder_g, W, x)
+        Ws, xs = coder_ds.shard(W, x)
+        nu_p, _ = coder_ds.solve_per_agent(Ws, xs)
+        err = float(jnp.max(jnp.abs(jnp.asarray(nu_p) - nu_ref)))
+        print("push==diffusion", err)
+        assert err < 1e-4, err
+
+        # q8 wire: finite + quantization-sized neighborhood of fp32
+        cfg_q = DistConfig(mode="push_q8", iters=ITERS, mu=-1.0,
+                           topology="distar")
+        coder_q = DistributedSparseCoder(mesh, res, reg, cfg_q)
+        nu_f, _ = host_reference(coder, W, x)
+        nu_q, _ = coder_q.solve_per_agent(*coder_q.shard(W, x))
+        dev = float(jnp.max(jnp.abs(jnp.asarray(nu_q) - nu_f)))
+        print("push_q8 deviation", dev)
+        assert np.isfinite(np.asarray(nu_q)).all()
+        assert dev < 1e-2, dev
+
+        # wire accounting: the scalar weight rides next to every message
+        (ax_f, b_f), = coder.wire_bytes_per_iter(4, 16)
+        (ax_g, b_g), = coder_g.wire_bytes_per_iter(4, 16)
+        assert ax_f == ax_g == "model"
+        rounds_push = coder.gossip_schedule.messages_per_iter
+        rounds_g = coder_g.gossip_schedule.messages_per_iter
+        assert b_f == rounds_push * (4.0 * 4 * 16 + 4.0)
+        assert b_g == rounds_g * 4.0 * 4 * 16
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_link_failure_graph_tv_parity():
+    """Acceptance: a failure-injected graph_tv run matches diffusion_infer
+    under the IDENTICAL realized A_t trace to 1e-4 (t0 = 0 and a nonzero
+    schedule offset), the realized trace passes the windowed-rate gate,
+    and the trace is deterministic across engine constructions."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import topology as topo
+        from repro.core.conjugates import make_task
+        from repro.core.distributed import DistConfig, DistributedSparseCoder, make_debug_mesh
+        from tests.faults import (
+            assert_parity_under_faults, assert_window_contracts,
+            realized_schedule, with_link_failures)
+
+        res, reg = make_task("sparse_svd", gamma=0.05, delta=0.1)
+        mesh = make_debug_mesh(model=4, data=1)
+        M, K, B, ITERS = 16, 32, 4, 300
+        W = jax.random.normal(jax.random.PRNGKey(1), (M, K))
+        W = W / jnp.linalg.norm(W, axis=0)
+        x = jax.random.normal(jax.random.PRNGKey(2), (B, M))
+
+        cfg = with_link_failures(
+            DistConfig(mode="graph_tv", iters=ITERS, mu=-1.0,
+                       topology_schedule="alternating:ring_metropolis,torus",
+                       topology_seed=5),
+            0.3, failure_seed=11, failure_steps=6)
+        coder = DistributedSparseCoder(mesh, res, reg, cfg)
+        lf = realized_schedule(coder)
+        assert isinstance(lf, topo.LinkFailureSchedule)
+        assert lf.period == 6
+        for t in range(lf.period):
+            assert topo.is_doubly_stochastic(lf.at(t)), t
+        rate = assert_window_contracts(lf)
+        print("windowed rate", rate)
+
+        errs0 = assert_parity_under_faults(coder, W, x, tol=1e-4)
+        errs2 = assert_parity_under_faults(coder, W, x, t0=2, tol=1e-4)
+        print("linkfail t0=0", errs0, "t0=2", errs2)
+
+        # deterministic: a second engine construction realizes the
+        # identical failure trace
+        coder2 = DistributedSparseCoder(mesh, res, reg, cfg)
+        for a, b in zip(coder.combiner_sequence(), coder2.combiner_sequence()):
+            np.testing.assert_array_equal(a, b)
+
+        # q8 wire under failures stays finite and near the fp32 iterates
+        cfg_q = with_link_failures(
+            DistConfig(mode="graph_tv_q8", iters=ITERS, mu=-1.0,
+                       topology_schedule="alternating:ring_metropolis,torus",
+                       topology_seed=5),
+            0.3, failure_seed=11, failure_steps=6)
+        coder_q = DistributedSparseCoder(mesh, res, reg, cfg_q)
+        nu_q, _ = coder_q.solve_per_agent(*coder_q.shard(W, x))
+        nu_f, _ = coder.solve_per_agent(*coder.shard(W, x))
+        dev = float(jnp.max(jnp.abs(jnp.asarray(nu_q) - jnp.asarray(nu_f))))
+        print("q8-under-failures deviation", dev)
+        assert np.isfinite(np.asarray(nu_q)).all()
+        assert dev < 1e-2, dev
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_shrunk_drains_agents_without_restart():
+    """Acceptance mirror of the grown() tests: shrunk() is deterministic,
+    surviving shards are preserved bit for bit, the erdos survivor
+    topology is the restriction of the old adjacency, a time-varying
+    coder shrinks its whole SEQUENCE, and the shrunk coder's solve
+    matches the host reference of the surviving sub-network."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import topology as topo
+        from repro.core.conjugates import make_task
+        from repro.core.distributed import DistConfig, DistributedSparseCoder, make_debug_mesh
+        from tests.faults import assert_parity_under_faults
+
+        res, reg = make_task("sparse_svd", gamma=0.05, delta=0.1)
+        mesh = make_debug_mesh(model=4, data=1)
+        M, K = 16, 32
+        W = jax.random.normal(jax.random.PRNGKey(1), (M, K))
+        W = W / jnp.linalg.norm(W, axis=0)
+        x = jax.random.normal(jax.random.PRNGKey(2), (4, M))
+
+        cfg = DistConfig(mode="graph", iters=300, mu=-1.0, topology="erdos",
+                         topology_p=0.7, topology_seed=3)
+        coder = DistributedSparseCoder(mesh, res, reg, cfg)
+        adj_old = coder._adj.copy()
+
+        new_coder, W2 = coder.shrunk(W, [1])
+        # survivors keep their shards bit for bit
+        Wh = np.asarray(W).reshape(M, 4, K // 4)
+        W2h = np.asarray(jax.device_get(W2)).reshape(M, 3, K // 4)
+        np.testing.assert_array_equal(Wh[:, [0, 2, 3], :], W2h)
+        # deterministic: same departures -> identical coder + dictionary
+        nc2, W2b = coder.shrunk(W, [1])
+        np.testing.assert_array_equal(
+            np.asarray(jax.device_get(W2)), np.asarray(jax.device_get(W2b)))
+        np.testing.assert_array_equal(new_coder.combiner(), nc2.combiner())
+        # survivor topology = restriction of the old adjacency
+        np.testing.assert_array_equal(
+            new_coder._adj, topo.shrink_adjacency(adj_old, (0, 2, 3)))
+        # the shrunk coder still matches the host reference (3 agents)
+        errs = assert_parity_under_faults(new_coder, W2, x, tol=1e-4)
+        print("shrunk graph parity", errs)
+
+        # time-varying coder: the whole sequence shrinks, deterministically
+        cfg_tv = DistConfig(mode="graph_tv", iters=300, mu=-1.0,
+                            topology_schedule="alternating:ring_metropolis,full",
+                            topology_seed=5)
+        coder_tv = DistributedSparseCoder(mesh, res, reg, cfg_tv)
+        tv_small, W2tv = coder_tv.shrunk(W, [2])
+        ts = tv_small.topology_schedule
+        assert ts is not None and ts.n == 3
+        for t in range(ts.period):
+            assert topo.is_doubly_stochastic(ts.at(t)), t
+        errs_tv = assert_parity_under_faults(tv_small, W2tv, x, tol=1e-4)
+        print("shrunk tv parity", errs_tv)
+
+        # validation: empty, out-of-range, and drain-all all reject
+        for bad in ([], [7], [0, 1, 2, 3]):
+            try:
+                coder.shrunk(W, bad)
+            except ValueError:
+                pass
+            else:
+                raise AssertionError(f"shrunk accepted {bad}")
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_chaos_soak_departure_and_link_failures():
+    """Chaos soak (the headline churn scenario): a 600-sample streaming
+    run over a failure-injected graph_tv network with a seeded mid-stream
+    agent departure.  Asserts no deadlock (every future resolves), a
+    monotone schedule clock across the drain, the drain event's handoff
+    bookkeeping, and final-snapshot parity with a clean run of the
+    surviving sub-network replayed from the handoff."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.conjugates import make_task
+        from repro.core.dictionary import init_dictionary
+        from repro.core.distributed import DistConfig, DistributedSparseCoder
+        from repro.data.synthetic import sparse_stream
+        from repro.runtime import dist
+        from repro.runtime.service import DictionaryService, ServiceConfig
+        from tests.faults import chaos_stream, with_link_failures
+
+        res, reg = make_task("sparse_svd", gamma=0.25, delta=0.05)
+        mesh = dist.make_mesh((1, 4), (dist.DATA_AXIS, dist.MODEL_AXIS))
+        M, K0 = 16, 16
+        W0 = init_dictionary(jax.random.PRNGKey(0), M, K0)
+        cfg = with_link_failures(
+            DistConfig(mode="graph_tv", iters=10, topology_seed=5,
+                       topology_schedule="alternating:ring_metropolis,full"),
+            0.25, failure_seed=11, failure_steps=6)
+        coder = DistributedSparseCoder(mesh, res, reg, cfg)
+        X = sparse_stream(600, m=M, k_true=K0, seed=3)
+        scfg = ServiceConfig(micro_batch=32, mu_w=0.1)
+
+        svc = DictionaryService(coder, W0, scfg)
+        with svc:
+            results, info, clock, handoff = chaos_stream(
+                svc, X, depart_ranks=[1], depart_after=288)
+        # read the final snapshot AFTER stop(): the learner drains its
+        # queue on shutdown, so this is the fully-fit dictionary
+        W_final = svc.dictionary()
+        stats = svc.stats()
+
+        # no deadlock, nothing dropped, every sample coded finite
+        assert len(results) == 600
+        assert all(np.isfinite(nu).all() and np.isfinite(y).all()
+                   for nu, y in results)
+        assert stats["coded"] == stats["submitted"] == 600
+        assert stats["learn_dropped"] == 0
+        assert stats["fit_failures"] == 0, stats["fit_first_error"]
+
+        # drain bookkeeping: event fired once at the seeded boundary
+        assert len(stats["drain_events"]) == 1
+        assert info["departed"] == [1]
+        assert info["model_old"] == 4 and info["model_new"] == 3
+        assert info["k_old"] == K0 and info["k_new"] == K0 * 3 // 4
+        assert info["at_coded"] == 288
+        assert stats["topology"].startswith("tv:linkfail:0.25:")
+
+        # schedule clock: monotone through the drain, never reset
+        assert all(b > a for a, b in zip(clock, clock[1:])), clock
+        assert info["sched_t"] >= 10 * 2 * (288 // 32)
+
+        # pre/post-drain shapes
+        assert all(y.shape == (K0,) for _, y in results[:288])
+        assert all(y.shape == (K0 * 3 // 4,) for _, y in results[288:])
+
+        # clean replay of the surviving sub-network from the handoff:
+        # identical shrunk coder (shrunk() is deterministic), the drained
+        # dictionary, the inherited schedule clock, and the post-drain
+        # tail of the stream -> identical final snapshot
+        replay_coder, _ = coder.shrunk(W0, [1])
+        svc2 = DictionaryService(replay_coder, handoff["W"], scfg)
+        svc2._sched_t = handoff["sched_t"]
+        with svc2:
+            results2, info2, clock2, _ = chaos_stream(
+                svc2, X[handoff["next_sample"]:])
+        W_replay = svc2.dictionary()
+        assert info2 is None
+        np.testing.assert_allclose(W_final, W_replay, atol=1e-5)
+        # the replayed codes match too
+        for (nu_a, y_a), (nu_b, y_b) in zip(results[288:], results2):
+            np.testing.assert_allclose(nu_a, nu_b, atol=1e-5)
+            np.testing.assert_allclose(y_a, y_b, atol=1e-5)
+        print("OK")
+    """, timeout=900)
+    assert "OK" in out

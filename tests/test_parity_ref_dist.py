@@ -382,8 +382,8 @@ def test_hier_parity_with_reference_engine():
 # this tuple tracks MODE_REGISTRY.
 _ALL_MODES = (
     "chain", "exact", "exact_fista", "graph", "graph_async", "graph_q8",
-    "graph_tv", "graph_tv_q8", "hier", "hier_q8", "ring", "ring_async",
-    "ring_q8",
+    "graph_tv", "graph_tv_q8", "hier", "hier_q8", "push", "push_q8",
+    "ring", "ring_async", "ring_q8",
 )
 
 
@@ -404,7 +404,15 @@ def test_adaptive_mu_identical_across_ranks(mode):
     jaxpr for any mesh; this test confirms it numerically on a real 4-way
     mesh for the mode under test.)"""
     flat = mode not in ("hier", "hier_q8", "chain")
-    if flat:
+    if mode in ("push", "push_q8"):
+        # the directed row-stochastic-only combiner: the mu pmax must hold
+        # even when the gossip itself is asymmetric ratio consensus
+        setup = """
+        mesh = make_debug_mesh(model=4, data=1)
+        cfg = DistConfig(mode=MODE, iters=10, mu=-1.0, topology="distar")
+        spec = jax.sharding.PartitionSpec(None, "model")
+        """
+    elif flat:
         setup = """
         mesh = make_debug_mesh(model=4, data=1)
         cfg = DistConfig(mode=MODE, iters=10, mu=-1.0)

@@ -240,3 +240,121 @@ def test_snapshot_double_buffer_isolation():
         print("OK")
     """)
     assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# full lifecycle (stream -> grow -> stream -> drain -> stream) per registry
+# FAMILY — parametrized so a new mode family cannot silently skip the
+# elastic-lifecycle contract
+# ---------------------------------------------------------------------------
+
+# family -> (mesh expression, DistConfig expression, grow count, drain ranks).
+# Every family uses its most constrained representative: tv is
+# failure-injected (drain of a degraded schedule end to end), push runs the
+# row-stochastic-only directed combiner, chain is the 2-level hier coder
+# (drains the innermost model level only).
+_FAMILY_LIFECYCLE = {
+    "exact": (
+        "dist.make_mesh((1, 2), (dist.DATA_AXIS, dist.MODEL_AXIS))",
+        'DistConfig(mode="exact", iters=60)', 2, [1, 2]),
+    "ring": (
+        "dist.make_mesh((1, 2), (dist.DATA_AXIS, dist.MODEL_AXIS))",
+        'DistConfig(mode="ring", iters=120)', 2, [1, 2]),
+    "graph": (
+        "dist.make_mesh((1, 2), (dist.DATA_AXIS, dist.MODEL_AXIS))",
+        'DistConfig(mode="graph", topology="ring_metropolis", iters=120)',
+        2, [1, 2]),
+    "tv": (
+        "dist.make_mesh((1, 2), (dist.DATA_AXIS, dist.MODEL_AXIS))",
+        'DistConfig(mode="graph_tv", iters=30, topology_seed=5,\n'
+        '                   topology_schedule="alternating:ring_metropolis,full",\n'
+        '                   failure_p=0.25, failure_seed=11, failure_steps=6)',
+        2, [1, 2]),
+    "push": (
+        "dist.make_mesh((1, 2), (dist.DATA_AXIS, dist.MODEL_AXIS))",
+        'DistConfig(mode="push", topology="distar", iters=120)', 2, [1, 2]),
+    "chain": (
+        "dist.debug_mesh(model=2, data=1, pods=2)",
+        'DistConfig(mode="hier", iters=25, topology="ring_metropolis",\n'
+        '                   pod_topology="ring_metropolis", pod_gossip_every=2,\n'
+        '                   topology_seed=5)', 1, [1]),
+}
+
+
+def test_lifecycle_params_cover_every_registry_family():
+    """The parametrization below must stay in lockstep with MODE_REGISTRY:
+    adding a mode family without a lifecycle case is an error here, not a
+    silent skip."""
+    from repro.core.distributed import MODE_REGISTRY
+
+    families = {caps.family for caps in MODE_REGISTRY.values()}
+    assert set(_FAMILY_LIFECYCLE) == families
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("family", sorted(_FAMILY_LIFECYCLE))
+def test_service_lifecycle_grow_then_drain(family):
+    """stream -> grow -> stream -> drain -> stream for one registry family:
+    every sample resolves finite with the K of its era, the grow and drain
+    events carry consistent bookkeeping, and the schedule clock of a
+    time-varying coder never resets across either swap."""
+    mesh_expr, cfg_expr, grow_n, drain_ranks = _FAMILY_LIFECYCLE[family]
+    out = _run(f"""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.conjugates import make_task
+        from repro.core.dictionary import init_dictionary
+        from repro.core.distributed import DistConfig, DistributedSparseCoder
+        from repro.data.synthetic import sparse_stream
+        from repro.runtime import dist
+        from repro.runtime.service import DictionaryService, ServiceConfig
+
+        res, reg = make_task("sparse_svd", gamma=0.25, delta=0.05)
+        mesh = {mesh_expr}
+        M, K0 = 16, 16
+        W0 = init_dictionary(jax.random.PRNGKey(0), M, K0)
+        cfg = {cfg_expr}
+        coder = DistributedSparseCoder(mesh, res, reg, cfg)
+        X = sparse_stream(72, m=M, k_true=K0, seed=3)
+
+        svc = DictionaryService(coder, W0, ServiceConfig(micro_batch=8, mu_w=0.1))
+        with svc:
+            pre = [f.result(timeout=300) for f in [svc.submit(x) for x in X[:24]]]
+            info_g = svc.grow({grow_n}, jax.random.PRNGKey(4)).result(timeout=300)
+            mid = [f.result(timeout=300)
+                   for f in [svc.submit(x) for x in X[24:48]]]
+            info_d = svc.drain({drain_ranks!r}).result(timeout=300)
+            post = [f.result(timeout=300) for f in [svc.submit(x) for x in X[48:]]]
+        stats = svc.stats()
+
+        # every sample of every era resolved, finite, with that era's K
+        assert len(pre) == len(mid) == len(post) == 24
+        assert all(np.isfinite(nu).all() and np.isfinite(y).all()
+                   for nu, y in pre + mid + post)
+        assert all(y.shape == (K0,) for _, y in pre)
+        assert all(y.shape == (info_g["k_new"],) for _, y in mid)
+        assert all(y.shape == (info_d["k_new"],) for _, y in post)
+
+        # grow/drain bookkeeping is consistent and K tracks the model axis
+        assert info_g["model_new"] == info_g["model_old"] + {grow_n}
+        assert info_d["model_old"] == info_g["model_new"]
+        assert info_d["model_new"] == info_g["model_new"] - {len(drain_ranks)}
+        assert info_d["departed"] == {sorted(drain_ranks)!r}
+        assert info_d["k_new"] < info_g["k_new"]
+        assert len(stats["grow_events"]) == 1
+        assert len(stats["drain_events"]) == 1
+        assert stats["coded"] == stats["submitted"] == 72
+        assert stats["fit_failures"] == 0, stats["fit_first_error"]
+        W_pub = svc.dictionary()
+        assert W_pub.shape == (M, info_d["k_new"])
+        assert np.isfinite(W_pub).all()
+
+        # the schedule clock of a time-varying coder threads both swaps
+        # monotonically and is never reset (static families sit at 0)
+        if getattr(coder, "is_time_varying", False):
+            assert info_d["sched_t"] > 0
+            assert svc._sched_t >= info_d["sched_t"]
+        else:
+            assert info_d["sched_t"] == 0
+        print("OK")
+    """, n_devices=8)
+    assert "OK" in out

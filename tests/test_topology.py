@@ -304,3 +304,199 @@ def test_hier_topology_chain_equivalence():
     for a, b in zip(chain.sequence(), ht.sequence()):
         np.testing.assert_allclose(a, b)
     assert chain.effective_mixing_rate() == ht.effective_mixing_rate()
+
+
+# ---------------------------------------------------------------------------
+# churn: directed combiners, link failures, and agent drain (shrink)
+# ---------------------------------------------------------------------------
+# Each invariant runs twice: a deterministic sweep over a fixed grid (always
+# executed, even without hypothesis) and an @given property version that
+# widens the search when hypothesis is installed.
+
+
+def _check_directed_kind(kind, n):
+    a = topo.make_topology(kind, n)
+    assert a.shape == (n, n)
+    assert topo.is_row_stochastic(a), (kind, n)
+    assert topo.is_strongly_connected(a > 1e-12), (kind, n)
+    if kind == "distar" and n >= 3:
+        # the acceptance regime: genuinely NOT doubly stochastic, so the
+        # push-sum weight channel has real work to do
+        assert not topo.is_doubly_stochastic(a), (kind, n)
+    if kind == "dicycle" and n >= 3:
+        # doubly stochastic (a permutation average) but asymmetric
+        assert topo.is_doubly_stochastic(a)
+        assert not np.allclose(a, a.T)
+
+
+def test_directed_kinds_row_stochastic_strongly_connected():
+    for kind in topo.DIRECTED_KINDS:
+        for n in range(2, 17):
+            _check_directed_kind(kind, n)
+
+
+@given(st.integers(2, 64))
+def test_directed_kinds_property(n):
+    for kind in topo.DIRECTED_KINDS:
+        _check_directed_kind(kind, n)
+
+
+def _check_all_kinds_stochastic(n, seed):
+    for kind in topo.GRAPH_KINDS:
+        a = topo.make_topology(kind, n, seed=seed)
+        assert topo.is_doubly_stochastic(a), (kind, n, seed)
+        assert topo.is_connected(a > 1e-12), (kind, n, seed)
+    for kind in topo.DIRECTED_KINDS:
+        _check_directed_kind(kind, n)
+
+
+def test_every_make_topology_kind_stochastic_and_connected():
+    for n in (2, 3, 4, 7, 12):
+        for seed in (0, 1, 5):
+            _check_all_kinds_stochastic(n, seed)
+
+
+@given(st.integers(2, 24), st.integers(0, 1000))
+def test_every_make_topology_kind_property(n, seed):
+    _check_all_kinds_stochastic(n, seed)
+
+
+def _check_erdos_grow_preserves(n_old, n_new, seed):
+    adj_old = topo.erdos_renyi_adjacency(n_old, p=0.5, seed=seed)
+    grown = topo.erdos_renyi_grow(adj_old, n_new, p=0.5, seed=seed + 1)
+    # the old subgraph rides along VERBATIM — no existing edge is touched
+    np.testing.assert_array_equal(grown[:n_old, :n_old], adj_old)
+    assert topo.is_connected(grown)
+    assert topo.is_doubly_stochastic(topo.metropolis_weights(grown))
+
+
+def test_erdos_grow_preserves_subgraph_verbatim():
+    for n_old, n_new in ((2, 4), (3, 8), (5, 6), (4, 12)):
+        for seed in (0, 3, 11):
+            _check_erdos_grow_preserves(n_old, n_new, seed)
+
+
+@given(st.integers(2, 12), st.integers(0, 8), st.integers(0, 500))
+def test_erdos_grow_preserves_subgraph_property(n_old, extra, seed):
+    _check_erdos_grow_preserves(n_old, n_old + extra, seed)
+
+
+def _check_failure_realizations(n, fail_p, seed, steps):
+    base = topo.make_topology_schedule(
+        "alternating:ring_metropolis,full", n, seed=seed)
+    lf = topo.link_failure_schedule(base, fail_p, failure_seed=seed,
+                                    steps=steps)
+    assert lf.period == steps
+    for t in range(lf.period):
+        # the renormalized survivor combiner is ALWAYS a valid diffusion
+        # combiner, whatever the dropout realization did
+        assert topo.is_doubly_stochastic(lf.at(t)), (n, fail_p, seed, t)
+    # seed-determinism: the trace is a pure function of its parameters
+    lf2 = topo.link_failure_schedule(base, fail_p, failure_seed=seed,
+                                     steps=steps)
+    for a, b in zip(lf.combiners, lf2.combiners):
+        np.testing.assert_array_equal(a, b)
+    # the windowed-rate gate: if the window product is connected the
+    # realized trace still contracts, failures notwithstanding
+    if topo.is_connected(lf.window_combiner() > 1e-12):
+        assert lf.windowed_mixing_rate() < 1.0, (n, fail_p, seed)
+
+
+def test_link_failure_realizations_doubly_stochastic_sweep():
+    for n in (3, 4, 8):
+        for fail_p in (0.1, 0.3, 0.6):
+            for seed in (0, 7, 42):
+                _check_failure_realizations(n, fail_p, seed, steps=6)
+
+
+@given(st.integers(2, 16), st.floats(0.0, 0.9), st.integers(0, 1000))
+def test_link_failure_realizations_property(n, fail_p, seed):
+    _check_failure_realizations(n, fail_p, seed, steps=4)
+
+
+def _check_shrink_adjacency(n, survivors, seed):
+    adj = topo.erdos_renyi_adjacency(n, p=0.5, seed=seed)
+    small = topo.shrink_adjacency(adj, survivors)
+    k = len(survivors)
+    assert small.shape == (k, k)
+    assert topo.is_connected(small)
+    assert topo.is_doubly_stochastic(topo.metropolis_weights(small))
+    # survivors keep every edge they had among themselves (the repair may
+    # only ADD edges, when the departures disconnected the graph)
+    sub = adj[np.ix_(survivors, survivors)]
+    assert np.all(small | ~sub), (n, survivors, seed)
+
+
+def test_shrink_adjacency_survivor_edges_and_repair():
+    for n, survivors in ((4, (0, 2, 3)), (6, (1, 3, 5)), (8, (0, 1, 6, 7))):
+        for seed in (0, 3, 9):
+            _check_shrink_adjacency(n, survivors, seed)
+    # the repair path: a star loses its hub -> the survivors are isolated
+    # and a deterministic ring is stitched in
+    star = np.zeros((4, 4), dtype=bool)
+    star[0, 1:] = star[1:, 0] = True
+    small = topo.shrink_adjacency(star, (1, 2, 3))
+    assert topo.is_connected(small)
+    np.testing.assert_array_equal(small, topo.ring_adjacency(3))
+    # degenerate shrink-to-one: a single agent is trivially connected
+    one = topo.shrink_adjacency(star, (2,))
+    assert one.shape == (1, 1) and topo.is_connected(one)
+
+
+@given(st.integers(3, 14), st.integers(0, 500), st.integers(0, 500))
+def test_shrink_adjacency_property(n, pick, seed):
+    rng = np.random.default_rng(pick)
+    k = int(rng.integers(1, n))
+    survivors = tuple(sorted(rng.choice(n, size=k, replace=False).tolist()))
+    _check_shrink_adjacency(n, survivors, seed)
+
+
+def test_kronecker_chain_shrunk_is_innermost_only():
+    """Chain drain mirrors chain growth: only the model level shrinks,
+    outer factors are carried VERBATIM (bit for bit), the period is
+    unchanged, every sequence entry stays doubly stochastic, and an erdos
+    model level restricts to the survivor subgraph instead of resampling."""
+    chain = topo.make_kronecker_chain(
+        topo.parse_level_specs("erdos,ring_metropolis:2,full:4"),
+        (4, 3, 2), seed=11)
+    small = chain.shrunk((0, 2, 3))
+    assert small.ns == (3, 3, 2)
+    assert small.n_agents == 18
+    assert small.period == chain.period == 4
+    for lvl in (1, 2):
+        np.testing.assert_array_equal(
+            small.combiners[lvl], chain.combiners[lvl])
+    np.testing.assert_array_equal(
+        small.adjacencies[0],
+        topo.shrink_adjacency(chain.adjacencies[0], (0, 2, 3)))
+    for a in small.sequence():
+        assert topo.is_doubly_stochastic(a)
+    # deterministic in (chain, survivors)
+    small2 = chain.shrunk((0, 2, 3))
+    for a, b in zip(small.combiners, small2.combiners):
+        np.testing.assert_array_equal(a, b)
+    # structured model level re-derives at the smaller size
+    chain_r = topo.make_kronecker_chain(
+        topo.parse_level_specs("ring_metropolis,full:2"), (4, 2), seed=3)
+    small_r = chain_r.shrunk((0, 1, 3))
+    np.testing.assert_array_equal(
+        small_r.combiners[0], topo.make_topology("ring_metropolis", 3))
+    # validation: empty, duplicate, and out-of-range survivor sets reject
+    for bad in ((), (0, 0), (0, 9)):
+        with pytest.raises(ValueError):
+            chain.shrunk(bad)
+
+
+@given(st.integers(2, 8), st.integers(0, 200))
+def test_kronecker_chain_shrunk_property(n_model, seed):
+    chain = topo.make_kronecker_chain(
+        topo.parse_level_specs("erdos,ring_metropolis:2"),
+        (n_model, 3), seed=seed)
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(1, n_model + 1))
+    survivors = tuple(sorted(rng.choice(n_model, size=k, replace=False).tolist()))
+    small = chain.shrunk(survivors)
+    assert small.ns == (k, 3)
+    np.testing.assert_array_equal(small.combiners[1], chain.combiners[1])
+    for a in small.sequence():
+        assert topo.is_doubly_stochastic(a)

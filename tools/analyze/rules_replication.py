@@ -40,6 +40,17 @@ and every program in its `programs` tuple, the engine's own
                          per sender — soundness requires the scale to
                          travel with its payload so receivers dequantize
                          with the sender's scale, never their own.
+  push-weight-pairing    push-family programs only: every non-scalar
+                         (payload) ppermute must be paired, in the same
+                         jaxpr body, with a SCALAR ppermute under the
+                         identical (axis, permutation) table — the
+                         ratio-consensus weight channel.  A payload hop
+                         that leaves its weight behind breaks mass
+                         conservation: the v/w ratio divides a mixed
+                         numerator by an unmixed denominator and the
+                         consensus silently biases toward the stranded
+                         rank (the whole point of push-sum — correctness
+                         on row-stochastic-only combiners — is lost).
 
 Why out-spec ⊆ non-varying ⇒ cross-rank determinism: the varying set is a
 may-analysis — an axis absent from a value's varying set means NO
@@ -71,6 +82,7 @@ RULES = (
     "step-size-replication",
     "varying-gate",
     "quant-scale-pairing",
+    "push-weight-pairing",
 )
 
 
@@ -172,6 +184,49 @@ def check_quant_pairing(
     return findings
 
 
+def check_push_pairing(
+    closed_jaxpr,
+    *,
+    label: str,
+    file: str = _ENGINE_FILE,
+    root: pathlib.Path = REPO,
+) -> List[Finding]:
+    """Push-sum soundness (push-family programs only): every non-scalar
+    payload ppermute must have a same-body SCALAR ppermute with the
+    identical (axis names, permutation table) — the weight channel that
+    makes the v/w ratio consensus correct on row-stochastic-only A."""
+    findings: List[Finding] = []
+    checker = _JaxprChecker({}, file=file, root=root)
+    for body in _iter_bodies(closed_jaxpr.jaxpr):
+        perms = []  # (ndim, axes, perm, eqn)
+        for eqn in body.eqns:
+            if eqn.primitive.name != "ppermute":
+                continue
+            axes = tuple(_as_names(eqn.params.get("axis_name")))
+            perm = tuple(tuple(p) for p in eqn.params["perm"])
+            perms.append((eqn.invars[0].aval.ndim, axes, perm, eqn))
+        for ndim, axes, perm, eqn in perms:
+            if ndim == 0:
+                continue
+            paired = any(
+                nd2 == 0 and axes2 == axes and perm2 == perm
+                for nd2, axes2, perm2, _ in perms
+            )
+            if not paired:
+                f, line = checker._where(eqn)
+                findings.append(Finding(
+                    "push-weight-pairing", f, line,
+                    f"[{label}] push-sum payload ppermute over axes "
+                    f"{list(axes)} has no same-body scalar weight ppermute "
+                    f"under the identical permutation {perm} — the v/w "
+                    f"ratio would divide a mixed numerator by an unmixed "
+                    f"denominator, breaking mass conservation and silently "
+                    f"biasing the consensus on any row-stochastic-only "
+                    f"combiner",
+                ))
+    return findings
+
+
 def check_program(
     closed_jaxpr,
     axis_sizes: Dict[str, int],
@@ -183,6 +238,7 @@ def check_program(
     label: str,
     file: str = _ENGINE_FILE,
     root: pathlib.Path = REPO,
+    push_family: bool = False,
 ) -> List[Finding]:
     """Verify one traced program against its replication contract:
     `out_meta` is one `OutSpecInfo`-shaped object (.name/.spec/.consensus)
@@ -231,6 +287,10 @@ def check_program(
     findings.extend(check_quant_pairing(
         closed_jaxpr, label=f"{label}:{program}", file=file, root=root
     ))
+    if push_family:
+        findings.extend(check_push_pairing(
+            closed_jaxpr, label=f"{label}:{program}", file=file, root=root
+        ))
     return findings
 
 
@@ -261,5 +321,8 @@ def run(root: pathlib.Path = REPO) -> List[Finding]:
                 out_meta=meta, in_varying=in_varying,
                 agent_axes=coder._agent_axes, program=program,
                 label=case.name, root=root,
+                push_family=(
+                    D.MODE_REGISTRY[case.cfg.mode].family == "push"
+                ),
             ))
     return findings

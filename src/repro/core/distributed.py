@@ -1447,7 +1447,7 @@ class DistributedSparseCoder:
         return jax.device_put(W, NamedSharding(self.mesh, self._w_spec))
 
     def grown(
-        self, W: Array, extra_model: int, key: jax.Array
+        self, W: Array, extra_model: int, key: jax.Array, devices=None
     ) -> Tuple["DistributedSparseCoder", Array]:
         """Elastic growth: the distributed counterpart of
         `DictionaryLearner.expanded()` (paper Sec. IV-C — new atoms/agents
@@ -1475,6 +1475,13 @@ class DistributedSparseCoder:
         verbatim, and because the atom layout is outermost-major the fresh
         shards are interleaved per group — each existing agent keeps
         exactly the atom shard it already owned.
+
+        `devices` is the flat pool the grown mesh is built from (the
+        current devices plus the arrivals).  Default None = all of
+        jax.devices() — right for a single-tenant coder, but a coder that
+        owns a device SUBSET (one replica of a runtime/serving fleet) must
+        pass its own enlarged pool or growth would annex its peers'
+        devices.
         """
         if extra_model <= 0:
             raise ValueError(f"extra_model must be positive, got {extra_model}")
@@ -1485,7 +1492,7 @@ class DistributedSparseCoder:
         shape = tuple(
             n_new if nm == self.cfg.model_axis else sizes[nm] for nm in names
         )
-        new_mesh = dist.make_mesh(shape, names)
+        new_mesh = dist.make_mesh(shape, names, devices=devices)
         new_coder = DistributedSparseCoder(
             new_mesh, self.res, self.reg, self.cfg, grown_from=self
         )
@@ -1548,6 +1555,10 @@ class DistributedSparseCoder:
         ranks, outer combiners are carried verbatim, and the outermost-major
         atom layout means each group's surviving shards stay contiguous with
         their owners.
+
+        The shrunk mesh is carved from THIS coder's own device pool (not
+        jax.devices()), so draining a fleet replica never migrates it onto
+        devices owned by its peers.
         """
         sizes = dist.axis_sizes(self.mesh)
         n_old = sizes[self.cfg.model_axis]
@@ -1570,7 +1581,9 @@ class DistributedSparseCoder:
         shape = tuple(
             n_new if nm == self.cfg.model_axis else sizes[nm] for nm in names
         )
-        new_mesh = dist.make_mesh(shape, names)
+        new_mesh = dist.make_mesh(
+            shape, names, devices=self.mesh.devices.reshape(-1)
+        )
         new_coder = DistributedSparseCoder(
             new_mesh, self.res, self.reg, self.cfg,
             shrunk_from=(self, survivors),

@@ -38,6 +38,17 @@ first) and a mesh with one leading dim per OUTER level, outermost first
       --mode chain --mesh 2x2x1x2 \\
       --levels ring_metropolis,ring_metropolis:2:q8,full:4:q8 --grow-at 0
 
+`--replicas N` (or `--router`) switches to the multi-replica serving
+plane (repro.runtime.serving): N DictionaryService replicas on DISJOINT
+device pools (each its own `--mesh`), fronted by the freshness-aware
+Router; `--publish-at` triggers one rolling snapshot fan-out mid-stream.
+Replicas serve a published snapshot, so fleet mode implies --no-learn
+and disables the grow/drain drills:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  PYTHONPATH=src python -m repro.launch.serve_dict \\
+      --replicas 2 --mesh 1x2 --samples 400 --publish-at 200 --grow-at 0
+
 Prints throughput (samples/s), per-sample latency percentiles, learner
 progress, and the growth event; `--json` additionally emits one
 machine-readable line (consumed by benchmarks/serve_throughput.py).
@@ -59,6 +70,7 @@ from repro.core.distributed import DistConfig, DistributedSparseCoder
 from repro.data.synthetic import sparse_stream
 from repro.runtime import dist
 from repro.runtime.service import DictionaryService, ServiceConfig
+from repro.runtime.serving import ReplicaSet, Router, RouterConfig, device_pools
 
 
 def main() -> None:
@@ -135,6 +147,18 @@ def main() -> None:
                          "--drain-at (survivors keep their atom shards)")
     ap.add_argument("--rate", type=float, default=0.0,
                     help="submit rate in samples/s (0 = as fast as possible)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="replica count for the multi-replica serving plane "
+                         "(each replica gets its own --mesh on a DISJOINT "
+                         "device pool; >1 implies --router)")
+    ap.add_argument("--router", action="store_true",
+                    help="front the fleet with the freshness-aware Router "
+                         "even for --replicas 1 (measures the router's own "
+                         "overhead against the single-service baseline)")
+    ap.add_argument("--publish-at", type=int, default=0,
+                    help="fleet mode: sample index of one rolling snapshot "
+                         "publish (a perturbed dictionary fans out to the "
+                         "replicas one at a time; 0 = never)")
     ap.add_argument("--no-learn", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true",
@@ -179,44 +203,68 @@ def main() -> None:
     if args.drain_at and args.grow_at and args.drain_at <= args.grow_at:
         raise SystemExit("--drain-at must come after --grow-at (the drain "
                          "ranks refer to the then-current model axis)")
-    need = outer * d * (m_axis + (args.grow_model if args.grow_at else 0))
+    if args.replicas < 1:
+        raise SystemExit(f"--replicas must be >= 1, got {args.replicas}")
+    fleet_mode = args.replicas > 1 or args.router
+    if fleet_mode:
+        # Replicas serve a PUBLISHED snapshot (new dictionaries arrive via
+        # the rolling publish fan-out, not per-replica learning), and the
+        # grow/drain drills are single-service lifecycle drills.
+        if args.grow_at or args.drain_at:
+            print("fleet mode: disabling the grow/drain drills "
+                  "(single-service lifecycle drills; see tests/test_serving.py "
+                  "for the fleet lifecycle)")
+            args.grow_at, args.drain_at, drain_ranks = 0, 0, []
+        if not args.no_learn:
+            print("fleet mode: replicas serve the published snapshot "
+                  "(learning off; snapshots arrive via publish fan-out)")
+            args.no_learn = True
+        if args.publish_at >= args.samples:
+            args.publish_at = 0  # publish point past the stream: never fires
+    per_replica = outer * d * m_axis
+    need = args.replicas * per_replica + (
+        outer * d * args.grow_model if args.grow_at else 0
+    )
     if jax.device_count() < need:
         raise SystemExit(
-            f"need {need} devices for mesh {args.mesh} + growth; have "
-            f"{jax.device_count()} (set XLA_FLAGS=--xla_force_host_platform_device_count=N)"
+            f"need {need} devices for mesh {args.mesh} x {args.replicas} "
+            f"replica(s) + growth; have {jax.device_count()} "
+            f"(set XLA_FLAGS=--xla_force_host_platform_device_count=N)"
         )
-    if outer_dims:
-        # Axis names match DistConfig.level_axis: level 1 is the pod axis,
-        # level i>=2 is "pod<i>"; mesh order is outermost-major.
-        outer_names = tuple(
-            dist.POD_AXIS if i == 1 else f"{dist.POD_AXIS}{i}"
-            for i in range(n_agent_levels - 1, 0, -1)
+
+    def build_mesh(devices=None):
+        if outer_dims:
+            # Axis names match DistConfig.level_axis: level 1 is the pod
+            # axis, level i>=2 is "pod<i>"; mesh order is outermost-major.
+            outer_names = tuple(
+                dist.POD_AXIS if i == 1 else f"{dist.POD_AXIS}{i}"
+                for i in range(n_agent_levels - 1, 0, -1)
+            )
+            return dist.make_mesh(
+                (*outer_dims, d, m_axis),
+                (*outer_names, dist.DATA_AXIS, dist.MODEL_AXIS),
+                devices=devices,
+            )
+        return dist.make_mesh(
+            (d, m_axis), (dist.DATA_AXIS, dist.MODEL_AXIS), devices=devices
         )
-        mesh = dist.make_mesh(
-            (*outer_dims, d, m_axis),
-            (*outer_names, dist.DATA_AXIS, dist.MODEL_AXIS),
-        )
-    else:
-        mesh = dist.make_mesh((d, m_axis), (dist.DATA_AXIS, dist.MODEL_AXIS))
+
     res, reg = make_task(args.task, gamma=args.gamma, delta=args.delta)
     # one atom block per AGENT: the hierarchical family shards atoms over
     # (all outer levels) x model.
     k0 = args.atoms_per_agent * m_axis * outer
     W0 = init_dictionary(jax.random.PRNGKey(args.seed), args.m, k0, nonneg=reg.nonneg)
-    coder = DistributedSparseCoder(
-        mesh, res, reg, DistConfig(
-            mode=args.mode, iters=args.iters, topology=args.topology,
-            topology_p=args.topology_p, topology_seed=args.topology_seed,
-            topology_schedule=args.topology_schedule,
-            schedule_period=args.schedule_period,
-            failure_p=args.fail_p, failure_seed=args.fail_seed,
-            failure_steps=args.fail_steps,
-            pod_topology=args.pod_topology,
-            pod_gossip_every=args.pod_gossip_every,
-            levels=args.levels,
-        )
+    dist_cfg = DistConfig(
+        mode=args.mode, iters=args.iters, topology=args.topology,
+        topology_p=args.topology_p, topology_seed=args.topology_seed,
+        topology_schedule=args.topology_schedule,
+        schedule_period=args.schedule_period,
+        failure_p=args.fail_p, failure_seed=args.fail_seed,
+        failure_steps=args.fail_steps,
+        pod_topology=args.pod_topology,
+        pod_gossip_every=args.pod_gossip_every,
+        levels=args.levels,
     )
-    comb = coder.combiner_info()
     svc_cfg = ServiceConfig(
         micro_batch=args.micro_batch,
         max_wait_s=args.max_wait_ms / 1e3,
@@ -225,6 +273,12 @@ def main() -> None:
     )
     X = sparse_stream(args.samples, m=args.m, k_true=k0, nonneg=reg.nonneg,
                       seed=args.seed + 1)
+    if fleet_mode:
+        _run_fleet(args, res, reg, dist_cfg, svc_cfg, build_mesh, per_replica,
+                   W0, X)
+        return
+    coder = DistributedSparseCoder(build_mesh(), res, reg, dist_cfg)
+    comb = coder.combiner_info()
 
     print(f"serve_dict: task={args.task} mode={args.mode} mesh={args.mesh} "
           f"M={args.m} K={k0} micro_batch={args.micro_batch} "
@@ -292,6 +346,7 @@ def main() -> None:
     if args.json:
         payload = {
             "samples": args.samples,
+            "replicas": 1,
             "topology": stats["topology"],
             "mixing_rate": stats["mixing_rate"],
             "schedule": stats.get("schedule"),
@@ -302,6 +357,10 @@ def main() -> None:
             "levels": stats.get("levels"),
             "wall_s": wall_s,
             "samples_per_s": stats["coded"] / wall_s,
+            # same fields the fleet payload carries, so one consumer
+            # (benchmarks/serve_throughput, CI asserts) reads both shapes
+            "agg_samples_per_s": stats["coded"] / wall_s,
+            "p99_ms": lat.get("p99"),
             "latency_ms": lat,
             "fit_steps": stats["fit_steps"],
             "published": stats["published"],
@@ -310,6 +369,95 @@ def main() -> None:
             "y_dims": k_dims,
             "residual_first": float(pre),
             "residual_last": float(post),
+        }
+        print("BENCH " + json.dumps(payload))
+
+
+def _run_fleet(args, res, reg, dist_cfg, svc_cfg, build_mesh, per_replica,
+               W0, X) -> None:
+    """Fleet-mode serving loop: N replicas on disjoint device pools behind
+    the freshness-aware Router, with one optional rolling publish."""
+    pools = device_pools(args.replicas, per_replica)
+    coders = [DistributedSparseCoder(build_mesh(p), res, reg, dist_cfg)
+              for p in pools]
+    comb = coders[0].combiner_info()
+    print(f"serve_dict[fleet]: task={args.task} mode={args.mode} "
+          f"replicas={args.replicas} mesh={args.mesh}/replica "
+          f"M={args.m} K={W0.shape[1]} micro_batch={args.micro_batch} "
+          f"samples={args.samples} publish_at={args.publish_at or 'never'} "
+          f"topology={comb['topology']} mixing_rate={comb['mixing_rate']:.3f}")
+
+    services = [DictionaryService(c, W0, svc_cfg) for c in coders]
+    router_cfg = RouterConfig(
+        micro_batch=args.micro_batch,
+        max_wait_s=args.max_wait_ms / 1e3,
+        seed=args.seed,
+    )
+    futures = []
+    published = {}
+    t0 = time.perf_counter()
+    with ReplicaSet(services) as fleet:
+        with Router(fleet, router_cfg) as router:
+            for i in range(args.samples):
+                if args.publish_at and i == args.publish_at:
+                    # rolling publish truly mid-stream: let the pre-publish
+                    # tail land, then fan a perturbed dictionary out replica
+                    # by replica while the stream keeps flowing
+                    futures[-1].result(timeout=600)
+                    rng = np.random.default_rng(args.seed + 3)
+                    W1 = np.asarray(W0) + 0.01 * rng.standard_normal(
+                        W0.shape).astype(np.float32)
+                    if reg.nonneg:
+                        W1 = np.maximum(W1, 0.0)
+                    W1 /= np.maximum(
+                        1.0, np.linalg.norm(W1, axis=0, keepdims=True))
+                    published = fleet.publish(W1)
+                futures.append(router.submit(X[i]))
+                if args.rate > 0:
+                    time.sleep(1.0 / args.rate)
+            results = [f.result(timeout=600) for f in futures]
+            rstats = router.stats()
+        fstats = fleet.stats()
+    wall_s = time.perf_counter() - t0
+
+    assert len(results) == args.samples, "dropped samples!"
+    lat = rstats.get("latency_ms", {})
+    agg = args.samples / wall_s
+    per_rep = {
+        name: {
+            "coded": st["coded"],
+            "snapshot_version": st["snapshot_version"],
+            "serving_version": st["serving_version"],
+            "samples_per_s": st["samples_per_s"],
+        }
+        for name, st in fstats["replicas"].items()
+    }
+    print(f"coded {args.samples} samples in {wall_s:.2f}s "
+          f"({agg:.1f} samples/s aggregate over {args.replicas} replica(s))")
+    print(f"latency ms: p50 {lat.get('p50', float('nan')):.1f}  "
+          f"p95 {lat.get('p95', float('nan')):.1f}  "
+          f"p99 {lat.get('p99', float('nan')):.1f}")
+    print(f"routed {rstats['routed']}  rerouted {rstats['rerouted']}  "
+          f"failed {rstats['failed']}  publishes {fstats['publishes']} "
+          f"{published}")
+
+    if args.json:
+        payload = {
+            "samples": args.samples,
+            "replicas": args.replicas,
+            "topology": comb["topology"],
+            "mixing_rate": comb["mixing_rate"],
+            "wall_s": wall_s,
+            "agg_samples_per_s": agg,
+            "samples_per_s": agg,
+            "p99_ms": lat.get("p99"),
+            "latency_ms": lat,
+            "routed": rstats["routed"],
+            "rerouted": rstats["rerouted"],
+            "failed": rstats["failed"],
+            "publishes": fstats["publishes"],
+            "publish_versions": published,
+            "per_replica": per_rep,
         }
         print("BENCH " + json.dumps(payload))
 

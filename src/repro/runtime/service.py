@@ -21,9 +21,12 @@ exactly that contract:
   * **online learning** — every flushed micro-batch is also fed (once) to
     the learner thread, which runs one distributed dictionary step on the
     live copy and republishes every `publish_every` steps (if the learner
-    lags a sustained hot stream, batches beyond `learn_queue_cap` are
-    dropped and counted in stats(), so snapshot staleness and memory stay
-    bounded and coding never stalls on learning);
+    lags a sustained hot stream, the buffered learn batches are thinned by
+    seeded Algorithm-R reservoir sampling at `learn_queue_cap` — discarded
+    batches are counted in stats(), snapshot staleness and memory stay
+    bounded, coding never stalls on learning, and what the learner DOES
+    fit remains a uniform sample of everything submitted during the lag
+    window rather than a biased prefix);
   * **elastic growth** — `grow(extra_model, key)` re-shards the live
     dictionary onto a mesh whose `model` axis is larger (the distributed
     counterpart of `DictionaryLearner.expanded()`, paper Sec. IV-C: new
@@ -101,9 +104,14 @@ class ServiceConfig:
     # growth swap), so cold-start and growth never stall the serving path
     publish_every: int = 1  # fit steps between snapshot publishes
     queue_capacity: int = 8192  # submit() blocks when this many are pending
-    learn_queue_cap: int = 64  # learn batches kept when the learner lags;
-    # beyond this, batches are dropped (counted in stats) so snapshot
-    # staleness and memory stay bounded and coding never stalls on learning
+    learn_queue_cap: int = 64  # learn batches buffered when the learner
+    # lags; past this the buffer becomes a seeded Algorithm-R reservoir:
+    # discarded batches are counted in stats() and the batches the learner
+    # does fit stay a UNIFORM sample of the lag window.  0 = no sampling:
+    # the buffer is unbounded, nothing is ever discarded, and stop()
+    # blocks until the learner has consumed everything.
+    learn_seed: int = 0  # seed of the reservoir's eviction draws (same
+    # seed + same stream -> the same kept set, so backpressure is replayable)
     latency_window: int = 100_000  # per-sample latencies kept for stats
 
 
@@ -126,6 +134,90 @@ def _resolve(fut: Future, result=None, exc: Optional[BaseException] = None) -> N
             fut.set_result(result)
     except Exception:
         pass  # already cancelled/resolved by the client
+
+
+class _LearnReservoir:
+    """Seeded Algorithm-R reservoir between the batcher and the learner.
+
+    While the learner keeps up (buffer below `cap`) this is a plain FIFO.
+    Once `cap` batches are buffered, each further `offer` runs one
+    Algorithm-R step over the stream seen since the buffer last saturated:
+    the t-th batch of the window is kept with probability cap/t, evicting a
+    uniformly-random buffered batch — so the batches the learner eventually
+    fits are a UNIFORM sample of everything submitted during the lag
+    window, not the oldest prefix (the pre-reservoir policy dropped every
+    batch past the cap, biasing online learning toward the start of a hot
+    stream).  Whenever the learner catches up enough to take a batch, the
+    buffer drops below `cap` and the sampling window restarts at the
+    buffer's contents.
+
+    `cap=0` disables sampling: the buffer is unbounded and nothing is ever
+    discarded (the service's stop() then blocks until the learner has
+    consumed everything — strict no-drop backpressure).
+
+    Eviction draws come from one seeded `np.random.default_rng(seed)`, so
+    the kept set is a deterministic function of (seed, offer order): the
+    same stream replays to the same learner input.  Single-writer /
+    single-reader (batcher offers, learner takes); the internal condition
+    variable makes the counters consistent for stats().
+    """
+
+    def __init__(self, cap: int, seed: int = 0):
+        if cap < 0:
+            raise ValueError(f"learn_queue_cap must be >= 0, got {cap}")
+        self.cap = int(cap)
+        self._rng = np.random.default_rng(seed)
+        self._buf: List[np.ndarray] = []
+        self._window = 0  # offers since the buffer last saturated
+        self.seen = 0  # total batches offered
+        self.discarded = 0  # batches that will never reach the learner
+        self._cond = threading.Condition(threading.Lock())
+
+    def offer(self, xb: np.ndarray) -> bool:
+        """Offer one learn batch; returns True when a batch (the incoming
+        one or an evicted buffered one) was discarded."""
+        with self._cond:
+            self.seen += 1
+            if self.cap == 0 or len(self._buf) < self.cap:
+                self._buf.append(xb)
+                # not saturated: the sampling window is the buffer itself
+                self._window = len(self._buf)
+                self._cond.notify()
+                return False
+            # saturated: Algorithm R — keep batch t of the window with
+            # probability cap/t, evicting a uniform victim
+            self._window += 1
+            j = int(self._rng.integers(self._window))
+            if j < self.cap:
+                self._buf[j] = xb
+            self.discarded += 1
+            return True
+
+    def take(self, timeout: float) -> np.ndarray:
+        """Oldest kept batch (FIFO over the reservoir); raises queue.Empty
+        after `timeout` seconds without one."""
+        with self._cond:
+            if not self._buf:
+                self._cond.wait(timeout)
+            if not self._buf:
+                raise queue.Empty
+            return self._buf.pop(0)
+
+    def empty(self) -> bool:
+        with self._cond:
+            return not self._buf
+
+    def qsize(self) -> int:
+        with self._cond:
+            return len(self._buf)
+
+    def clear(self) -> int:
+        """Discard everything buffered (kill path); returns the count."""
+        with self._cond:
+            n = len(self._buf)
+            self._buf.clear()
+            self.discarded += n
+            return n
 
 
 class DictionaryService:
@@ -152,6 +244,7 @@ class DictionaryService:
         "fit_first_error", "published", "grow_events", "drain_events",
         "_latencies",
         "_sched_t", "_coder", "_live", "_snap", "_comb_info",
+        "_snap_version", "_serving_version",
     )
     _EXEC_GUARDED_CALLS = (
         "solve", "fit_batch", "score", "solve_per_agent", "adaptive_mu",
@@ -182,8 +275,8 @@ class DictionaryService:
         self._m = int(W0.shape[0])
         self._pad = self._pad_target(coder)
         self._queue: "queue.Queue[_Item]" = queue.Queue(maxsize=cfg.queue_capacity)
-        self._learn_q: "queue.Queue[np.ndarray]" = queue.Queue(maxsize=cfg.learn_queue_cap)
-        self._grow_q: "queue.Queue[Tuple[int, jax.Array, Future]]" = queue.Queue()
+        self._learn_q = _LearnReservoir(cfg.learn_queue_cap, cfg.learn_seed)
+        self._grow_q: "queue.Queue[Tuple[int, jax.Array, Optional[Tuple], Future]]" = queue.Queue()
         self._drain_q: "queue.Queue[Tuple[Tuple[int, ...], Future]]" = queue.Queue()
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
@@ -213,6 +306,16 @@ class DictionaryService:
         self.grow_events: List[Dict] = []
         self.drain_events: List[Dict] = []
         self._latencies = collections.deque(maxlen=cfg.latency_window)
+        # Snapshot versioning for the serving plane (runtime/serving): the
+        # version of the currently-published snapshot (0 = the initial one;
+        # bumped by every publish — learner republish, install_snapshot,
+        # grow/drain swap) and the version the last COMPLETED solve coded
+        # against.  A router sheds load from replicas whose _snap_version
+        # trails the fleet head; `serving_version` is what lets a caller
+        # distinguish "published" from "actually serving" (a batch in
+        # flight when a snapshot lands still carries the old version).
+        self._snap_version = 0
+        self._serving_version = 0
 
     # -- helpers ----------------------------------------------------------
 
@@ -328,7 +431,47 @@ class DictionaryService:
                     break
             while True:
                 try:
-                    _resolve(self._grow_q.get_nowait()[2], exc=err)
+                    _resolve(self._grow_q.get_nowait()[3], exc=err)
+                except queue.Empty:
+                    break
+            while True:
+                try:
+                    _resolve(self._drain_q.get_nowait()[1], exc=err)
+                except queue.Empty:
+                    break
+
+    def kill(self) -> None:
+        """Hard-stop for fault drills: fail everything still queued instead
+        of draining it (stop() codes the whole backlog first — a crashed
+        replica must not).  Pending Futures resolve exceptionally, which is
+        the signal a serving-plane router (runtime/serving.Router) uses to
+        re-route those requests to the surviving replicas.  Idempotent, and
+        stop() after kill() is a no-op sweep."""
+        err = RuntimeError("replica killed")
+        with self._submit_lock:  # no submit/grow can be mid-enqueue now
+            self._stop.set()
+            while True:
+                try:
+                    _resolve(self._queue.get_nowait().future, exc=err)
+                except queue.Empty:
+                    break
+        # batcher first (it may still offer one last learn batch), then
+        # purge the reservoir so the learner's drain check sees it empty
+        for t in self._threads[:1]:
+            t.join()
+        self._learn_q.clear()
+        for t in self._threads[1:]:
+            t.join()
+        with self._submit_lock:
+            self._threads = []
+            while True:
+                try:
+                    _resolve(self._queue.get_nowait().future, exc=err)
+                except queue.Empty:
+                    break
+            while True:
+                try:
+                    _resolve(self._grow_q.get_nowait()[3], exc=err)
                 except queue.Empty:
                     break
             while True:
@@ -365,15 +508,21 @@ class DictionaryService:
     def submit_many(self, X: np.ndarray) -> List[Future]:
         return [self.submit(x) for x in X]
 
-    def grow(self, extra_model: int, key: jax.Array) -> Future:
+    def grow(self, extra_model: int, key: jax.Array, devices=None) -> Future:
         """Request elastic growth of the model axis by `extra_model` agents.
         Applied by the learner thread at the next step boundary; the Future
-        resolves to an info dict once the new (coder, snapshot) is live."""
+        resolves to an info dict once the new (coder, snapshot) is live.
+
+        `devices` is the flat device pool the GROWN mesh is built from
+        (current devices + the arrivals).  It defaults to all of
+        jax.devices() — correct for a single-tenant service, but a replica
+        in a fleet (runtime/serving.ReplicaSet) must pass its own enlarged
+        subset or the grown mesh would annex devices owned by its peers."""
         fut: Future = Future()
         with self._submit_lock:
             if self._stop.is_set() or not self._threads:
                 raise RuntimeError("service is not running; cannot grow")
-            self._grow_q.put((int(extra_model), key, fut))
+            self._grow_q.put((int(extra_model), key, devices, fut))
         return fut
 
     def drain(self, departing_ranks: Sequence[int]) -> Future:
@@ -399,6 +548,67 @@ class DictionaryService:
             snap = self._snap
         return np.asarray(jax.device_get(snap))
 
+    @property
+    def sample_dim(self) -> int:
+        """Row dimension M a submitted sample must have."""
+        return self._m
+
+    def running(self) -> bool:
+        """True while the worker threads are up and shutdown hasn't begun
+        (the window in which submit()/grow()/drain() are accepted)."""
+        return bool(self._threads) and not self._stop.is_set()
+
+    def install_snapshot(self, W: np.ndarray) -> int:
+        """Externally publish a dictionary (the fan-out path of
+        runtime/serving.ReplicaSet.publish): shard `W` onto this coder's
+        mesh and atomically swap it in as BOTH the live copy and the
+        published snapshot, exactly like a grow/drain swap.  Returns the
+        new snapshot version.  In-flight micro-batches finish against the
+        old snapshot (and report its version as serving_version); the next
+        flushed batch codes against `W` — readers never pause.
+        """
+        W = np.asarray(W, np.float32)
+        with self._submit_lock:
+            if self._stop.is_set() or not self._threads:
+                raise RuntimeError("service is not running; cannot install a snapshot")
+        with self._lock:
+            coder, live = self._coder, self._live
+        want = tuple(int(s) for s in live.shape)
+        if tuple(W.shape) != want:
+            raise ValueError(
+                f"snapshot shape {W.shape} does not match the live dictionary "
+                f"{want} (grow/drain the replica first, then publish)"
+            )
+        # Device placement outside _lock (it is a transfer, not a mutation);
+        # the swap below re-checks the coder so a concurrent grow/drain that
+        # changed the mesh underneath us fails loudly instead of installing
+        # a stale-sharded buffer.
+        W_dev = coder.snapshot(jnp.asarray(W, jnp.float32))
+        with self._lock:
+            if self._coder is not coder:
+                raise RuntimeError(
+                    "coder changed (grow/drain) during install_snapshot; retry "
+                    "against the new geometry"
+                )
+            self._live = W_dev
+            self._snap = W_dev
+            self.published += 1
+            self._snap_version += 1
+            return self._snap_version
+
+    def load(self) -> Dict:
+        """Cheap routing signal for the serving plane: queue depth plus the
+        snapshot/serving versions, in one consistent read (no latency
+        percentiles — stats() is for humans, load() is for the router's
+        per-batch scoring loop)."""
+        with self._lock:
+            return {
+                "queue_depth": self._queue.qsize(),
+                "snapshot_version": self._snap_version,
+                "serving_version": self._serving_version,
+                "coded": self.coded,
+            }
+
     def stats(self) -> Dict:
         """One consistent snapshot of the service counters: throughput,
         latency percentiles, learner progress, growth events, and the gossip
@@ -417,7 +627,14 @@ class DictionaryService:
                 "fit_failures": self.fit_failures,
                 "fit_first_error": self.fit_first_error,
                 "learn_dropped": self.learn_dropped,
+                "learn_seen": self._learn_q.seen,
                 "published": self.published,
+                # Versioning for the serving plane: the published snapshot's
+                # version vs the version the last COMPLETED solve actually
+                # coded against (a batch in flight when a publish lands
+                # still carries the old version).
+                "snapshot_version": self._snap_version,
+                "serving_version": self._serving_version,
                 "grow_events": [dict(ev) for ev in self.grow_events],
                 "drain_events": [dict(ev) for ev in self.drain_events],
                 "topology": self._comb_info["topology"],
@@ -481,7 +698,7 @@ class DictionaryService:
                 continue
             xb = np.stack([it.x for it in items])
             with self._lock:
-                coder, snap = self._coder, self._snap
+                coder, snap, ver = self._coder, self._snap, self._snap_version
             try:
                 nu, y = self._solve_padded(coder, snap, xb)
             except Exception as e:  # resolve futures so clients never hang
@@ -490,12 +707,10 @@ class DictionaryService:
                 continue
             dropped = False
             if self.cfg.learn:
-                try:
-                    self._learn_q.put_nowait(xb)
-                except queue.Full:
-                    # learner lagging: drop (and count) rather than stall
-                    # coding or let staleness/memory grow without bound
-                    dropped = True
+                # learner lagging past the cap: the reservoir evicts a
+                # uniform victim (and counts it) rather than stalling coding
+                # or letting staleness/memory grow without bound
+                dropped = self._learn_q.offer(xb)
             # Account BEFORE resolving futures: a client woken by the last
             # result may immediately read stats() and must see this batch
             # counted (and must not observe _latencies mid-append).
@@ -504,6 +719,7 @@ class DictionaryService:
                 for it in items:
                     self._latencies.append(t_done - it.t_submit)
                 self.coded += len(items)
+                self._serving_version = ver
                 if dropped:
                     self.learn_dropped += 1
             for i, it in enumerate(items):
@@ -514,7 +730,7 @@ class DictionaryService:
             self._maybe_grow()
             self._maybe_drain()
             try:
-                xb = self._learn_q.get(timeout=0.02)
+                xb = self._learn_q.take(timeout=0.02)
             except queue.Empty:
                 # Exit only once the batcher has EXITED (not merely an empty
                 # queue — it may be mid-solve, about to enqueue the final
@@ -564,17 +780,18 @@ class DictionaryService:
                     if self.fit_steps % self.cfg.publish_every == 0:
                         self._snap = live2
                         self.published += 1
+                        self._snap_version += 1
 
     def _maybe_grow(self) -> None:
         try:
-            extra, key, fut = self._grow_q.get_nowait()
+            extra, key, devices, fut = self._grow_q.get_nowait()
         except queue.Empty:
             return
         try:
             with self._lock:
                 coder, live = self._coder, self._live
             k_old = int(live.shape[1])
-            new_coder, W2 = coder.grown(live, extra, key)
+            new_coder, W2 = coder.grown(live, extra, key, devices=devices)
             if self.cfg.warmup:
                 # compile the new coder OFF the serving path: readers keep
                 # coding on the old (coder, snapshot) pair until the swap.
@@ -590,6 +807,7 @@ class DictionaryService:
                 self._coder, self._live, self._snap = new_coder, W2, W2
                 self._comb_info = new_info
                 self.published += 1
+                self._snap_version += 1
                 info = {
                     "at_coded": self.coded,
                     "k_old": k_old,
@@ -636,6 +854,7 @@ class DictionaryService:
                 self._coder, self._live, self._snap = new_coder, W2, W2
                 self._comb_info = new_info
                 self.published += 1
+                self._snap_version += 1
                 info = {
                     "at_coded": self.coded,
                     "departed": list(departing),

@@ -1,0 +1,557 @@
+"""Multi-replica serving plane: router + snapshot fan-out over a fleet.
+
+`runtime/service.DictionaryService` proves the paper's serving story for ONE
+mesh: readers code against a published snapshot while the learner advances
+the live copy (double-buffered, atomic swap).  This module is the scale-out
+plane on top of it — the regime both D4L and the sensor-network papers
+assume, where many independent consumers read a continuously-updated
+dictionary that no single location owns:
+
+  * **`ReplicaSet`** — N replicas, each a `DictionaryService` on its own
+    device subset (or its own CPU mesh), each holding the double-buffered
+    published snapshot.  `publish(W)` fans a new dictionary out to the
+    replicas ONE AT A TIME (rolling): each replica's `install_snapshot` is
+    an atomic reference swap, so at every instant every replica is serving
+    a complete snapshot and the fleet as a whole never pauses — during the
+    roll the fleet is intentionally mixed-version, which is exactly what
+    the router's staleness term exists to absorb.
+  * **`Router`** — the front-end.  It (a) admits per-sample requests into
+    micro-batches with the same size-or-deadline policy the service uses
+    (a batch launches when full OR when `max_wait_s` expires for its first
+    sample), (b) places each batch on the replica minimizing
+
+        score(r) = depth_weight * queue_depth(r)
+                 + stale_penalty * (fleet_version - snapshot_version(r))
+
+    where `fleet_version` is the newest snapshot version any live replica
+    holds — so replicas the rolling publish hasn't reached yet shed load
+    (they still drain their queues; they just stop accruing new work) until
+    the fan-out catches them up, and (c) re-routes on replica failure: a
+    request whose replica dies mid-flight (its Future resolves
+    exceptionally — see `DictionaryService.kill`) is re-admitted and placed
+    on a surviving replica, up to `max_retries` times, so a replica kill
+    loses zero requests as long as one replica survives.
+
+Ties in the routing score break by a draw from ONE seeded generator, so
+the full placement sequence is a deterministic function of (seed, request
+order, load observations) — replayable, like every other seeded policy in
+this repo.
+
+Concurrency contract (machine-checked by tools/analyze, same rules as the
+service): `Router._GUARDED_BY_LOCK` counters only mutate under
+`Router._lock`, and `ReplicaSet`'s `install_snapshot` fan-out calls only
+happen under `ReplicaSet._exec_lock` — publishes serialize, so two
+concurrent `publish()` calls interleave at replica granularity (each
+replica still sees whole snapshots in a definite order) rather than
+racing their device transfers.
+
+The router speaks a small replica protocol — `submit(x)`, `load()`,
+`install_snapshot(W)`, `running()`, `start()/stop()` — not the concrete
+service class, so tests can drive it with in-process fakes (no jax) and
+the soak harness with real multi-device services.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.runtime.service import _resolve
+
+__all__ = [
+    "RouterConfig",
+    "Replica",
+    "ReplicaSet",
+    "Router",
+    "pick_replica",
+    "device_pools",
+]
+
+
+def device_pools(n_replicas: int, per_replica: int, devices=None) -> List[list]:
+    """Carve `devices` (default: all of jax.devices()) into `n_replicas`
+    disjoint pools of `per_replica` devices each — one pool per replica
+    mesh.  Disjointness is what lets the replicas' engine programs run
+    concurrently WITHOUT sharing an exec lock: two multi-device programs
+    only deadlock when they interleave collectives on a shared device."""
+    if devices is None:
+        import jax  # deferred so fake-replica tests never import jax
+
+        devices = jax.devices()
+    devs = list(devices)
+    need = int(n_replicas) * int(per_replica)
+    if len(devs) < need:
+        raise ValueError(
+            f"{n_replicas} replicas x {per_replica} devices needs {need}, "
+            f"have {len(devs)}"
+        )
+    return [
+        devs[i * per_replica : (i + 1) * per_replica] for i in range(n_replicas)
+    ]
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    """Knobs for the serving-plane front-end."""
+
+    micro_batch: int = 16  # admission batch size (routing granularity)
+    max_wait_s: float = 0.02  # flush a partial admission batch after this
+    depth_weight: float = 1.0  # score weight per queued request
+    stale_penalty: float = 8.0  # score weight per snapshot version behind
+    # the fleet head: a replica one publish behind costs as much as
+    # `stale_penalty` queued requests, so it sheds (but is not banned —
+    # depth can still beat staleness under a hot enough fleet)
+    seed: int = 0  # tie-break draws; placement is deterministic in this
+    max_retries: int = 2  # re-route attempts per request after failures
+    queue_capacity: int = 8192  # submit() blocks when this many are pending
+
+
+@dataclasses.dataclass
+class Replica:
+    """One named member of the fleet.  `service` is anything speaking the
+    replica protocol (a DictionaryService, or a fake in unit tests)."""
+
+    name: str
+    service: object
+
+
+def pick_replica(
+    loads: Sequence[Optional[Dict]],
+    fleet_version: int,
+    cfg: RouterConfig,
+    rng: np.random.Generator,
+) -> int:
+    """Pure placement policy: index of the replica minimizing the
+    depth+staleness score.  `loads[i]` is replica i's `load()` dict, or
+    None when it is dead (dead replicas are never picked).  Ties break by
+    one draw from `rng` — and ONLY ties draw, so the rng stream (hence the
+    whole placement sequence) is deterministic in (seed, load history)."""
+    scores: List[Optional[float]] = []
+    for ld in loads:
+        if ld is None:
+            scores.append(None)
+            continue
+        gap = max(0, int(fleet_version) - int(ld["snapshot_version"]))
+        scores.append(
+            cfg.depth_weight * float(ld["queue_depth"]) + cfg.stale_penalty * gap
+        )
+    live = [s for s in scores if s is not None]
+    if not live:
+        raise ValueError("pick_replica: no live replicas")
+    best = min(live)
+    cands = [i for i, s in enumerate(scores) if s is not None and s == best]
+    if len(cands) == 1:
+        return cands[0]
+    return cands[int(rng.integers(len(cands)))]
+
+
+class ReplicaSet:
+    """The fleet: named replicas + the rolling snapshot fan-out.
+
+    Usage:
+        pools = device_pools(n_replicas=2, per_replica=4)
+        services = [make_service(pool) for pool in pools]
+        with ReplicaSet(services) as fleet:
+            with Router(fleet) as router:
+                futs = [router.submit(x) for x in stream]
+                fleet.publish(W_new)          # rolling, never pauses
+                results = [f.result() for f in futs]
+    """
+
+    # Machine-checked (tools/analyze rules lock-discipline / exec-lock),
+    # same contract language as DictionaryService: publish bookkeeping
+    # mutates under `_lock`; every `install_snapshot` fan-out call happens
+    # under `_exec_lock`, serializing concurrent publishes at replica
+    # granularity (each replica sees whole snapshots in a definite order).
+    _GUARDED_BY_LOCK = ("publishes", "publish_events")
+    _EXEC_GUARDED_CALLS = ("install_snapshot",)
+
+    def __init__(self, services: Sequence[object], names: Optional[Sequence[str]] = None):
+        if not services:
+            raise ValueError("ReplicaSet needs at least one replica service")
+        if names is None:
+            names = [f"r{i}" for i in range(len(services))]
+        if len(names) != len(services) or len(set(names)) != len(names):
+            raise ValueError(f"need {len(services)} unique replica names, got {names}")
+        self.replicas = [Replica(n, s) for n, s in zip(names, services)]
+        self._lock = threading.Lock()
+        self._exec_lock = threading.Lock()
+        self.publishes = 0  # completed publish() rounds
+        self.publish_events: List[Dict] = []  # one per round: name -> version
+
+    def __len__(self) -> int:
+        return len(self.replicas)
+
+    def start(self) -> "ReplicaSet":
+        for rep in self.replicas:
+            rep.service.start()
+        return self
+
+    def stop(self) -> None:
+        """Graceful fleet shutdown: each replica drains its backlog
+        (killed replicas are a no-op sweep)."""
+        for rep in self.replicas:
+            rep.service.stop()
+
+    def kill(self, name: str) -> None:
+        """Hard-stop one replica (fault drill): its queued requests fail,
+        which is the signal the Router uses to re-route them."""
+        self[name].service.kill()
+
+    def __getitem__(self, name: str) -> Replica:
+        for rep in self.replicas:
+            if rep.name == name:
+                return rep
+        raise KeyError(f"no replica named {name!r}; have {[r.name for r in self.replicas]}")
+
+    def __enter__(self) -> "ReplicaSet":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def alive(self) -> List[str]:
+        return [rep.name for rep in self.replicas if rep.service.running()]
+
+    def fleet_version(self) -> int:
+        """Newest snapshot version any live replica holds — the head the
+        router measures staleness against."""
+        versions = [
+            rep.service.load()["snapshot_version"]
+            for rep in self.replicas
+            if rep.service.running()
+        ]
+        return max(versions) if versions else 0
+
+    def publish(self, W: np.ndarray) -> Dict[str, int]:
+        """Rolling fan-out of a new dictionary: install on live replicas
+        ONE AT A TIME, in fleet order, never pausing anyone — a replica
+        swaps atomically (`install_snapshot`) while its peers keep serving
+        their current snapshot.  Returns {replica name: new version} for
+        the replicas reached (dead ones are skipped; a replica that dies
+        mid-roll is skipped too, not an error — the soak kills replicas
+        under live publish traffic on purpose).
+        """
+        installed: Dict[str, int] = {}
+        for rep in self.replicas:
+            if not rep.service.running():
+                continue
+            try:
+                with self._exec_lock:
+                    installed[rep.name] = int(rep.service.install_snapshot(W))
+            except RuntimeError:
+                # died (or began shutdown) between the check and the swap
+                if rep.service.running():
+                    raise
+        with self._lock:
+            self.publishes += 1
+            self.publish_events.append(dict(installed))
+        return installed
+
+    def stats(self) -> Dict:
+        with self._lock:
+            out = {
+                "publishes": self.publishes,
+                "publish_events": [dict(ev) for ev in self.publish_events],
+            }
+        out["alive"] = self.alive()
+        # service stats() stay readable after stop/kill (counters are the
+        # run's record); `alive` above is the liveness signal
+        out["replicas"] = {rep.name: rep.service.stats() for rep in self.replicas}
+        return out
+
+
+class _RouterItem:
+    __slots__ = ("x", "future", "t_submit", "retries")
+
+    def __init__(self, x: np.ndarray):
+        self.x = x
+        self.future: Future = Future()
+        self.t_submit = time.perf_counter()
+        self.retries = 0
+
+
+class Router:
+    """Continuous-batching front-end over a ReplicaSet (or any sequence of
+    replica-protocol services).
+
+    One admission thread collects submitted samples into micro-batches
+    (size-or-deadline), scores the live replicas, and places the whole
+    batch on the argmin replica — routing at batch granularity keeps the
+    score loop off the per-sample path, and the replica re-batches anyway.
+    Completion is callback-driven: the outer per-sample Future resolves
+    when the replica's inner Future does, and a failed inner Future
+    (replica killed) re-admits the sample instead of surfacing the error,
+    up to `max_retries` times while any replica survives.
+    """
+
+    # Same machine-checked contract as DictionaryService (tools/analyze
+    # rules lock-discipline): every mutation of these outside __init__
+    # holds `self._lock`, so stats() reads one consistent snapshot even
+    # while completion callbacks fire from replica worker threads.
+    _GUARDED_BY_LOCK = (
+        "admitted", "rerouted", "failed",
+        "_inflight", "_latencies", "_route_counts",
+    )
+
+    def __init__(self, replicas, cfg: RouterConfig = RouterConfig()):
+        self.cfg = cfg
+        if isinstance(replicas, ReplicaSet):
+            self._replicas = list(replicas.replicas)
+        else:
+            self._replicas = [
+                rep if isinstance(rep, Replica) else Replica(f"r{i}", rep)
+                for i, rep in enumerate(replicas)
+            ]
+        if not self._replicas:
+            raise ValueError("Router needs at least one replica")
+        self._lock = threading.Lock()
+        # Makes the running-check + enqueue in submit() atomic w.r.t.
+        # stop(), mirroring DictionaryService._submit_lock: a request
+        # racing shutdown is processed or refused, never stranded.
+        self._submit_lock = threading.Lock()
+        self._queue: "queue.Queue[_RouterItem]" = queue.Queue(maxsize=cfg.queue_capacity)
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+        self._rng = np.random.default_rng(cfg.seed)  # admission thread only
+        # Sample dim, when any replica exposes one (real services do;
+        # protocol fakes need not) — lets submit() reject bad shapes at
+        # the door instead of as N inner-future failures.
+        self._m: Optional[int] = None
+        for rep in self._replicas:
+            m = getattr(rep.service, "sample_dim", None)
+            if m is not None:
+                self._m = int(m)
+                break
+        self.admitted = 0
+        self.rerouted = 0  # re-admissions after an inner-future failure
+        self.failed = 0  # outer futures resolved exceptionally
+        self._inflight = 0  # admitted, not yet resolved either way
+        self._route_counts = [0] * len(self._replicas)
+        self._latencies = collections.deque(maxlen=100_000)
+
+    # -- lifecycle --------------------------------------------------------
+
+    def start(self) -> "Router":
+        if self._threads:
+            raise RuntimeError("router already started")
+        if self._stop.is_set():
+            raise RuntimeError(
+                "router cannot be restarted after stop(); create a new Router"
+            )
+        self._threads = [
+            threading.Thread(target=self._admit_loop, name="router-admit", daemon=True)
+        ]
+        self._threads[0].start()
+        return self
+
+    def stop(self) -> None:
+        """Drain: every admitted sample resolves (with its result, or with
+        the terminal error after retries) before the admission thread
+        joins.  Does NOT stop the replicas — the ReplicaSet owns their
+        lifecycle; stop the router first, then the fleet."""
+        with self._submit_lock:
+            self._stop.set()
+        for t in self._threads:
+            t.join()
+        err = RuntimeError("router stopped before this request was processed")
+        with self._submit_lock:
+            self._threads = []
+            while True:  # failsafe: the loop exits only once drained
+                try:
+                    _resolve(self._queue.get_nowait().future, exc=err)
+                except queue.Empty:
+                    break
+
+    def __enter__(self) -> "Router":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- client API -------------------------------------------------------
+
+    def submit(self, x: np.ndarray) -> Future:
+        """Admit one sample (M,); the Future resolves to (nu (M,), y (K,))
+        from whichever replica (first-placed or re-routed) coded it."""
+        x = np.asarray(x, np.float32)
+        if self._m is not None and x.shape != (self._m,):
+            raise ValueError(f"expected sample shape ({self._m},), got {x.shape}")
+        item = _RouterItem(x)
+        with self._submit_lock:
+            if self._stop.is_set() or not self._threads:
+                raise RuntimeError(
+                    "router is not running (submit() before start() or after "
+                    "stop() would admit a sample no thread will ever place)"
+                )
+            with self._lock:
+                self.admitted += 1
+                self._inflight += 1
+            self._queue.put(item)
+        return item.future
+
+    def submit_many(self, X: np.ndarray) -> List[Future]:
+        return [self.submit(x) for x in X]
+
+    def stats(self) -> Dict:
+        """Consistent router counters + per-replica placement and load."""
+        with self._lock:
+            lat = np.asarray(self._latencies, np.float64)
+            out = {
+                "admitted": self.admitted,
+                "rerouted": self.rerouted,
+                "failed": self.failed,
+                "inflight": self._inflight,
+                "routed": {
+                    rep.name: int(c)
+                    for rep, c in zip(self._replicas, self._route_counts)
+                },
+            }
+        out["replicas"] = {
+            rep.name: (rep.service.load() if rep.service.running() else None)
+            for rep in self._replicas
+        }
+        if lat.size:
+            out["latency_ms"] = {
+                "p50": float(np.percentile(lat, 50) * 1e3),
+                "p95": float(np.percentile(lat, 95) * 1e3),
+                "p99": float(np.percentile(lat, 99) * 1e3),
+                "max": float(lat.max() * 1e3),
+            }
+        return out
+
+    # -- admission thread -------------------------------------------------
+
+    def _collect(self) -> List[_RouterItem]:
+        """Size-or-deadline admission: block briefly for a first sample,
+        then fill up to micro_batch until max_wait_s from the FIRST sample
+        expires (same policy as the service's batcher)."""
+        items: List[_RouterItem] = []
+        try:
+            items.append(self._queue.get(timeout=0.01))
+        except queue.Empty:
+            return items
+        deadline = time.perf_counter() + self.cfg.max_wait_s
+        while len(items) < self.cfg.micro_batch:
+            left = deadline - time.perf_counter()
+            if left <= 0:
+                break
+            try:
+                items.append(self._queue.get(timeout=left))
+            except queue.Empty:
+                break
+        return items
+
+    def _admit_loop(self) -> None:
+        while True:
+            items = self._collect()
+            if items:
+                self._dispatch(items)
+                continue
+            with self._lock:
+                drained = self._inflight == 0
+            # Exit only when nothing is queued AND nothing is in flight:
+            # a killed replica's failures re-admit through the queue, so
+            # an early exit would strand exactly the re-routed tail.
+            if self._stop.is_set() and self._queue.empty() and drained:
+                return
+
+    def _observe(self) -> List[Optional[Dict]]:
+        """One load observation per replica (None = dead), in fleet order."""
+        loads: List[Optional[Dict]] = []
+        for rep in self._replicas:
+            if not rep.service.running():
+                loads.append(None)
+                continue
+            try:
+                loads.append(rep.service.load())
+            except Exception:
+                loads.append(None)  # died between the check and the read
+        return loads
+
+    def _dispatch(self, items: List[_RouterItem]) -> None:
+        """Place a batch on the best replica; on a mid-placement death,
+        re-pick from the survivors for the unplaced remainder."""
+        while items:
+            loads = self._observe()
+            if all(ld is None for ld in loads):
+                err = RuntimeError("no live replicas")
+                with self._lock:
+                    self.failed += len(items)
+                    self._inflight -= len(items)
+                for it in items:
+                    _resolve(it.future, exc=err)
+                return
+            fleet = max(ld["snapshot_version"] for ld in loads if ld is not None)
+            idx = pick_replica(loads, fleet, self.cfg, self._rng)
+            rep = self._replicas[idx]
+            sent, place_err = 0, None
+            try:
+                for it in items:
+                    inner = rep.service.submit(it.x)
+                    inner.add_done_callback(
+                        lambda f, it=it: self._on_inner_done(it, f)
+                    )
+                    sent += 1
+            except Exception as e:
+                place_err = e
+            if sent:
+                with self._lock:
+                    self._route_counts[idx] += sent
+            items = items[sent:]
+            if not items:
+                return
+            if not rep.service.running():
+                continue  # replica died mid-placement: re-pick for the rest
+            # submit() refused on a LIVE replica (e.g. shape mismatch a
+            # fake-fronted router couldn't pre-validate): terminal.
+            with self._lock:
+                self.failed += len(items)
+                self._inflight -= len(items)
+            for it in items:
+                _resolve(it.future, exc=place_err)
+            return
+
+    def _on_inner_done(self, item: _RouterItem, inner: Future) -> None:
+        """Completion callback (runs on the replica's worker thread): chain
+        success to the outer Future; re-admit on failure while retries and
+        live replicas remain."""
+        try:
+            exc = inner.exception()
+        except BaseException as e:  # includes CancelledError
+            exc = e
+        if exc is None:
+            t_done = time.perf_counter()
+            # Account BEFORE resolving, like the service: a client woken by
+            # the last result may immediately read stats() and must see a
+            # drained router.
+            with self._lock:
+                self._latencies.append(t_done - item.t_submit)
+                self._inflight -= 1
+            _resolve(item.future, inner.result())
+            return
+        # Re-admission stays open during stop(): the admission loop keeps
+        # draining the queue until nothing is in flight, so a replica
+        # killed mid-shutdown still re-routes its tail instead of failing.
+        alive = any(rep.service.running() for rep in self._replicas)
+        if item.retries < self.cfg.max_retries and alive:
+            item.retries += 1
+            try:
+                self._queue.put_nowait(item)
+            except queue.Full:
+                pass  # overloaded: fall through to terminal failure
+            else:
+                with self._lock:
+                    self.rerouted += 1
+                return
+        with self._lock:
+            self.failed += 1
+            self._inflight -= 1
+        _resolve(item.future, exc=exc)

@@ -1,0 +1,33 @@
+"""Known-bad fixture for the serving-plane router contract: a counter
+registered in _GUARDED_BY_LOCK mutated outside `with self._lock:`.  Must
+fire `lock-discipline` exactly once — and the two guarded mutations must
+NOT fire, including the one where `with self._lock:` is nested directly
+inside ANOTHER with statement (`with self._submit_lock:`), the shape
+Router.submit uses (regression for the traversal bug that flattened
+nested withs and lost the inner lock).
+"""
+
+import threading
+
+
+class RouterLike:
+    _GUARDED_BY_LOCK = ("admitted", "rerouted")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._submit_lock = threading.Lock()
+        self.admitted = 0
+        self.rerouted = 0
+
+    def bad(self):
+        with self._submit_lock:
+            self.rerouted += 1  # unguarded: the one expected finding
+
+    def ok_plain(self):
+        with self._lock:
+            self.admitted += 1
+
+    def ok_nested(self):
+        with self._submit_lock:
+            with self._lock:
+                self.admitted += 1  # guarded through the nesting

@@ -141,6 +141,18 @@ def test_bad_lock_fires_once():
     assert "counter" in fs[0].message
 
 
+def test_bad_router_lock_fires_once_and_nested_with_guards():
+    """The serving-plane router declares the same _GUARDED_BY_LOCK contract
+    as the service, so the registry-driven rule covers it with no rule
+    change — and a `with self._lock:` nested directly inside another with
+    statement (Router.submit's shape) counts as guarded (regression for the
+    traversal flattening nested withs)."""
+    fs = rules_ast.check_lock_discipline(FIXTURES / "bad_router_lock.py", ROOT)
+    assert [f.rule for f in fs] == ["lock-discipline"]
+    assert "rerouted" in fs[0].message
+    assert "RouterLike.bad" in fs[0].message
+
+
 def test_bad_exec_fires_once():
     fs = rules_ast.check_exec_lock(FIXTURES / "bad_exec.py", ROOT)
     assert [f.rule for f in fs] == ["exec-lock"]

@@ -358,3 +358,114 @@ def test_service_lifecycle_grow_then_drain(family):
         print("OK")
     """, n_devices=8)
     assert "OK" in out
+
+
+# -- reservoir backpressure (fast: the reservoir is pure host code) ---------
+
+
+def test_learn_reservoir_kept_set_is_uniform_over_submission_index():
+    """Algorithm R under a full learner stall: offer 10x cap batches with
+    no takes and chi-square the kept submission indices over deciles.  The
+    pre-reservoir policy (drop everything past the cap) would keep ONLY
+    decile 0 (chi2 ~ 576 at these sizes); uniform sampling stays far below
+    the 1% critical value for df=9.  Seeded, so the statistic is exact."""
+    import numpy as np
+    from repro.runtime.service import _LearnReservoir
+
+    cap, total = 64, 640
+    res = _LearnReservoir(cap, seed=0)
+    for i in range(total):
+        res.offer(np.full((1,), i))
+    kept = [int(b[0]) for b in res._buf]
+    assert len(kept) == cap
+    assert res.seen == total and res.discarded == total - cap
+    counts = np.bincount([k * 10 // total for k in kept], minlength=10)
+    expected = cap / 10
+    chi2 = float(((counts - expected) ** 2 / expected).sum())
+    assert chi2 < 21.67, (chi2, counts.tolist())  # 1% critical, df=9
+    # sanity: the kept set reaches deep into the stream, not just a prefix
+    assert max(kept) >= total * 3 // 4
+
+
+def test_learn_reservoir_is_deterministic_in_seed():
+    """Same seed + same offer stream -> the same kept set (backpressure is
+    replayable); a different seed diverges."""
+    import numpy as np
+    from repro.runtime.service import _LearnReservoir
+
+    def kept(seed):
+        r = _LearnReservoir(16, seed=seed)
+        for i in range(200):
+            r.offer(np.full((1,), i))
+        return [int(b[0]) for b in r._buf]
+
+    assert kept(3) == kept(3)
+    assert kept(3) != kept(4)
+
+
+def test_learn_reservoir_cap_zero_means_drop_nothing_block():
+    """Regression: cap=0 is the strict no-drop mode — the buffer is
+    unbounded, nothing is ever discarded, FIFO order is preserved, and a
+    take on an empty buffer blocks (queue.Empty after the timeout), which
+    is what makes the service's stop() wait for the learner."""
+    import queue as _queue
+
+    import numpy as np
+    import pytest as _pytest
+
+    from repro.runtime.service import _LearnReservoir
+
+    r = _LearnReservoir(0, seed=0)
+    for i in range(300):
+        dropped = r.offer(np.full((1,), i))
+        assert not dropped
+    assert r.discarded == 0 and r.qsize() == 300
+    assert [int(r.take(0.01)[0]) for _ in range(300)] == list(range(300))
+    with _pytest.raises(_queue.Empty):
+        r.take(0.01)
+    with _pytest.raises(ValueError):
+        _LearnReservoir(-1)
+
+
+@pytest.mark.slow
+def test_service_reservoir_backpressure_end_to_end():
+    """A throttled learner behind a hot stream: the service counts
+    discards, learn_seen covers every flushed batch, and what the learner
+    fit is a sample of the WHOLE stream (stats stay consistent)."""
+    out = _run("""
+        import numpy as np, jax
+        from repro.core.conjugates import make_task
+        from repro.core.dictionary import init_dictionary
+        from repro.core.distributed import DistConfig, DistributedSparseCoder
+        from repro.data.synthetic import sparse_stream
+        from repro.runtime import dist
+        from repro.runtime.service import DictionaryService, ServiceConfig
+
+        res, reg = make_task("sparse_svd", gamma=0.25, delta=0.05)
+        mesh = dist.make_mesh((1, 2), (dist.DATA_AXIS, dist.MODEL_AXIS))
+        M, K = 16, 12
+        W0 = init_dictionary(jax.random.PRNGKey(0), M, K)
+        coder = DistributedSparseCoder(
+            mesh, res, reg, DistConfig(mode="exact", iters=30))
+        X = sparse_stream(160, m=M, k_true=K, seed=3)
+
+        # cap=2 squeezes the reservoir hard: the learner (one fit per
+        # flushed batch, serialized with coding on the shared exec lock)
+        # cannot keep up with 20 batches
+        svc_cfg = ServiceConfig(micro_batch=8, mu_w=0.05,
+                                learn_queue_cap=2, learn_seed=7)
+        with DictionaryService(coder, W0, svc_cfg) as svc:
+            results = [f.result(timeout=300) for f in svc.submit_many(X)]
+            stats = svc.stats()
+
+        assert len(results) == 160
+        assert stats["coded"] == 160
+        # every flushed batch was OFFERED to the reservoir...
+        assert stats["learn_seen"] == 160 // 8
+        # ...learner progress + discards account for all of them
+        assert stats["fit_steps"] + stats["learn_dropped"] <= stats["learn_seen"]
+        assert stats["fit_steps"] >= 1
+        assert stats["fit_failures"] == 0, stats["fit_first_error"]
+        print("OK dropped=", stats["learn_dropped"])
+    """)
+    assert "OK" in out

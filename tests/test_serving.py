@@ -1,0 +1,558 @@
+"""Serving-plane tests: the freshness-aware Router over fake replicas
+(fast — admission, deterministic placement, version-aware shedding,
+failure re-routing), the real 2-replica fleet (slow — rolling publish
+with code-match against a single-service reference, and the
+replica-kill soak), and the per-registry-family fleet lifecycle with its
+set-equality coverage guard."""
+
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+import pytest
+
+from conftest import REPO, subprocess_env  # noqa: F401  (used by _run)
+import subprocess
+import sys
+import textwrap
+
+from repro.runtime.serving import (
+    Replica, ReplicaSet, Router, RouterConfig, device_pools, pick_replica,
+)
+
+
+def _run(code: str, n_devices: int = 8, timeout: int = 900):
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        env=subprocess_env(n_devices), cwd=str(REPO),
+        capture_output=True, text=True, timeout=timeout,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-4000:]}"
+    return proc.stdout
+
+
+class FakeReplica:
+    """Replica-protocol fake (no jax): codes x -> (2x, sum(x)) inline.
+    `hold=True` parks inner futures until release()/kill() so tests can
+    create a genuine in-flight window."""
+
+    def __init__(self, version=0, dim=4, hold=False):
+        self.version = version
+        self.sample_dim = dim
+        self.hold = hold
+        self.depth = 0  # reported queue depth (tests set it directly)
+        self.calls = 0
+        self.load_calls = 0
+        self._held = []
+        self._running = False
+        self._lk = threading.Lock()
+
+    def start(self):
+        self._running = True
+        return self
+
+    def stop(self):
+        self.release()
+        self._running = False
+
+    def kill(self):
+        """Hard-stop: fail every held future (the re-route signal)."""
+        with self._lk:
+            self._running = False
+            held, self._held = self._held, []
+        for fut, _ in held:
+            fut.set_exception(RuntimeError("replica killed"))
+
+    def release(self):
+        with self._lk:
+            held, self._held = self._held, []
+        for fut, x in held:
+            fut.set_result((2 * x, float(np.sum(x))))
+
+    def running(self):
+        return self._running
+
+    def load(self):
+        with self._lk:
+            self.load_calls += 1
+            return {"queue_depth": self.depth, "snapshot_version": self.version,
+                    "serving_version": self.version, "coded": self.calls}
+
+    def install_snapshot(self, W):
+        with self._lk:
+            if not self._running:
+                raise RuntimeError("service is not running")
+            self.version += 1
+            return self.version
+
+    def submit(self, x):
+        with self._lk:
+            if not self._running:
+                raise RuntimeError("service is not running")
+            self.calls += 1
+            fut = Future()
+            if self.hold:
+                self._held.append((fut, x))
+                return fut
+        fut.set_result((2 * x, float(np.sum(x))))
+        return fut
+
+    def stats(self):
+        return {"coded": self.calls, "snapshot_version": self.version,
+                "serving_version": self.version}
+
+
+# -- pure placement policy --------------------------------------------------
+
+
+def test_pick_replica_prefers_shallow_and_fresh():
+    cfg = RouterConfig(depth_weight=1.0, stale_penalty=8.0)
+    rng = np.random.default_rng(0)
+    mk = lambda d, v: {"queue_depth": d, "snapshot_version": v}
+    # depth decides at equal versions
+    assert pick_replica([mk(5, 1), mk(2, 1)], 1, cfg, rng) == 1
+    # one version behind costs stale_penalty: fresh wins until its queue
+    # is deeper than the penalty...
+    assert pick_replica([mk(0, 0), mk(7, 1)], 1, cfg, rng) == 1
+    # ...after which depth beats staleness (shedding, not a ban)
+    assert pick_replica([mk(0, 0), mk(9, 1)], 1, cfg, rng) == 0
+    # dead replicas are never picked
+    assert pick_replica([None, mk(99, 0)], 1, cfg, rng) == 1
+    with pytest.raises(ValueError):
+        pick_replica([None, None], 1, cfg, rng)
+
+
+def test_pick_replica_tie_break_is_seeded_and_deterministic():
+    """Same seed -> the same full pick sequence; and ONLY ties draw from
+    the rng, so a non-tie round interleaved between ties does not shift
+    the rest of the stream."""
+    cfg = RouterConfig(seed=0)
+    mk = lambda: {"queue_depth": 3, "snapshot_version": 2}
+
+    def run(seed):
+        rng = np.random.default_rng(seed)
+        picks = []
+        for i in range(20):
+            loads = [mk(), mk(), mk()]
+            if i % 5 == 0:  # non-tie round: must not consume a draw
+                loads[1] = {"queue_depth": 0, "snapshot_version": 2}
+            picks.append(pick_replica(loads, 2, cfg, rng))
+        return picks
+
+    assert run(7) == run(7)  # replayable placement
+    assert all(run(7)[i] == 1 for i in range(0, 20, 5))  # argmin on non-ties
+    assert len(set(run(7))) > 1  # ties actually spread across replicas
+
+
+# -- router over fakes ------------------------------------------------------
+
+
+def test_router_admission_full_batch_vs_deadline():
+    """A burst of micro_batch samples dispatches as ONE batch (one load
+    observation per replica); a lone sample still resolves fast because the
+    max-wait deadline fires long before a full batch could form."""
+    reps = [FakeReplica(), FakeReplica()]
+    fleet = ReplicaSet(reps).start()
+    with Router(fleet, RouterConfig(micro_batch=8, max_wait_s=0.05)) as router:
+        # lone sample: deadline path.  Resolution well under 1s proves the
+        # batcher did not wait for a full batch.
+        t0 = time.perf_counter()
+        fut = router.submit(np.ones(4, np.float32))
+        nu, y = fut.result(timeout=5)
+        assert time.perf_counter() - t0 < 1.0
+        assert np.allclose(nu, 2.0) and y == pytest.approx(4.0)
+        base = sum(r.load_calls for r in reps)
+        # full-batch path: 8 samples submitted at once land as one batch ->
+        # exactly one observation round (one load() per replica)
+        futs = [router.submit(np.ones(4, np.float32)) for _ in range(8)]
+        for f in futs:
+            f.result(timeout=5)
+        assert sum(r.load_calls for r in reps) == base + 2
+    fleet.stop()
+
+
+def test_router_routing_is_deterministic_under_seed():
+    """Same seed + same request stream -> identical placement sequence."""
+    def run(seed):
+        reps = [FakeReplica(), FakeReplica()]
+        fleet = ReplicaSet(reps).start()
+        with Router(fleet, RouterConfig(micro_batch=1, max_wait_s=0.001,
+                                        seed=seed)) as router:
+            for _ in range(24):
+                router.submit(np.zeros(4, np.float32)).result(timeout=5)
+            routed = router.stats()["routed"]
+        fleet.stop()
+        return routed, [r.calls for r in reps]
+    assert run(3) == run(3)
+
+
+def test_router_version_aware_shedding_until_publish_catches_up():
+    """A replica pinned one snapshot behind receives (measurably) less
+    traffic; after the publish fan-out reaches it, traffic rebalances."""
+    reps = [FakeReplica(version=1), FakeReplica(version=0)]  # r1 is stale
+    fleet = ReplicaSet(reps).start()
+    with Router(fleet, RouterConfig(micro_batch=1, max_wait_s=0.001,
+                                    stale_penalty=8.0)) as router:
+        for _ in range(30):
+            router.submit(np.zeros(4, np.float32)).result(timeout=5)
+        stale_phase = dict(router.stats()["routed"])
+        # zero-depth fakes: the stale replica sheds ALL new work while the
+        # fresh one's queue never outgrows the staleness penalty
+        assert stale_phase["r0"] == 30 and stale_phase["r1"] == 0
+        # rolling publish catches r1 up (r0 goes 1 -> 2, r1 0 -> 1... so
+        # publish twice to converge the fakes to equal versions)
+        fleet.publish(np.zeros((2, 2)))
+        reps[0].version = reps[1].version = max(r.version for r in reps)
+        for _ in range(30):
+            router.submit(np.zeros(4, np.float32)).result(timeout=5)
+        final = router.stats()["routed"]
+        # ties now: the seeded tie-break spreads work across BOTH replicas
+        assert final["r1"] > 0
+    fleet.stop()
+
+
+def test_router_reroutes_killed_replicas_in_flight_work():
+    """Kill a replica holding in-flight futures: every request re-routes to
+    the survivor — zero lost, zero failed, rerouted counted."""
+    reps = [FakeReplica(hold=True), FakeReplica()]
+    # depth 0 both, tie-break will spread; make r0 strictly preferred first
+    reps[1].depth = 5
+    fleet = ReplicaSet(reps).start()
+    with Router(fleet, RouterConfig(micro_batch=4, max_wait_s=0.005)) as router:
+        futs = [router.submit(np.full(4, i, np.float32)) for i in range(8)]
+        # wait until r0 actually holds them
+        for _ in range(200):
+            if reps[0].calls >= 8:
+                break
+            time.sleep(0.01)
+        assert reps[0].calls >= 8
+        reps[1].depth = 0
+        fleet.kill("r0")  # fails the held futures -> re-route signal
+        res = [f.result(timeout=10) for f in futs]
+        assert len(res) == 8
+        assert all(np.allclose(nu, 2 * i) for i, (nu, _) in enumerate(res))
+        st = router.stats()
+        assert st["failed"] == 0
+        assert st["rerouted"] >= 8
+        assert st["routed"]["r1"] >= 8
+    fleet.stop()
+
+
+def test_router_fails_cleanly_with_no_live_replicas():
+    rep = FakeReplica(hold=True)
+    fleet = ReplicaSet([rep]).start()
+    router = Router(fleet, RouterConfig(micro_batch=2, max_wait_s=0.005,
+                                        max_retries=1)).start()
+    futs = [router.submit(np.zeros(4, np.float32)) for _ in range(4)]
+    fleet.kill("r0")  # no survivors: retries must exhaust, not hang
+    for f in futs:
+        with pytest.raises(RuntimeError):
+            f.result(timeout=10)
+    st = router.stats()
+    assert st["failed"] == 4 and st["inflight"] == 0
+    router.stop()
+    with pytest.raises(RuntimeError):
+        router.submit(np.zeros(4, np.float32))  # stopped router refuses
+
+
+def test_replica_set_rejects_dupes_and_unknown_names():
+    with pytest.raises(ValueError):
+        ReplicaSet([FakeReplica(), FakeReplica()], names=["a", "a"])
+    fleet = ReplicaSet([FakeReplica()], names=["a"])
+    with pytest.raises(KeyError):
+        fleet["b"]
+    assert isinstance(fleet["a"], Replica)
+
+
+def test_device_pools_are_disjoint_and_sized():
+    pools = device_pools(3, 2, devices=list(range(10)))
+    assert pools == [[0, 1], [2, 3], [4, 5]]
+    with pytest.raises(ValueError):
+        device_pools(3, 4, devices=list(range(10)))
+
+
+# -- per-family fleet lifecycle --------------------------------------------
+# (shape, axis names expr, DistConfig expr, base devices/replica,
+#  pool devices/replica, grow_n, drain_ranks, forced host devices)
+
+_FAMILY_FLEET_LIFECYCLE = {
+    "exact": (
+        "(1, 2)", "(dist.DATA_AXIS, dist.MODEL_AXIS)",
+        'DistConfig(mode="exact", iters=60)', 2, 4, 2, [1, 2], 8),
+    "ring": (
+        "(1, 2)", "(dist.DATA_AXIS, dist.MODEL_AXIS)",
+        'DistConfig(mode="ring", iters=120)', 2, 4, 2, [1, 2], 8),
+    "graph": (
+        "(1, 2)", "(dist.DATA_AXIS, dist.MODEL_AXIS)",
+        'DistConfig(mode="graph", topology="ring_metropolis", iters=120)',
+        2, 4, 2, [1, 2], 8),
+    "tv": (
+        "(1, 2)", "(dist.DATA_AXIS, dist.MODEL_AXIS)",
+        'DistConfig(mode="graph_tv", iters=30, topology_seed=5,\n'
+        '               topology_schedule="alternating:ring_metropolis,full",\n'
+        '               failure_p=0.25, failure_seed=11, failure_steps=6)',
+        2, 4, 2, [1, 2], 8),
+    "push": (
+        "(1, 2)", "(dist.DATA_AXIS, dist.MODEL_AXIS)",
+        'DistConfig(mode="push", topology="distar", iters=120)',
+        2, 4, 2, [1, 2], 8),
+    "chain": (
+        "(2, 1, 2)", "(dist.POD_AXIS, dist.DATA_AXIS, dist.MODEL_AXIS)",
+        'DistConfig(mode="hier", iters=25, topology="ring_metropolis",\n'
+        '               pod_topology="ring_metropolis", pod_gossip_every=2,\n'
+        '               topology_seed=5)', 4, 6, 1, [1], 12),
+}
+
+
+def test_fleet_lifecycle_params_cover_every_registry_family():
+    """Set-equality guard, same pattern as tests/test_service.py: a new
+    MODE_REGISTRY family cannot land without fleet lifecycle coverage."""
+    from repro.core.distributed import MODE_REGISTRY
+
+    families = {caps.family for caps in MODE_REGISTRY.values()}
+    assert set(_FAMILY_FLEET_LIFECYCLE) == families
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("family", sorted(_FAMILY_FLEET_LIFECYCLE))
+def test_fleet_lifecycle_publish_grow_drain_publish(family):
+    """One 2-replica lifecycle per registry family: publish -> grow ->
+    drain -> publish, each replica on its own disjoint device pool, with
+    routed traffic between every phase.  Versions bump monotonically per
+    replica and every sample of every era resolves finite with its era's
+    K."""
+    (shape, names, cfg_expr, base_need, pool_n, grow_n, drain_ranks,
+     n_devices) = _FAMILY_FLEET_LIFECYCLE[family]
+    out = _run(f"""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.conjugates import make_task
+        from repro.core.dictionary import init_dictionary
+        from repro.core.distributed import DistConfig, DistributedSparseCoder
+        from repro.data.synthetic import sparse_stream
+        from repro.runtime import dist
+        from repro.runtime.service import DictionaryService, ServiceConfig
+        from repro.runtime.serving import ReplicaSet, Router, RouterConfig, device_pools
+
+        res, reg = make_task("sparse_svd", gamma=0.25, delta=0.05)
+        cfg = {cfg_expr}
+        pools = device_pools(2, {pool_n})
+        M, K0 = 16, 16
+        W0 = init_dictionary(jax.random.PRNGKey(0), M, K0)
+        X = sparse_stream(64, m=M, k_true=K0, seed=3)
+
+        def versions(fleet):
+            return {{r.name: r.service.load()["snapshot_version"]
+                     for r in fleet.replicas}}
+
+        services = []
+        for pool in pools:
+            mesh = dist.make_mesh({shape}, {names}, devices=pool[:{base_need}])
+            coder = DistributedSparseCoder(mesh, res, reg, cfg)
+            services.append(DictionaryService(
+                coder, W0, ServiceConfig(micro_batch=8, learn=False)))
+        with ReplicaSet(services) as fleet:
+            with Router(fleet, RouterConfig(micro_batch=8)) as router:
+                a = [f.result(timeout=300) for f in router.submit_many(X[:16])]
+                # phase 1: rolling publish of a perturbed dictionary
+                rng = np.random.default_rng(1)
+                W1 = np.asarray(W0) + 0.01 * rng.standard_normal(
+                    W0.shape).astype(np.float32)
+                W1 /= np.maximum(1.0, np.linalg.norm(W1, axis=0, keepdims=True))
+                pub1 = fleet.publish(W1)
+                assert pub1 == {{"r0": 1, "r1": 1}}, pub1
+                b = [f.result(timeout=300) for f in router.submit_many(X[16:32])]
+                # phase 2: grow EVERY replica inside its own (enlarged) pool
+                infos = [r.service.grow({grow_n}, jax.random.PRNGKey(4),
+                                        devices=pools[i]).result(timeout=300)
+                         for i, r in enumerate(fleet.replicas)]
+                assert all(i["k_new"] == infos[0]["k_new"] for i in infos)
+                v2 = versions(fleet)
+                assert v2 == {{"r0": 2, "r1": 2}}, v2
+                c = [f.result(timeout=300) for f in router.submit_many(X[32:48])]
+                # replica meshes stayed DISJOINT through growth
+                used = [set(d.id for d in r.service._coder.mesh.devices.flat)
+                        for r in fleet.replicas]
+                assert not (used[0] & used[1]), used
+                # phase 3: drain the same ranks everywhere
+                dinfos = [r.service.drain({drain_ranks!r}).result(timeout=300)
+                          for r in fleet.replicas]
+                assert all(d["k_new"] == dinfos[0]["k_new"] for d in dinfos)
+                d = [f.result(timeout=300) for f in router.submit_many(X[48:])]
+                # phase 4: publish at the post-drain geometry
+                W2 = fleet.replicas[0].service.dictionary()
+                pub2 = fleet.publish(W2 * 0.5)
+                assert pub2 == {{"r0": 4, "r1": 4}}, pub2
+                stats = router.stats()
+        assert stats["failed"] == 0
+        assert len(a) == len(b) == len(c) == len(d) == 16
+        assert all(np.isfinite(nu).all() and np.isfinite(y).all()
+                   for nu, y in a + b + c + d)
+        assert all(y.shape == (K0,) for _, y in a + b)
+        assert all(y.shape == (infos[0]["k_new"],) for _, y in c)
+        assert all(y.shape == (dinfos[0]["k_new"],) for _, y in d)
+        print("OK")
+    """, n_devices=n_devices)
+    assert "OK" in out
+
+
+# -- real-fleet integration (slow) -----------------------------------------
+
+
+@pytest.mark.slow
+def test_fleet_rolling_publish_and_code_match():
+    """Acceptance drill: a 2-replica fleet on disjoint debug-mesh pools.
+    Rolling publish() completes with zero dropped/blocked requests, and
+    per-sample codes from either replica match the single-service
+    reference to 1e-5 at equal snapshot version."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.conjugates import make_task
+        from repro.core.dictionary import init_dictionary
+        from repro.core.distributed import DistConfig, DistributedSparseCoder
+        from repro.data.synthetic import sparse_stream
+        from repro.runtime import dist
+        from repro.runtime.service import DictionaryService, ServiceConfig
+        from repro.runtime.serving import ReplicaSet, Router, RouterConfig, device_pools
+
+        res, reg = make_task("sparse_svd", gamma=0.25, delta=0.05)
+        M, K = 16, 12
+        W0 = init_dictionary(jax.random.PRNGKey(0), M, K)
+        pools = device_pools(2, 2)
+        cfg = DistConfig(mode="graph", topology="ring_metropolis", iters=40)
+        def make_svc(pool):
+            mesh = dist.make_mesh((1, 2), (dist.DATA_AXIS, dist.MODEL_AXIS),
+                                  devices=pool)
+            coder = DistributedSparseCoder(mesh, res, reg, cfg)
+            return DictionaryService(coder, W0,
+                                     ServiceConfig(micro_batch=8, learn=False))
+
+        X = sparse_stream(64, m=M, k_true=K, seed=3)
+        rng = np.random.default_rng(0)
+        W1 = np.asarray(W0) + 0.01 * rng.standard_normal(W0.shape).astype(np.float32)
+        W1 /= np.maximum(1.0, np.linalg.norm(W1, axis=0, keepdims=True))
+
+        # single-service references at version 0 (W0) and version 1 (W1)
+        ref_mesh = dist.make_mesh((1, 2), (dist.DATA_AXIS, dist.MODEL_AXIS),
+                                  devices=pools[0])
+        ref = DistributedSparseCoder(ref_mesh, res, reg, cfg)
+        ref0 = np.asarray(ref.solve(ref.snapshot(W0),
+                                    jnp.asarray(X[:32], jnp.float32))[0])
+        ref1 = np.asarray(ref.solve(ref.snapshot(W1),
+                                    jnp.asarray(X[32:], jnp.float32))[0])
+
+        fleet = ReplicaSet([make_svc(p) for p in pools])
+        with fleet:
+            with Router(fleet, RouterConfig(micro_batch=8)) as router:
+                futs = router.submit_many(X[:32])
+                pre = [f.result(timeout=300) for f in futs]
+                pub = fleet.publish(W1)  # rolling: fleet never pauses
+                assert pub == {"r0": 1, "r1": 1}, pub
+                futs2 = router.submit_many(X[32:])
+                post = [f.result(timeout=300) for f in futs2]
+                rstats = router.stats()
+        fstats = fleet.stats()
+
+        assert rstats["failed"] == 0 and rstats["rerouted"] == 0
+        assert sum(rstats["routed"].values()) == 64  # zero dropped/blocked
+        # codes from EITHER replica match the reference at equal version
+        err0 = max(float(np.abs(np.asarray(nu) - ref0[i]).max())
+                   for i, (nu, _) in enumerate(pre))
+        err1 = max(float(np.abs(np.asarray(nu) - ref1[i]).max())
+                   for i, (nu, _) in enumerate(post))
+        assert err0 < 1e-5 and err1 < 1e-5, (err0, err1)
+        for name, st in fstats["replicas"].items():
+            assert st["snapshot_version"] == 1, (name, st["snapshot_version"])
+        print("OK", err0, err1)
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_replica_kill_soak():
+    """Chaos drill (own CI step, like the churn soak): stream through a
+    2-replica fleet, kill one replica mid-stream with work in flight.
+    Zero lost futures (the tail re-routes to the survivor), fleet p99 is
+    recorded, and stats() versions stay monotone per replica throughout."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp, threading, time
+        from repro.core.conjugates import make_task
+        from repro.core.dictionary import init_dictionary
+        from repro.core.distributed import DistConfig, DistributedSparseCoder
+        from repro.data.synthetic import sparse_stream
+        from repro.runtime import dist
+        from repro.runtime.service import DictionaryService, ServiceConfig
+        from repro.runtime.serving import ReplicaSet, Router, RouterConfig, device_pools
+
+        res, reg = make_task("sparse_svd", gamma=0.25, delta=0.05)
+        M, K = 16, 12
+        W0 = init_dictionary(jax.random.PRNGKey(0), M, K)
+        pools = device_pools(2, 2)
+        cfg = DistConfig(mode="graph", topology="ring_metropolis", iters=40)
+        services = []
+        for pool in pools:
+            mesh = dist.make_mesh((1, 2), (dist.DATA_AXIS, dist.MODEL_AXIS),
+                                  devices=pool)
+            coder = DistributedSparseCoder(mesh, res, reg, cfg)
+            services.append(DictionaryService(
+                coder, W0, ServiceConfig(micro_batch=8, learn=False)))
+
+        N = 240
+        X = sparse_stream(N, m=M, k_true=K, seed=3)
+        version_trace = {"r0": [], "r1": []}
+        stop_poll = threading.Event()
+        fleet = ReplicaSet(services)
+
+        def poll():
+            # monotonicity watch: sample per-replica stats() versions the
+            # whole run (the killed replica's trace just stops growing)
+            while not stop_poll.is_set():
+                for rep in fleet.replicas:
+                    st = rep.service.stats()
+                    version_trace[rep.name].append(
+                        (st["snapshot_version"], st["serving_version"]))
+                time.sleep(0.002)
+
+        with fleet:
+            with Router(fleet, RouterConfig(micro_batch=8,
+                                            max_wait_s=0.005)) as router:
+                t = threading.Thread(target=poll, daemon=True)
+                t.start()
+                futs = []
+                killed = False
+                for i in range(N):
+                    if i == N // 2 and not killed:
+                        # mid-stream kill, with the stream still flowing
+                        # and futures in flight on both replicas
+                        fleet.kill("r0")
+                        killed = True
+                    futs.append(router.submit(X[i]))
+                # one rolling publish AFTER the kill: only the survivor
+                # is reached, and that is not an error
+                W1 = np.asarray(W0) * 0.9
+                pub = fleet.publish(W1)
+                assert list(pub) == ["r1"], pub
+                res_all = [f.result(timeout=300) for f in futs]
+                rstats = router.stats()
+            stop_poll.set(); t.join()
+        fstats = fleet.stats()
+
+        # zero lost futures: every sample resolved with a finite code
+        assert len(res_all) == N
+        assert all(np.isfinite(nu).all() for nu, _ in res_all)
+        assert rstats["failed"] == 0
+        # the kill actually moved work: the survivor absorbed the stream
+        assert rstats["routed"]["r1"] > N // 2
+        # fleet p99 recorded
+        assert rstats["latency_ms"]["p99"] > 0.0
+        # versions monotone per replica, and the survivor took the publish
+        for name, trace in version_trace.items():
+            snaps = [s for s, _ in trace]
+            servs = [v for _, v in trace]
+            assert snaps == sorted(snaps), name
+            assert servs == sorted(servs), name
+        assert fstats["replicas"]["r1"]["snapshot_version"] == 1
+        assert fstats["alive"] == []  # everything shut down at exit
+        print("OK rerouted=", rstats["rerouted"])
+    """)
+    assert "OK" in out

@@ -99,20 +99,34 @@ def _iter_with_lock(
     lock held."""
     for child in ast.iter_child_nodes(node):
         if isinstance(child, ast.With):
-            inner = under or _with_holds(child, lock_attr)
-            # context expressions evaluate before the lock is acquired
-            for item in child.items:
-                yield item.context_expr, under
-                yield from _iter_with_lock(item.context_expr, lock_attr, under)
-            for stmt in child.body:
-                yield stmt, inner
-                yield from _iter_with_lock(stmt, lock_attr, inner)
+            yield from _iter_with_stmt(child, lock_attr, under)
         elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
             yield child, False
             yield from _iter_with_lock(child, lock_attr, False)
         else:
             yield child, under
             yield from _iter_with_lock(child, lock_attr, under)
+
+
+def _iter_with_stmt(
+    child: ast.With, lock_attr: str, under: bool
+) -> Iterator[Tuple[ast.AST, bool]]:
+    """Yield a `with` statement's parts: context expressions evaluate
+    BEFORE the lock is acquired (so they keep the caller's guard state);
+    body statements are guarded when this with (or an enclosing one)
+    holds the lock.  A body statement that is itself a `with` re-enters
+    here, so `with self._other: with self._lock: ...` guards correctly
+    (ast.iter_child_nodes alone would flatten the nesting and lose it)."""
+    inner = under or _with_holds(child, lock_attr)
+    for item in child.items:
+        yield item.context_expr, under
+        yield from _iter_with_lock(item.context_expr, lock_attr, under)
+    for stmt in child.body:
+        yield stmt, inner
+        if isinstance(stmt, ast.With):
+            yield from _iter_with_stmt(stmt, lock_attr, inner)
+        else:
+            yield from _iter_with_lock(stmt, lock_attr, inner)
 
 
 def _self_attr(node: ast.expr) -> Optional[str]:
